@@ -1,0 +1,88 @@
+"""Shared benchmark context: a small transformer *trained from scratch* on the
+error-amplifying synthetic reasoning tasks (DESIGN.md §6), cached under
+experiments/artifacts so every table reuses the same model.
+
+All paper-table benchmarks run against this trained model — randomly
+initialized nets have flat attention and cannot exhibit the sensitivity
+structure the paper measures (verified in tests/test_kvtuner.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.data import synthetic
+from repro.data.pipeline import SyntheticSource
+from repro.models.registry import ModelApi, build_model
+from repro.training.optimizer import AdamW, cosine_schedule
+from repro.training.trainer import Trainer, TrainState
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "artifacts", "bench_model")
+TRAIN_STEPS = 700
+
+
+def bench_config() -> ModelConfig:
+    return ModelConfig(
+        name="bench-lm", family="dense", num_layers=6, d_model=128,
+        num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=64, q_chunk=64)
+
+
+def bench_task() -> synthetic.TaskConfig:
+    return synthetic.TaskConfig(vocab_size=64, chain_len=8, seq_len=64)
+
+
+@dataclasses.dataclass
+class BenchContext:
+    api: ModelApi
+    params: dict
+    task: synthetic.TaskConfig
+
+    def calib_batches(self, n: int = 2, batch: int = 8, seed: int = 1000):
+        """Small capture-friendly calibration prompts (paper: first 20)."""
+        rng = np.random.default_rng(seed)
+        return [{k: jnp.asarray(v) for k, v in
+                 synthetic.mixed_batch(self.task, batch, rng).items()}
+                for _ in range(n)]
+
+    def eval_batches(self, n: int = 3, batch: int = 64, seed: int = 7000,
+                     kind: str = "chain"):
+        rng = np.random.default_rng(seed)
+        fn = {"chain": synthetic.chain_batch,
+              "recall": synthetic.recall_batch,
+              "mixed": synthetic.mixed_batch}[kind]
+        return [{k: jnp.asarray(v) for k, v in
+                 fn(self.task, batch, rng).items()} for _ in range(n)]
+
+
+def get_bench_model(train_steps: int = TRAIN_STEPS,
+                    log=lambda *a: None) -> BenchContext:
+    cfg = bench_config()
+    api = build_model(cfg)
+    task = bench_task()
+    ckpt = CheckpointManager(ART_DIR, keep=1)
+    opt = AdamW(lr=cosine_schedule(1e-3, 50, train_steps))
+    src = SyntheticSource(task=task, batch_size=32, kind="mixed", seed=0)
+    trainer = Trainer(api=api, optimizer=opt, source=src, ckpt=ckpt,
+                      ckpt_every=200, log_every=100, log_fn=log)
+    abstract = jax.eval_shape(trainer.init_state, jax.random.PRNGKey(0))
+    latest = ckpt.latest_step()
+    if latest is not None and latest >= train_steps:
+        _, state, _ = ckpt.restore_latest(abstract)
+        log(f"[bench] loaded trained model from step {latest}")
+        return BenchContext(api=api, params=state.params, task=task)
+    t0 = time.time()
+    state, _ = trainer.run(train_steps)
+    log(f"[bench] trained {train_steps} steps in {time.time() - t0:.0f}s")
+    return BenchContext(api=api, params=state.params, task=task)
+
+
+def ppl_from_nll(nll: float) -> float:
+    return float(np.exp(min(nll, 30.0)))

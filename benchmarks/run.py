@@ -1,0 +1,90 @@
+"""Benchmark harness — one module per paper table. Prints
+``name,us_per_call,derived`` CSV rows plus per-table claim checks; full
+structured results land in experiments/artifacts/bench_results.json.
+
+Run: PYTHONPATH=src python -m benchmarks.run [--fast] [--tables t2,t5,...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                            "artifacts", "bench_results.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced search budgets")
+    ap.add_argument("--tables", default="all")
+    args = ap.parse_args()
+
+    from benchmarks import (common, kernels_micro, table2_ppl,
+                            table3_output_error, table4_pruning,
+                            table5_accuracy, table8_throughput,
+                            table9_error, table10_clustering)
+
+    print("# KVTuner reproduction benchmarks (paper tables)", flush=True)
+    ctx = common.get_bench_model(log=lambda *a: print(*a, flush=True))
+
+    tables = {
+        "t9_error": lambda: table9_error.run(ctx),
+        "t3_output_error": lambda: table3_output_error.run(ctx),
+        "t2_ppl": lambda: table2_ppl.run(ctx),
+        "t4_pruning": lambda: table4_pruning.run(ctx),
+        "t10_clustering": lambda: table10_clustering.run(ctx),
+        "t5_accuracy": lambda: table5_accuracy.run(
+            ctx, generations=3 if args.fast else 6,
+            pop=8 if args.fast else 16),
+        "t8_throughput": lambda: table8_throughput.run(
+            ctx, n_prompts=4 if args.fast else 8),
+        "kernels_micro": lambda: kernels_micro.run(ctx),
+    }
+    checkers = {
+        "t9_error": table9_error.check_paper_claims,
+        "t3_output_error": table3_output_error.check_paper_claims,
+        "t2_ppl": table2_ppl.check_paper_claims,
+        "t4_pruning": table4_pruning.check_paper_claims,
+        "t10_clustering": table10_clustering.check_paper_claims,
+        "t5_accuracy": table5_accuracy.check_paper_claims,
+        "t8_throughput": table8_throughput.check_paper_claims,
+        "kernels_micro": kernels_micro.check_paper_claims,
+    }
+    wanted = set(tables) if args.tables == "all" else \
+        set(args.tables.split(","))
+
+    all_results: dict = {}
+    all_claims: dict = {}
+    print("name,us_per_call,derived")
+    for name, fn in tables.items():
+        if name not in wanted:
+            continue
+        t0 = time.time()
+        result = fn()
+        us = (time.time() - t0) * 1e6
+        all_results[name] = result
+        claims = checkers[name](result) if name in checkers else {}
+        all_claims[name] = claims
+        ok = sum(claims.values())
+        print(f"{name},{us:.0f},claims_pass={ok}/{len(claims)}", flush=True)
+        for claim, passed in claims.items():
+            print(f"#   [{'PASS' if passed else 'FAIL'}] {claim}", flush=True)
+
+    os.makedirs(os.path.dirname(RESULTS_PATH), exist_ok=True)
+    with open(RESULTS_PATH, "w") as f:
+        json.dump({"results": all_results, "claims": all_claims}, f, indent=2,
+                  default=str)
+    total = sum(len(c) for c in all_claims.values())
+    passed = sum(sum(c.values()) for c in all_claims.values())
+    print(f"# paper-claim checks: {passed}/{total} pass "
+          f"(details: {os.path.normpath(RESULTS_PATH)})", flush=True)
+
+
+if __name__ == "__main__":
+    main()

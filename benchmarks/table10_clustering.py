@@ -1,0 +1,38 @@
+"""Paper Table 10 + §D.1.2: inter-layer clustering — search-space reduction
+from 9^L through Π|S_p| (pruning) to Π over clustered groups."""
+from __future__ import annotations
+
+from repro.core import sensitivity
+from repro.core.clustering import cluster_layers
+from repro.core.precision import MODE_KIVI, MODE_PER_TOKEN
+from repro.core.pruning import prune_intra_layer
+
+
+def run(ctx) -> dict:
+    caps = sensitivity.capture_activations(ctx.api, ctx.params,
+                                           ctx.calib_batches())
+    out = {}
+    for mode in (MODE_PER_TOKEN, MODE_KIVI):
+        errs = sensitivity.layer_errors(caps, ctx.api.cfg, mode)
+        pruned = prune_intra_layer(errs)
+        groups = cluster_layers(pruned, eps=0.25)
+        out[mode] = {
+            "L": pruned.num_layers,
+            "G": groups.num_groups,
+            "groups": groups.groups,
+            "space_full": float(9) ** pruned.num_layers,
+            "space_pruned": pruned.space_size(),
+            "space_grouped": groups.search_space_size(),
+        }
+    return out
+
+
+def check_paper_claims(result: dict) -> dict[str, bool]:
+    r = result[MODE_PER_TOKEN]
+    return {
+        "G <= L": r["G"] <= r["L"],
+        "grouping covers all layers": sorted(
+            l for g in r["groups"] for l in g) == list(range(r["L"])),
+        "space monotone: grouped <= pruned <= full":
+            r["space_grouped"] <= r["space_pruned"] <= r["space_full"],
+    }

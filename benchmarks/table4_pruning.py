@@ -1,0 +1,44 @@
+"""Paper Table 4 + §D.1.1: intra-layer Pareto-pruned precision-pair sets per
+layer, per quant mode — including the "key-first set" structure check."""
+from __future__ import annotations
+
+from repro.core import sensitivity
+from repro.core.precision import (KEY_FIRST_SET, MODE_KIVI, MODE_PER_TOKEN)
+from repro.core.pruning import prune_intra_layer
+
+
+def run(ctx) -> dict:
+    caps = sensitivity.capture_activations(ctx.api, ctx.params,
+                                           ctx.calib_batches())
+    out = {}
+    for mode in (MODE_PER_TOKEN, MODE_KIVI):
+        errs = sensitivity.layer_errors(caps, ctx.api.cfg, mode)
+        pruned = prune_intra_layer(errs)
+        per_layer = []
+        for l in range(pruned.num_layers):
+            per_layer.append([p.name for p in pruned.layer_candidates(l)])
+        out[mode] = {
+            "per_layer_sets": per_layer,
+            "space_full": float(len(errs.pairs)) ** pruned.num_layers,
+            "space_pruned": pruned.space_size(),
+        }
+    return out
+
+
+def check_paper_claims(result: dict) -> dict[str, bool]:
+    key_first = {p.name for p in KEY_FIRST_SET}
+    tok_sets = result[MODE_PER_TOKEN]["per_layer_sets"]
+    # In the paper most per-token layers keep exactly the key-first Pareto set;
+    # at our scale we check the structural versions of that claim.
+    contains_kv8 = all("KV8" in s for s in tok_sets)
+    contains_kv2 = all("KV2" in s for s in tok_sets)
+    reduced = result[MODE_PER_TOKEN]["space_pruned"] < \
+        result[MODE_PER_TOKEN]["space_full"]
+    keyfirst_overlap = sum(
+        len(key_first & set(s)) >= 3 for s in tok_sets) / len(tok_sets)
+    return {
+        "every layer keeps KV8 (frontier top)": contains_kv8,
+        "every layer keeps KV2 (frontier bottom)": contains_kv2,
+        "search space strictly reduced": bool(reduced),
+        "key-first set majority overlap": keyfirst_overlap >= 0.5,
+    }

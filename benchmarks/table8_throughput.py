@@ -1,0 +1,92 @@
+"""Paper Table 8: decode throughput vs KV cache precision.
+
+Two views (the container has no TPU):
+1. **Measured (CPU, relative)**: end-to-end ServeEngine tokens/s with the
+   packed deployment cache at KV16 / KV8 / KV4 / KVTuner-mixed — includes
+   quant/dequant overhead, as the paper specifies.
+2. **Projected (TPU v5e, roofline)**: decode attention is HBM-bound; step
+   time ∝ KV bytes moved. We report per-token cache bytes per schedule and
+   the implied throughput gain over KIVI-KV8 — the paper's +21.25% claim is
+   a bytes-ratio effect (8-bit → 3.25-bit ≈ 2.1× fewer cache bytes at the
+   attention-read fraction of step time).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.precision import KVTunerSchedule, PrecisionPair
+from repro.launch.steps import default_schedule
+from repro.serving.engine import generate
+
+
+def cache_bytes_per_token(cfg, schedule: KVTunerSchedule | None) -> float:
+    """Packed KV cache bytes per token per sequence (scales incl.)."""
+    hd = cfg.head_dim
+    hkv = cfg.num_kv_heads
+    g = cfg.kv_group_size
+    total = 0.0
+    n_attn = len(cfg.attention_layers())
+    for i in range(n_attn):
+        pair = schedule[i] if schedule is not None else PrecisionPair(16, 16)
+        for bits in (pair.k_bits, pair.v_bits):
+            if bits >= 16:
+                total += hkv * hd * 2
+            else:
+                total += hkv * hd * bits / 8 + hkv * (hd / g) * 8
+    return total
+
+
+def projected_gain(cfg, schedule, baseline_sched, attn_fraction=0.45) -> float:
+    """Amdahl-style projection: decode step = attn-read (∝ cache bytes) +
+    weight-read (constant). attn_fraction = attention share of the baseline
+    step at 32k context (from the §Roofline decode analysis)."""
+    b0 = cache_bytes_per_token(cfg, baseline_sched)
+    b1 = cache_bytes_per_token(cfg, schedule)
+    t_rel = (1 - attn_fraction) + attn_fraction * (b1 / b0)
+    return 1.0 / t_rel
+
+
+def run(ctx, n_prompts: int = 8, prompt_len: int = 48,
+        max_new: int = 16) -> dict:
+    cfg = ctx.api.cfg
+    n_attn = len(cfg.attention_layers())
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, size=(n_prompts, prompt_len))
+
+    schedules = {
+        "KV16": KVTunerSchedule.uniform(n_attn, PrecisionPair(16, 16)),
+        "KV8": KVTunerSchedule.uniform(n_attn, PrecisionPair(8, 8)),
+        "KV4": KVTunerSchedule.uniform(n_attn, PrecisionPair(4, 4)),
+        "K4V2": KVTunerSchedule.uniform(n_attn, PrecisionPair(4, 2)),
+        "KVTuner-mixed": default_schedule(cfg, "kvtuner"),
+    }
+    rows = []
+    for name, sched in schedules.items():
+        # measured twice; second run reuses compiled steps (steady-state)
+        _, _ = generate(ctx.api, ctx.params, sched, prompts[:2], 4)
+        out, stats = generate(ctx.api, ctx.params, sched, prompts, max_new)
+        rows.append({
+            "schedule": name,
+            "equiv_bits": sched.equivalent_bits,
+            "tokens_per_s_cpu": stats.throughput,
+            "cache_bytes_per_token": cache_bytes_per_token(cfg, sched),
+            "projected_gain_vs_kv8": projected_gain(
+                cfg, sched, schedules["KV8"]),
+        })
+    return {"rows": rows}
+
+
+def check_paper_claims(result: dict) -> dict[str, bool]:
+    rows = {r["schedule"]: r for r in result["rows"]}
+    mixed = rows["KVTuner-mixed"]
+    return {
+        "cache bytes shrink with bits": rows["KV4"]["cache_bytes_per_token"]
+        < rows["KV8"]["cache_bytes_per_token"]
+        < rows["KV16"]["cache_bytes_per_token"],
+        # paper: KVTuner-C3.25 +16.8%~21.3% over KIVI-KV8 — our projected
+        # gain for the ~3.1-bit mixed schedule must land in that band
+        "projected gain vs KV8 in paper band (1.10-1.35)":
+            1.10 <= mixed["projected_gain_vs_kv8"] <= 1.35,
+        "mixed schedule smaller than KV8 cache":
+            mixed["cache_bytes_per_token"] < rows["KV8"]["cache_bytes_per_token"],
+    }

@@ -1,0 +1,62 @@
+"""Offline calibration pipeline on the trained benchmark model: sensitivity
+capture → intra-layer pruning → inter-layer clustering → NSGA-II search →
+exported schedule JSON (what production serving loads, paper Fig. 1).
+
+Run: PYTHONPATH=src python examples/calibrate_search.py [--mode kivi]
+"""
+import argparse
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import get_bench_model
+from repro.core.precision import MODE_KIVI, MODE_PER_TOKEN
+from repro.core.tuner import KVTuner
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                   "artifacts", "schedules")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default=MODE_PER_TOKEN,
+                    choices=[MODE_PER_TOKEN, MODE_KIVI])
+    ap.add_argument("--generations", type=int, default=6)
+    args = ap.parse_args()
+
+    ctx = get_bench_model(log=print)
+    tuner = KVTuner(ctx.api, ctx.params, mode=args.mode)
+
+    print("== sensitivity / pruning / clustering ==")
+    errors, pruned, groups = tuner.analyze(ctx.calib_batches())
+    names = [p.name for p in errors.pairs]
+    print("layer-avg e_o per pair:")
+    for i, n in enumerate(names):
+        print(f"  {n:6s} {errors.e_o[:, i].mean():.4f}")
+    for l in range(pruned.num_layers):
+        print(f"  layer {l}: Pareto set "
+              f"{[p.name for p in pruned.layer_candidates(l)]} "
+              f"| e_o(KV4)={errors.e_o[l, names.index('KV4')]:.4f}")
+    print(f"clustered groups: {groups.groups}")
+
+    print("== NSGA-II search ==")
+    report = tuner.search(ctx.calib_batches(),
+                          eval_batches=ctx.eval_batches(n=1, batch=32),
+                          generations=args.generations, pop_size=16)
+    os.makedirs(OUT, exist_ok=True)
+    for sched in report.frontier:
+        path = os.path.join(OUT, f"{ctx.api.cfg.name}_{args.mode}_"
+                                 f"C{sched.equivalent_bits:.2f}.json")
+        sched.save(path)
+        print(f"  {sched.name}: bits={sched.equivalent_bits:.2f} "
+              f"loss={sched.objectives['loss']:.4f} -> {os.path.normpath(path)}")
+    print(f"MOO evaluations: {report.moo.evaluations} "
+          f"(search space after pruning+clustering: "
+          f"{report.groups.search_space_size():.0f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""End-to-end training driver: a ~100M-param llama-family model trained for a
+few hundred steps with the full production substrate — fault-tolerant trainer,
+async sharded checkpointing + resume, int8 error-feedback gradient
+compression, stateless-resumable data pipeline.
+
+By default runs a scaled config sized for this CPU container; pass --full for
+the true ~100M model (slower). Kill and re-run: it resumes from the last
+committed checkpoint.
+
+Run: PYTHONPATH=src python examples/train_100m.py [--steps 300] [--full]
+"""
+import argparse
+import os
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import SyntheticSource
+from repro.data.synthetic import TaskConfig
+from repro.models.registry import build_model
+from repro.training.optimizer import AdamW, cosine_schedule
+from repro.training.trainer import Trainer
+
+CKPT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "artifacts", "train_100m")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--full", action="store_true",
+                    help="true ~100M params (CPU: slow)")
+    ap.add_argument("--compress-grads", action="store_true", default=True)
+    args = ap.parse_args()
+
+    if args.full:  # ~100M params
+        cfg = ModelConfig(name="lm-100m", family="dense", num_layers=12,
+                          d_model=768, num_heads=12, num_kv_heads=4,
+                          d_ff=2048, vocab_size=32000, q_chunk=128)
+        batch, seq = 8, 256
+    else:          # same family, CPU-friendly (~8M params)
+        cfg = ModelConfig(name="lm-8m", family="dense", num_layers=6,
+                          d_model=256, num_heads=8, num_kv_heads=2,
+                          d_ff=512, vocab_size=2048, q_chunk=64)
+        batch, seq = 16, 128
+
+    api = build_model(cfg)
+    n = cfg.param_count()
+    print(f"model {cfg.name}: {n/1e6:.1f}M params")
+
+    task = TaskConfig(vocab_size=cfg.vocab_size, chain_len=10, seq_len=seq)
+    trainer = Trainer(
+        api=api,
+        optimizer=AdamW(lr=cosine_schedule(6e-4, 50, args.steps),
+                        weight_decay=0.01, grad_clip=1.0),
+        source=SyntheticSource(task=task, batch_size=batch, kind="mixed"),
+        ckpt=CheckpointManager(CKPT_DIR, keep=2),
+        ckpt_every=100,
+        compress_grads=args.compress_grads,
+        log_every=25,
+    )
+    state, history = trainer.run(args.steps)
+    print(f"final loss: {history[-1]['loss']:.4f} "
+          f"({history[-1]['steps_per_s']:.2f} steps/s)")
+    print(f"checkpoints in {os.path.normpath(CKPT_DIR)} — "
+          f"re-run to resume, delete to restart")
+
+
+if __name__ == "__main__":
+    main()

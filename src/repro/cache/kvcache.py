@@ -1,0 +1,322 @@
+"""Quantized KV cache with KIVI-style layout (paper §2, §C).
+
+Per attention layer the cache is:
+
+* a **packed quantized main segment** of capacity ``S_cap`` tokens (uint8 codes
+  packed along head_dim + per-group f32 scale/zero). Tokens enter the main
+  segment only in full groups of ``R = residual_len`` (= quant group size along
+  the token axis, so each flushed block is exactly one per-channel group);
+* a **bf16 residual window** of the most recent ``< R`` tokens (KIVI keeps
+  recent tokens full-precision; paper uses R = 32);
+* a scalar ``length`` (total tokens).
+
+Precision is **static per layer** — the KVTuner property that keeps the decode
+graph free of dynamic control flow. ``k_bits/v_bits == 16`` stores that side
+unquantized (raw dtype) with the same append mechanics.
+
+Shapes: K/V are ``[B, Hkv, S, D]``. The main segment is sized
+``S_cap = ceil(seq/R)*R + extra_groups*R`` so decode can append beyond the
+prefill length with a static shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import (MODE_KIVI, MODE_PER_CHANNEL, MODE_PER_TOKEN,
+                                  PrecisionPair)
+from repro.core import quant
+
+
+def _kv_modes(mode: str) -> tuple[str, str]:
+    if mode == MODE_KIVI:
+        return MODE_PER_CHANNEL, MODE_PER_TOKEN
+    return mode, mode
+
+
+def _code_dim(d: int, bits: int) -> int:
+    return d if bits >= 16 else d * bits // 8
+
+
+def _scale_shape(b, h, n_groups_s, d, mode, group_size, bits):
+    """Grouped scale/zero shape per repro.core.quant._group_reshape convention."""
+    if bits >= 16:
+        return (1,)
+    if mode == MODE_PER_CHANNEL:  # groups along S
+        return (b, h, n_groups_s, 1, d)
+    return (b, h, n_groups_s * group_size, d // min(group_size, d), 1)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LayerKVCache:
+    """One attention layer's quantized cache. A registered pytree; static
+    fields (bits/mode/sizes) are aux data so jit treats them as compile-time."""
+
+    k_codes: jax.Array
+    k_scale: jax.Array
+    k_zero: jax.Array
+    v_codes: jax.Array
+    v_scale: jax.Array
+    v_zero: jax.Array
+    k_res: jax.Array  # [B, Hkv, R, D] working dtype
+    v_res: jax.Array
+    length: jax.Array  # i32 scalar: total tokens in cache
+
+    k_bits: int = dataclasses.field(metadata=dict(static=True))
+    v_bits: int = dataclasses.field(metadata=dict(static=True))
+    mode: str = dataclasses.field(metadata=dict(static=True))
+    group_size: int = dataclasses.field(metadata=dict(static=True))
+    s_cap: int = dataclasses.field(metadata=dict(static=True))
+    window: int = dataclasses.field(metadata=dict(static=True))  # 0 = unbounded
+
+    # ------------------------------------------------------------- create
+    @classmethod
+    def init(cls, batch: int, kv_heads: int, head_dim: int, capacity: int,
+             pair: PrecisionPair, mode: str = MODE_PER_TOKEN, group_size: int = 32,
+             dtype=jnp.bfloat16, window: int = 0) -> "LayerKVCache":
+        r = group_size
+        if window:
+            capacity = min(capacity, window)
+        s_cap = -(-capacity // r) * r
+        if s_cap >= 16 * r:
+            # round the group count to a multiple of 16 so scale/zero tensors
+            # (whose dim is n_groups) stay shardable on a 16-wide mesh axis
+            s_cap = -(-s_cap // (16 * r)) * (16 * r)
+        ng = s_cap // r
+        k_mode, v_mode = _kv_modes(mode)
+        b, h, d = batch, kv_heads, head_dim
+
+        def seg(bits, m):
+            if bits >= 16:
+                codes = jnp.zeros((b, h, s_cap, d), dtype)
+                sc = jnp.zeros((1,), jnp.float32)
+                return codes, sc, sc
+            codes = jnp.zeros((b, h, s_cap, _code_dim(d, bits)), jnp.uint8)
+            sshape = _scale_shape(b, h, ng, d, m, r, bits)
+            return codes, jnp.ones(sshape, jnp.float32), jnp.zeros(sshape, jnp.float32)
+
+        kc, ks, kz = seg(pair.k_bits, k_mode)
+        vc, vs, vz = seg(pair.v_bits, v_mode)
+        return cls(
+            k_codes=kc, k_scale=ks, k_zero=kz, v_codes=vc, v_scale=vs, v_zero=vz,
+            k_res=jnp.zeros((b, h, r, d), dtype), v_res=jnp.zeros((b, h, r, d), dtype),
+            length=jnp.zeros((), jnp.int32), k_bits=pair.k_bits, v_bits=pair.v_bits,
+            mode=mode, group_size=r, s_cap=s_cap, window=window)
+
+    # ------------------------------------------------------------ helpers
+    @property
+    def residual_len(self) -> int:
+        return self.k_res.shape[2]
+
+    @property
+    def head_dim(self) -> int:
+        return self.k_res.shape[3]
+
+    def _quant_block(self, block: jax.Array, bits: int, m: str):
+        """Quantize one [B,H,R,D] token block → (codes, scale, zero) with the
+        same grouped-scale convention used at init."""
+        qt = quant.quantize(block, bits, m, self.group_size)
+        return qt.codes, qt.scale, qt.zero
+
+    # ------------------------------------------------------------- prefill
+    def fill(self, k: jax.Array, v: jax.Array) -> "LayerKVCache":
+        """Bulk-insert S tokens (prefill). Any non-group-aligned remainder goes
+        to the residual window. Windowed (local-attention) caches keep only the
+        trailing tokens, placed at their ring slots (absolute group index mod
+        n_groups) so ``token_positions`` stays consistent during decode."""
+        b, h, s, d = k.shape
+        r = self.group_size
+        roll_groups = 0
+        s_orig = s
+        if self.window and s > self.s_cap:
+            start = s - self.s_cap  # group-aligned when s, s_cap are multiples of r
+            start = start // r * r
+            k, v = k[:, :, start:], v[:, :, start:]
+            s = k.shape[2]
+            roll_groups = (start // r) % (self.s_cap // r)
+        n_full = s // r * r
+        out = self
+        if n_full:
+            out = out._fill_main(k[:, :, :n_full], v[:, :, :n_full],
+                                 roll_groups=roll_groups)
+        rem = s - n_full
+        if rem:
+            k_res = out.k_res.at[:, :, :rem].set(k[:, :, n_full:])
+            v_res = out.v_res.at[:, :, :rem].set(v[:, :, n_full:])
+            out = dataclasses.replace(out, k_res=k_res, v_res=v_res)
+        return dataclasses.replace(out, length=jnp.asarray(s_orig, jnp.int32))
+
+    def _fill_main(self, k, v, roll_groups: int = 0) -> "LayerKVCache":
+        s = k.shape[2]
+        ng = s // self.group_size
+        k_mode, v_mode = _kv_modes(self.mode)
+        r = self.group_size
+
+        def place(buf, block, per_group: bool):
+            """Write `block` into slots, ring-rolled by roll_groups groups."""
+            if not roll_groups:
+                n = block.shape[2]
+                return buf.at[:, :, :n].set(block)
+            shift = roll_groups * (1 if per_group else r)
+            n_slots = buf.shape[2]
+            rolled = jnp.roll(
+                jnp.concatenate(
+                    [block, buf[:, :, block.shape[2]:]], axis=2)[:, :, :n_slots],
+                shift, axis=2)
+            return rolled
+
+        def seg(codes, scale, zero, x, bits, m):
+            if bits >= 16:
+                return place(codes, x, per_group=False), scale, zero
+            c, sc, z = self._quant_block(x, bits, m)
+            codes = place(codes, c, per_group=False)
+            if m == MODE_PER_CHANNEL:
+                scale = place(scale, sc, per_group=True)
+                zero = place(zero, z, per_group=True)
+            else:
+                scale = place(scale, sc, per_group=False)
+                zero = place(zero, z, per_group=False)
+            return codes, scale, zero
+
+        kc, ks, kz = seg(self.k_codes, self.k_scale, self.k_zero, k, self.k_bits, k_mode)
+        vc, vs, vz = seg(self.v_codes, self.v_scale, self.v_zero, v, self.v_bits, v_mode)
+        return dataclasses.replace(self, k_codes=kc, k_scale=ks, k_zero=kz,
+                                   v_codes=vc, v_scale=vs, v_zero=vz)
+
+    # -------------------------------------------------------------- append
+    def append(self, k_new: jax.Array, v_new: jax.Array) -> "LayerKVCache":
+        """Append one token [B,H,1,D]; flush the residual window to the main
+        segment when it fills (static-shape lax.cond)."""
+        r = self.group_size
+        slot = jnp.mod(self.length, r)
+        k_res = jax.lax.dynamic_update_slice_in_dim(self.k_res, k_new, slot, axis=2)
+        v_res = jax.lax.dynamic_update_slice_in_dim(self.v_res, v_new, slot, axis=2)
+        new_len = self.length + 1
+        cache = dataclasses.replace(self, k_res=k_res, v_res=v_res, length=new_len)
+
+        def flush(c: "LayerKVCache") -> "LayerKVCache":
+            g = jnp.mod((new_len // r) - 1, c.s_cap // r)  # ring over groups if windowed
+            if not c.window:
+                g = (new_len // r) - 1
+            return c._flush_group(g)
+
+        return jax.lax.cond(jnp.mod(new_len, r) == 0, flush, lambda c: c, cache)
+
+    def _flush_group(self, g: jax.Array) -> "LayerKVCache":
+        r = self.group_size
+        k_mode, v_mode = _kv_modes(self.mode)
+
+        def seg(codes, scale, zero, res, bits, m):
+            if bits >= 16:
+                return jax.lax.dynamic_update_slice_in_dim(codes, res, g * r, axis=2), scale, zero
+            c, sc, z = self._quant_block(res, bits, m)
+            codes = jax.lax.dynamic_update_slice_in_dim(codes, c, g * r, axis=2)
+            if m == MODE_PER_CHANNEL:
+                scale = jax.lax.dynamic_update_slice_in_dim(scale, sc, g, axis=2)
+                zero = jax.lax.dynamic_update_slice_in_dim(zero, z, g, axis=2)
+            else:
+                scale = jax.lax.dynamic_update_slice_in_dim(scale, sc, g * r, axis=2)
+                zero = jax.lax.dynamic_update_slice_in_dim(zero, z, g * r, axis=2)
+            return codes, scale, zero
+
+        kc, ks, kz = seg(self.k_codes, self.k_scale, self.k_zero, self.k_res,
+                         self.k_bits, k_mode)
+        vc, vs, vz = seg(self.v_codes, self.v_scale, self.v_zero, self.v_res,
+                         self.v_bits, v_mode)
+        return dataclasses.replace(self, k_codes=kc, k_scale=ks, k_zero=kz,
+                                   v_codes=vc, v_scale=vs, v_zero=vz)
+
+    # ------------------------------------------------------------- dequant
+    def _deq(self, codes, scale, zero, bits, m, dtype):
+        if bits >= 16:
+            return codes.astype(dtype)
+        b, h, s, _ = codes.shape
+        d = self.head_dim
+        raw = quant.unpack_codes(codes, bits).astype(jnp.float32)
+        if m == MODE_PER_CHANNEL:
+            rg = raw.reshape(b, h, s // self.group_size, self.group_size, d)
+            out = rg * scale + zero
+        else:
+            g = min(self.group_size, d)
+            rg = raw.reshape(b, h, s, d // g, g)
+            out = rg * scale + zero
+        return out.reshape(b, h, s, d).astype(dtype)
+
+    def dequant(self, dtype=jnp.bfloat16):
+        """Full materialized (K̂, V̂, valid) of shape [B,H,S_cap+R,D]; `valid`
+        is a [S_cap+R] bool mask of live positions (main + residual).
+
+        This is the XLA reference path; the Pallas kernel consumes the packed
+        segments directly (repro.kernels.qdecode).
+        """
+        k_mode, v_mode = _kv_modes(self.mode)
+        k_main = self._deq(self.k_codes, self.k_scale, self.k_zero, self.k_bits,
+                           k_mode, dtype)
+        v_main = self._deq(self.v_codes, self.v_scale, self.v_zero, self.v_bits,
+                           v_mode, dtype)
+        k = jnp.concatenate([k_main, self.k_res.astype(dtype)], axis=2)
+        v = jnp.concatenate([v_main, self.v_res.astype(dtype)], axis=2)
+        n_main = jnp.minimum(self.length // self.group_size * self.group_size,
+                             self.s_cap)
+        n_res = self.length - (self.length // self.group_size * self.group_size)
+        idx = jnp.arange(self.s_cap + self.residual_len)
+        valid = jnp.where(idx < self.s_cap, idx < n_main, (idx - self.s_cap) < n_res)
+        return k, v, valid
+
+    def token_positions(self) -> jax.Array:
+        """Absolute position ids for every cache slot (for RoPE-consistent
+        masks); windowed caches wrap groups in a ring."""
+        r, s_cap = self.group_size, self.s_cap
+        n_groups = s_cap // r
+        total_groups = self.length // r
+        idx = jnp.arange(s_cap)
+        if self.window:
+            g = idx // r
+            # group g currently holds the group with index: latest occupant
+            cycle = jnp.maximum((total_groups - 1 - g) // n_groups, 0)
+            occupant = g + cycle * n_groups
+            main_pos = occupant * r + idx % r
+        else:
+            main_pos = idx
+        res_pos = total_groups * r + jnp.arange(self.residual_len)
+        return jnp.concatenate([main_pos, res_pos])
+
+    # --------------------------------------------------------------- sizes
+    def packed_bytes(self) -> int:
+        import numpy as np
+        total = 0
+        for arr in (self.k_codes, self.k_scale, self.k_zero, self.v_codes,
+                    self.v_scale, self.v_zero, self.k_res, self.v_res):
+            total += int(np.prod(arr.shape)) * arr.dtype.itemsize
+        return total
+
+
+def init_model_cache(cfg, schedule, batch: int, capacity: int, extra_groups: int = 4):
+    """Per-attention-layer cache list following a KVTunerSchedule.
+
+    Non-attention layers (mamba/xlstm) get ``None`` here; their recurrent
+    state lives in the model-specific state pytree.
+    """
+    from repro.configs.base import ATTN_LOCAL
+
+    caches = []
+    kinds = cfg.layer_kinds()
+    attn_ids = cfg.attention_layers()
+    r = cfg.kv_residual_len
+    cap = -(-capacity // r) * r + extra_groups * r
+    for i, kind in enumerate(kinds):
+        if i not in attn_ids:
+            caches.append(None)
+            continue
+        pair = schedule[attn_ids.index(i)] if schedule is not None else \
+            PrecisionPair(16, 16)
+        window = cfg.local_window if kind == ATTN_LOCAL else 0
+        caches.append(LayerKVCache.init(
+            batch, cfg.num_kv_heads, cfg.head_dim, cap, pair,
+            mode=schedule.mode if schedule is not None else MODE_PER_TOKEN,
+            group_size=cfg.kv_group_size, dtype=jnp.dtype(cfg.dtype), window=window))
+    return caches

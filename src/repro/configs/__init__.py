@@ -1,0 +1,41 @@
+"""Assigned architecture registry: ``--arch <id>`` resolves here.
+
+Each module defines ``config()`` returning the exact published configuration
+(sources cited per-file) plus ``smoke_config()`` — a reduced same-family
+variant for CPU tests.
+"""
+from __future__ import annotations
+
+from repro.configs import (arctic_480b, deepseek_67b, gemma3_12b, gemma3_27b,
+                           grok_1_314b, hubert_xlarge, jamba_v0_1_52b,
+                           llava_next_mistral_7b, paper_llama31_8b,
+                           tinyllama_1_1b, xlstm_125m)
+
+ARCH_CONFIGS = {
+    "llava-next-mistral-7b": llava_next_mistral_7b.config,
+    "tinyllama-1.1b": tinyllama_1_1b.config,
+    "gemma3-27b": gemma3_27b.config,
+    "deepseek-67b": deepseek_67b.config,
+    "gemma3-12b": gemma3_12b.config,
+    "xlstm-125m": xlstm_125m.config,
+    "arctic-480b": arctic_480b.config,
+    "grok-1-314b": grok_1_314b.config,
+    "jamba-v0.1-52b": jamba_v0_1_52b.config,
+    "hubert-xlarge": hubert_xlarge.config,
+    # the paper's own primary model (for completeness; not in the 40-cell grid)
+    "paper-llama3.1-8b": paper_llama31_8b.config,
+}
+
+SMOKE_CONFIGS = {name: mod.smoke_config for name, mod in [
+    ("llava-next-mistral-7b", llava_next_mistral_7b),
+    ("tinyllama-1.1b", tinyllama_1_1b),
+    ("gemma3-27b", gemma3_27b),
+    ("deepseek-67b", deepseek_67b),
+    ("gemma3-12b", gemma3_12b),
+    ("xlstm-125m", xlstm_125m),
+    ("arctic-480b", arctic_480b),
+    ("grok-1-314b", grok_1_314b),
+    ("jamba-v0.1-52b", jamba_v0_1_52b),
+    ("hubert-xlarge", hubert_xlarge),
+    ("paper-llama3.1-8b", paper_llama31_8b),
+]}

@@ -1,0 +1,24 @@
+"""Snowflake Arctic-480B — dense-MoE hybrid: 128 experts top-2 IN PARALLEL
+with a dense residual MLP [hf:Snowflake/snowflake-arctic-base; hf].
+35L, d_model=7168, 56H (GQA kv=8, head_dim 128), dense d_ff=4864 +
+MoE d_ff=4864 per expert, vocab=32000.
+
+Sharding note (DESIGN.md §4): 56 heads do not divide the 16-wide model axis —
+attention activations replicate over heads; TP is carried by the 128/16
+expert sharding + FSDP on expert ff dims."""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="arctic-480b", family="moe", num_layers=35, d_model=7168,
+        num_heads=56, num_kv_heads=8, head_dim=128, d_ff=4864,
+        vocab_size=32000, num_experts=128, experts_per_token=2,
+        moe_d_ff=4864, moe_dense_residual=True, rope_theta=1e4)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="arctic-smoke", family="moe", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, d_ff=96, vocab_size=128, num_experts=8,
+        experts_per_token=2, moe_d_ff=64, moe_dense_residual=True, q_chunk=16)

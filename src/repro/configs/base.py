@@ -1,0 +1,206 @@
+"""Model/run configuration schema shared by all 10 assigned architectures."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+# Layer kinds used by heterogeneous stacks (gemma3, jamba, xlstm).
+ATTN_LOCAL = "attn_local"
+ATTN_GLOBAL = "attn_global"
+MAMBA = "mamba"
+MLSTM = "mlstm"
+SLSTM = "slstm"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 → d_model // num_heads
+
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0            # expert hidden size (0 → d_ff)
+    moe_dense_residual: bool = False  # arctic: parallel dense MLP + MoE
+    moe_every: int = 1           # MoE replaces MLP every N layers (jamba: 2)
+    capacity_factor: float = 1.25
+
+    # --- gemma3 local:global attention ---
+    local_global_ratio: int = 0  # N local layers per 1 global (0 → all global)
+    local_window: int = 1024
+
+    # --- jamba hybrid ---
+    attn_period: int = 0         # 1 attention layer per N layers (jamba: 8)
+    attn_offset: int = 4         # position of the attn layer within the period
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+    mamba_dt_rank: int = 0       # 0 → ceil(d_model / 16)
+
+    # --- xlstm ---
+    slstm_at: tuple[int, ...] = ()
+    mlstm_proj_factor: float = 2.0
+
+    # --- encoder-only (hubert) ---
+    is_encoder: bool = False
+    frontend_dim: int = 0        # stub modality frontend embedding dim
+    mask_prob: float = 0.08      # masked-prediction training
+
+    # --- vlm (llava) ---
+    vision_dim: int = 0          # stub patch-embedding dim
+    image_tokens: int = 0        # anyres tiles × patches per tile
+
+    # --- common transformer knobs ---
+    rope_theta: float = 1e4
+    rope_theta_global: float = 0.0  # gemma3 uses a different theta for globals
+    norm_eps: float = 1e-6
+    use_qk_norm: bool = False
+    tie_embeddings: bool = False
+    act: str = "silu"            # silu (swiglu) | gelu (geglu)
+    dtype: str = "bfloat16"
+
+    # --- KV quantization defaults (KVTuner schedule overrides per layer) ---
+    kv_group_size: int = 32
+    kv_residual_len: int = 32
+
+    # --- training ---
+    scan_layers: bool = True     # lax.scan over stacked layer params
+    remat: bool = True
+    q_chunk: int = 512           # query-chunked attention (flash-style in XLA)
+
+    # --- perf-iteration knobs (§Perf; defaults = paper-faithful baseline) ---
+    attn_probs_bf16: bool = False  # cast softmax probs to bf16 before P·V
+    attn_boundary_hints: bool = False  # explicit SP↔TP reshard points
+    sp_decode: bool = False        # shard_map seq-parallel flash decode
+    moe_ep: bool = False           # shard_map expert-parallel MoE combine
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.num_heads % max(self.num_kv_heads, 1):
+            raise ValueError(f"{self.name}: heads {self.num_heads} not divisible "
+                             f"by kv heads {self.num_kv_heads}")
+        if self.moe_d_ff == 0 and self.num_experts:
+            object.__setattr__(self, "moe_d_ff", self.d_ff)
+        if self.mamba_dt_rank == 0:
+            object.__setattr__(self, "mamba_dt_rank", -(-self.d_model // 16))
+
+    # ----------------------------------------------------------- structure
+    def layer_kinds(self) -> list[str]:
+        """Per-layer kind for heterogeneous stacks; attention-bearing layers
+        are the KVTuner search space."""
+        kinds = []
+        for i in range(self.num_layers):
+            if self.family == "ssm":
+                kinds.append(SLSTM if i in self.slstm_at else MLSTM)
+            elif self.family == "hybrid" and self.attn_period:
+                kinds.append(ATTN_GLOBAL if i % self.attn_period == self.attn_offset
+                             else MAMBA)
+            elif self.local_global_ratio:
+                r = self.local_global_ratio + 1
+                kinds.append(ATTN_GLOBAL if i % r == r - 1 else ATTN_LOCAL)
+            else:
+                kinds.append(ATTN_GLOBAL)
+        return kinds
+
+    def attention_layers(self) -> list[int]:
+        return [i for i, k in enumerate(self.layer_kinds())
+                if k in (ATTN_LOCAL, ATTN_GLOBAL)]
+
+    def moe_layers(self) -> list[int]:
+        if not self.num_experts:
+            return []
+        return [i for i in range(self.num_layers) if i % self.moe_every == self.moe_every - 1] \
+            if self.moe_every > 1 else list(range(self.num_layers))
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+    @property
+    def is_homogeneous(self) -> bool:
+        kinds = set(self.layer_kinds())
+        moe_mixed = bool(self.num_experts) and self.moe_every > 1
+        return len(kinds) == 1 and not moe_mixed
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + layers), for roofline N."""
+        d, f, hd = self.d_model, self.d_ff, self.head_dim
+        nq, nkv = self.num_heads, self.num_kv_heads
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        total = emb
+        for kind in self.layer_kinds():
+            if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+                total += d * hd * (nq + 2 * nkv) + nq * hd * d  # qkvo
+            elif kind == MAMBA:
+                di = self.mamba_expand * d
+                total += d * 2 * di + di * self.mamba_d_conv + \
+                    di * (self.mamba_dt_rank + 2 * self.mamba_d_state) + \
+                    self.mamba_dt_rank * di + di * d
+            elif kind == MLSTM:
+                di = int(self.mlstm_proj_factor * d)
+                total += 2 * d * di + 3 * di * di // max(self.num_heads, 1) + di * d
+            elif kind == SLSTM:
+                total += 4 * d * d + 4 * d * (d // max(self.num_heads, 1))
+            total += 2 * d  # norms
+        # MLP / MoE
+        mlp = 3 * d * f if self.act == "silu" else 2 * d * f
+        for i in range(self.num_layers):
+            if self.family in ("ssm",):
+                total += 2 * d * int(2.6 * d) if i in self.slstm_at else 0
+                continue
+            if self.num_experts and i in self.moe_layers():
+                total += self.num_experts * 3 * d * self.moe_d_ff + d * self.num_experts
+                if self.moe_dense_residual:
+                    total += mlp
+            elif self.family == "hybrid" and self.layer_kinds()[i] == MAMBA:
+                total += mlp
+            elif self.family != "ssm":
+                total += mlp
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top-k experts only) → MODEL_FLOPS=6·N_active·D."""
+        if not self.num_experts:
+            return self.param_count()
+        d = self.d_model
+        inactive = 0
+        n_moe = len(self.moe_layers())
+        inactive = n_moe * (self.num_experts - self.experts_per_token) * 3 * d * self.moe_d_ff
+        return self.param_count() - inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    """One (input-shape) column of the assigned grid."""
+
+    name: str          # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+TRAIN_4K = ShapeCell("train_4k", "train", 4096, 256)
+PREFILL_32K = ShapeCell("prefill_32k", "prefill", 32768, 32)
+DECODE_32K = ShapeCell("decode_32k", "decode", 32768, 128)
+LONG_500K = ShapeCell("long_500k", "decode", 524288, 1)
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES_BY_NAME = {s.name: s for s in ALL_SHAPES}
+
+
+def supported_shapes(cfg: ModelConfig) -> list[ShapeCell]:
+    """Shape-cell applicability rules (see DESIGN.md §5)."""
+    shapes = [TRAIN_4K, PREFILL_32K]
+    if not cfg.is_encoder:
+        shapes.append(DECODE_32K)
+        subquadratic = cfg.family in ("ssm", "hybrid") or cfg.local_global_ratio > 0
+        if subquadratic:
+            shapes.append(LONG_500K)
+    return shapes

@@ -1,0 +1,16 @@
+"""DeepSeek-67B — llama-arch dense [arXiv:2401.02954; hf].
+95L, d_model=8192, 64H (GQA kv=8, head_dim 128), d_ff=22016, vocab=102400."""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-67b", family="dense", num_layers=95, d_model=8192,
+        num_heads=64, num_kv_heads=8, d_ff=22016, vocab_size=102400,
+        rope_theta=1e4)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-smoke", family="dense", num_layers=4, d_model=64,
+        num_heads=8, num_kv_heads=2, d_ff=160, vocab_size=128, q_chunk=16)

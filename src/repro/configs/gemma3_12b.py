@@ -1,0 +1,21 @@
+"""Gemma3-12B — 5:1 local:global, 128k [hf:google/gemma-3-1b-pt family;
+unverified]. 48L, d_model=3840, 16H (GQA kv=8, head_dim 256), d_ff=15360,
+vocab=262144."""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-12b", family="dense", num_layers=48, d_model=3840,
+        num_heads=16, num_kv_heads=8, head_dim=256, d_ff=15360,
+        vocab_size=262144, local_global_ratio=5, local_window=1024,
+        rope_theta=1e4, rope_theta_global=1e6, use_qk_norm=True,
+        act="gelu", tie_embeddings=True)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-12b-smoke", family="dense", num_layers=6, d_model=48,
+        num_heads=4, num_kv_heads=2, head_dim=32, d_ff=96, vocab_size=256,
+        local_global_ratio=5, local_window=16, use_qk_norm=True, act="gelu",
+        tie_embeddings=True, q_chunk=16)

@@ -1,0 +1,23 @@
+"""Gemma3-27B — 5:1 local:global attention, 128k context
+[hf:google/gemma-3-1b-pt family; unverified].
+62L, d_model=5376, 32H (GQA kv=16, head_dim 128), d_ff=21504, vocab=262144.
+Local layers: sliding window 1024, theta 10k; global layers: theta 1M."""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-27b", family="dense", num_layers=62, d_model=5376,
+        num_heads=32, num_kv_heads=16, head_dim=128, d_ff=21504,
+        vocab_size=262144, local_global_ratio=5, local_window=1024,
+        rope_theta=1e4, rope_theta_global=1e6, use_qk_norm=True,
+        act="gelu", tie_embeddings=True)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-smoke", family="dense", num_layers=6, d_model=64,
+        num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256,
+        local_global_ratio=5, local_window=16, rope_theta=1e4,
+        rope_theta_global=1e6, use_qk_norm=True, act="gelu",
+        tie_embeddings=True, q_chunk=16)

@@ -1,0 +1,22 @@
+"""Grok-1 314B — 8 experts top-2 MoE [hf:xai-org/grok-1; unverified].
+64L, d_model=6144, 48H (GQA kv=8, head_dim 128), expert d_ff=32768,
+vocab=131072.
+
+Sharding note: 8 experts < 16-wide model axis → EP is infeasible on this
+mesh; TP shards each expert's d_ff=32768 instead (DESIGN.md §4)."""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="grok-1-314b", family="moe", num_layers=64, d_model=6144,
+        num_heads=48, num_kv_heads=8, head_dim=128, d_ff=32768,
+        vocab_size=131072, num_experts=8, experts_per_token=2,
+        moe_d_ff=32768, rope_theta=1e4)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="grok-smoke", family="moe", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128, num_experts=4,
+        experts_per_token=2, moe_d_ff=128, q_chunk=16)

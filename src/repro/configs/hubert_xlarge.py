@@ -1,0 +1,23 @@
+"""HuBERT-XLarge — encoder-only audio transformer [arXiv:2106.07447;
+unverified]. 48L, d_model=1280, 16H (kv=16, head_dim 80), d_ff=5120,
+vocab=504 (k-means target codebook).
+
+Modality frontend is a STUB: input_specs provides precomputed frame
+embeddings [B, T, 512] (the conv feature extractor output dim); the in-model
+part is the projection + masked-prediction head. Encoder-only → no decode
+shapes, no autoregressive KV cache (KVTuner inapplicable; DESIGN.md §5)."""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="hubert-xlarge", family="audio", num_layers=48, d_model=1280,
+        num_heads=16, num_kv_heads=16, d_ff=5120, vocab_size=504,
+        is_encoder=True, frontend_dim=512, act="gelu", mask_prob=0.08)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="hubert-smoke", family="audio", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=32,
+        is_encoder=True, frontend_dim=24, act="gelu", q_chunk=16)

@@ -1,0 +1,24 @@
+"""Jamba-v0.1 52B — Mamba + attention 1:7 interleave, MoE every 2 layers,
+16 experts top-2 [arXiv:2403.19887; hf].
+32L (4 periods x 8), d_model=4096, 32H (GQA kv=8), d_ff=14336, vocab=65536.
+Attention at position 4 of each 8-layer period; MoE replaces the MLP on odd
+layers. Only the 4 attention layers carry KV cache → the KVTuner search space
+degenerates gracefully (DESIGN.md §5)."""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-v0.1-52b", family="hybrid", num_layers=32, d_model=4096,
+        num_heads=32, num_kv_heads=8, d_ff=14336, vocab_size=65536,
+        attn_period=8, attn_offset=4, num_experts=16, experts_per_token=2,
+        moe_every=2, moe_d_ff=14336, mamba_d_state=16, mamba_d_conv=4,
+        mamba_expand=2, rope_theta=1e4)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-smoke", family="hybrid", num_layers=8, d_model=64,
+        num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128, attn_period=4,
+        attn_offset=2, num_experts=4, experts_per_token=2, moe_every=2,
+        moe_d_ff=128, q_chunk=16)

@@ -1,0 +1,21 @@
+"""LLaVA-NeXT (Mistral-7B backbone) — anyres tiling
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified].
+Backbone: 32L, d_model=4096, 32H (GQA kv=8), d_ff=14336, vocab=32000.
+Modality frontend is a STUB: input_specs provides precomputed patch
+embeddings (anyres: 5 tiles x 576 patches = 2880 image tokens, CLIP dim 1024);
+the in-model part is the 2-layer MLP projector (the trainable mm adapter)."""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llava-next-mistral-7b", family="vlm", num_layers=32,
+        d_model=4096, num_heads=32, num_kv_heads=8, d_ff=14336,
+        vocab_size=32000, vision_dim=1024, image_tokens=2880, rope_theta=1e6)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="llava-smoke", family="vlm", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128, vision_dim=32,
+        image_tokens=8, q_chunk=16)

@@ -1,0 +1,18 @@
+"""Llama-3.1-8B-Instruct — the paper's primary experimental model
+[arXiv:2407.21783]. 32L, d_model=4096, 32H (GQA kv=8, head_dim 128),
+d_ff=14336, vocab=128256. Included so the paper's own Tables 2-11 have a
+full-size dry-run target; not part of the assigned 40-cell grid."""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="paper-llama3.1-8b", family="dense", num_layers=32, d_model=4096,
+        num_heads=32, num_kv_heads=8, d_ff=14336, vocab_size=128256,
+        rope_theta=5e5)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="llama31-smoke", family="dense", num_layers=4, d_model=64,
+        num_heads=8, num_kv_heads=2, d_ff=160, vocab_size=128, q_chunk=16)

@@ -1,0 +1,16 @@
+"""TinyLlama-1.1B — llama2-arch small [arXiv:2401.02385; hf].
+22L, d_model=2048, 32H (GQA kv=4, head_dim 64), d_ff=5632, vocab=32000."""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="tinyllama-1.1b", family="dense", num_layers=22, d_model=2048,
+        num_heads=32, num_kv_heads=4, d_ff=5632, vocab_size=32000,
+        rope_theta=1e4)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="tinyllama-smoke", family="dense", num_layers=3, d_model=64,
+        num_heads=8, num_kv_heads=2, d_ff=160, vocab_size=128, q_chunk=16)

@@ -1,0 +1,22 @@
+"""xLSTM-125M — sLSTM + mLSTM blocks [arXiv:2405.04517; unverified].
+12L, d_model=768, 4H (head_dim 192), vocab=50304. d_ff=0: xlstm blocks carry
+their own up/down projections. sLSTM at layers {5, 11} (1:5 ratio choice —
+the paper's xLSTM[7:1] ratio rounded to this depth; documented deviation).
+
+KVTuner is INAPPLICABLE (attention-free — no KV cache); the arch is
+implemented without the technique per the assignment (DESIGN.md §5)."""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-125m", family="ssm", num_layers=12, d_model=768,
+        num_heads=4, num_kv_heads=4, d_ff=0, vocab_size=50304,
+        slstm_at=(5, 11), mlstm_proj_factor=2.0)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-smoke", family="ssm", num_layers=4, d_model=64,
+        num_heads=4, num_kv_heads=4, d_ff=0, vocab_size=128, slstm_at=(1,),
+        q_chunk=16)

@@ -1,0 +1,96 @@
+"""Inter-layer clustering (paper §5.3, §D.1.2): DBSCAN over layer sensitivity
+profiles, applied *within* groups of layers that share the same pruned
+candidate set. Own DBSCAN implementation (eps=0.05, min_samples=2 defaults
+matching the paper; sklearn is unavailable offline).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.pruning import PrunedSpace
+
+
+def dbscan(x: np.ndarray, eps: float = 0.05, min_samples: int = 2) -> np.ndarray:
+    """Labels [N]; -1 = noise (each noise point later becomes its own group).
+    Plain O(N²) density clustering — N is the layer count (≤ 95 here)."""
+    n = x.shape[0]
+    d = np.linalg.norm(x[:, None, :] - x[None, :, :], axis=-1)
+    neighbors = [np.where(d[i] <= eps)[0] for i in range(n)]
+    core = np.asarray([len(nb) >= min_samples for nb in neighbors])
+    labels = np.full(n, -2)
+    cluster = 0
+    for i in range(n):
+        if labels[i] != -2 or not core[i]:
+            continue
+        labels[i] = cluster
+        stack = list(neighbors[i])
+        while stack:
+            j = stack.pop()
+            if labels[j] == -1:
+                labels[j] = cluster
+            if labels[j] != -2:
+                continue
+            labels[j] = cluster
+            if core[j]:
+                stack.extend(neighbors[j])
+        cluster += 1
+    labels[labels == -2] = -1
+    return labels
+
+
+@dataclasses.dataclass
+class LayerGroups:
+    """Clustered layer groups sharing (candidate set, sensitivity profile)."""
+
+    groups: list[list[int]]               # layer ids per group
+    candidates: list[list[int]]           # per group: indices into pruned.pairs
+    pruned: PrunedSpace
+
+    @property
+    def num_groups(self) -> int:
+        return len(self.groups)
+
+    def search_space_size(self) -> float:
+        out = 1.0
+        for c in self.candidates:
+            out *= len(c)
+        return out
+
+
+def cluster_layers(pruned: PrunedSpace, eps: float = 0.05,
+                   min_samples: int = 2, normalize: bool = True) -> LayerGroups:
+    """Two-step grouping:
+    1. partition layers by identical pruned candidate sets;
+    2. DBSCAN within each partition on the e_o sensitivity profile.
+    Noise points become singleton groups (a layer more sensitive than its
+    peers keeps its own precision decision — paper §6.5's "crucial groups").
+    """
+    by_key: dict[tuple, list[int]] = {}
+    for l in range(pruned.num_layers):
+        by_key.setdefault(pruned.candidate_key(l), []).append(l)
+
+    groups: list[list[int]] = []
+    candidates: list[list[int]] = []
+    for key, layers in sorted(by_key.items()):
+        prof = pruned.e_o[layers]  # [n, P]
+        if normalize and prof.max() > 0:
+            prof = prof / (prof.max(axis=0, keepdims=True) + 1e-12)
+        if len(layers) == 1:
+            labels = np.asarray([-1])
+        else:
+            labels = dbscan(prof, eps=eps, min_samples=min_samples)
+        for c in sorted(set(labels.tolist())):
+            members = [layers[i] for i in np.where(labels == c)[0]]
+            if c == -1:
+                for m in members:  # noise → singletons
+                    groups.append([m])
+                    candidates.append(list(key))
+            else:
+                groups.append(members)
+                candidates.append(list(key))
+    order = np.argsort([g[0] for g in groups])
+    return LayerGroups(groups=[groups[i] for i in order],
+                       candidates=[candidates[i] for i in order],
+                       pruned=pruned)

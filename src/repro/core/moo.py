@@ -1,0 +1,156 @@
+"""NSGA-II multi-objective search over grouped layer-wise precision pairs.
+
+Replaces the paper's Optuna/MOEA-D (unavailable offline) for problem (4):
+
+    min_P ( f_m(P), f_a(P) )   s.t.  f_m(P) ≤ M
+
+Decision vector: one candidate-pair index per clustered layer group. Both
+objectives are minimized: f_m = equivalent bits, f_a = accuracy loss (or NLL
+increase) on the calibration set. Evaluations are memoized — the evaluator is
+a single jitted fake-quant forward, so a 200-candidate search needs no
+retracing (repro.core.quant.fake_quant_dynamic).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class MOOResult:
+    genotypes: list[tuple[int, ...]]
+    objectives: np.ndarray          # [N, 2] (bits, acc_loss)
+    front: list[int]                # indices of the final Pareto frontier
+    history: list[dict]             # per-generation stats
+    evaluations: int = 0
+
+
+def non_dominated_sort(obj: np.ndarray) -> list[np.ndarray]:
+    """Fast non-dominated sort; returns list of fronts (index arrays)."""
+    n = obj.shape[0]
+    dominates = (obj[:, None, :] <= obj[None, :, :]).all(-1) & \
+        (obj[:, None, :] < obj[None, :, :]).any(-1)
+    dom_count = dominates.sum(0)  # how many dominate i
+    fronts = []
+    current = np.where(dom_count == 0)[0]
+    assigned = np.zeros(n, bool)
+    while current.size:
+        fronts.append(current)
+        assigned[current] = True
+        dom_count = dom_count - dominates[current].sum(0)
+        dom_count[assigned] = 1 << 30
+        current = np.where(dom_count == 0)[0]
+    return fronts
+
+
+def crowding_distance(obj: np.ndarray) -> np.ndarray:
+    n, m = obj.shape
+    if n <= 2:
+        return np.full(n, np.inf)
+    dist = np.zeros(n)
+    for k in range(m):
+        order = np.argsort(obj[:, k])
+        lo, hi = obj[order[0], k], obj[order[-1], k]
+        dist[order[0]] = dist[order[-1]] = np.inf
+        if hi - lo < 1e-12:
+            continue
+        dist[order[1:-1]] += (obj[order[2:], k] - obj[order[:-2], k]) / (hi - lo)
+    return dist
+
+
+class NSGA2:
+    """Integer-vector NSGA-II with memoized evaluations."""
+
+    def __init__(self, arity: Sequence[int],
+                 evaluate: Callable[[tuple[int, ...]], tuple[float, float]],
+                 pop_size: int = 32, mutation_rate: float | None = None,
+                 max_bits: float | None = None, seed: int = 0):
+        self.arity = list(arity)
+        self.evaluate_fn = evaluate
+        self.pop = pop_size
+        self.mut = mutation_rate or max(1.0 / len(arity), 0.1)
+        self.max_bits = max_bits
+        self.rng = np.random.default_rng(seed)
+        self._cache: dict[tuple[int, ...], tuple[float, float]] = {}
+        self.history: list[dict] = []
+
+    # ------------------------------------------------------------ helpers
+    def _eval(self, g: tuple[int, ...]) -> tuple[float, float]:
+        if g not in self._cache:
+            bits, loss = self.evaluate_fn(g)
+            if self.max_bits is not None and bits > self.max_bits:
+                loss = loss + 10.0 * (bits - self.max_bits)  # soft constraint
+            self._cache[g] = (float(bits), float(loss))
+        return self._cache[g]
+
+    def _random(self) -> tuple[int, ...]:
+        return tuple(int(self.rng.integers(a)) for a in self.arity)
+
+    def _mutate(self, g: tuple[int, ...]) -> tuple[int, ...]:
+        out = list(g)
+        for i, a in enumerate(self.arity):
+            if self.rng.random() < self.mut and a > 1:
+                out[i] = int(self.rng.integers(a))
+        return tuple(out)
+
+    def _crossover(self, a, b) -> tuple[int, ...]:
+        take = self.rng.random(len(a)) < 0.5
+        return tuple(int(x if t else y) for x, y, t in zip(a, b, take))
+
+    # --------------------------------------------------------------- main
+    def run(self, generations: int = 12,
+            seeds: Sequence[tuple[int, ...]] = ()) -> MOOResult:
+        pop = list(dict.fromkeys(list(seeds) +
+                                 [self._random() for _ in range(self.pop)]))[:self.pop]
+        while len(pop) < self.pop:
+            pop.append(self._random())
+        for gen in range(generations):
+            obj = np.asarray([self._eval(g) for g in pop])
+            fronts = non_dominated_sort(obj)
+            rank = np.zeros(len(pop), int)
+            for fi, f in enumerate(fronts):
+                rank[f] = fi
+            crowd = np.zeros(len(pop))
+            for f in fronts:
+                crowd[f] = crowding_distance(obj[f])
+
+            def tournament():
+                i, j = self.rng.integers(len(pop), size=2)
+                if rank[i] != rank[j]:
+                    return pop[i] if rank[i] < rank[j] else pop[j]
+                return pop[i] if crowd[i] >= crowd[j] else pop[j]
+
+            children = []
+            while len(children) < self.pop:
+                c = self._crossover(tournament(), tournament())
+                children.append(self._mutate(c))
+            union = list(dict.fromkeys(pop + children))
+            uobj = np.asarray([self._eval(g) for g in union])
+            ufronts = non_dominated_sort(uobj)
+            new_pop: list[tuple[int, ...]] = []
+            for f in ufronts:
+                if len(new_pop) + len(f) <= self.pop:
+                    new_pop.extend(union[i] for i in f)
+                else:
+                    cd = crowding_distance(uobj[f])
+                    order = f[np.argsort(-cd)]
+                    new_pop.extend(union[i] for i in
+                                   order[: self.pop - len(new_pop)])
+                    break
+            pop = new_pop
+            front0 = ufronts[0]
+            self.history.append({
+                "gen": gen, "evals": len(self._cache),
+                "front_size": len(front0),
+                "best_loss": float(uobj[front0][:, 1].min()),
+                "min_bits": float(uobj[front0][:, 0].min()),
+            })
+
+        genos = list(self._cache.keys())
+        objs = np.asarray([self._cache[g] for g in genos])
+        front = non_dominated_sort(objs)[0]
+        return MOOResult(genotypes=genos, objectives=objs,
+                         front=[int(i) for i in front], history=self.history,
+                         evaluations=len(self._cache))

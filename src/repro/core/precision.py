@@ -1,0 +1,183 @@
+"""Precision-pair datatypes for layer-wise mixed-precision KV cache quantization.
+
+The paper's search space (§5.1) is the per-layer pair ``(P_k^l, P_v^l)`` with
+candidate bits {2, 4, 8} (16 = no quantization). A full-model assignment is a
+``KVTunerSchedule``; its memory objective is the *equivalent bits*
+``f_m(P) = sum(P) / (2L)`` (paper eq. 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Iterable, Mapping, Sequence
+
+SUPPORTED_BITS = (2, 4, 8, 16)
+
+# Quantization modes (paper §4.2):
+#  - per-token-asym: one (scale, zero) per token row (reduced over head_dim),
+#    used for both K and V in the simple baseline mode.
+#  - per-channel-asym: one (scale, zero) per channel, grouped along the token
+#    axis (KIVI's key mode; values stay per-token).
+MODE_PER_TOKEN = "per-token-asym"
+MODE_PER_CHANNEL = "per-channel-asym"
+MODE_KIVI = "kivi"  # keys per-channel-asym, values per-token-asym
+MODES = (MODE_PER_TOKEN, MODE_PER_CHANNEL, MODE_KIVI)
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class PrecisionPair:
+    """Bits for (key, value) cache of one transformer layer."""
+
+    k_bits: int
+    v_bits: int
+
+    def __post_init__(self):
+        if self.k_bits not in SUPPORTED_BITS or self.v_bits not in SUPPORTED_BITS:
+            raise ValueError(f"unsupported bits: {self}")
+
+    @property
+    def equivalent_bits(self) -> float:
+        return (self.k_bits + self.v_bits) / 2.0
+
+    @property
+    def name(self) -> str:
+        if self.k_bits == self.v_bits:
+            return f"KV{self.k_bits}"
+        return f"K{self.k_bits}V{self.v_bits}"
+
+    @classmethod
+    def from_name(cls, name: str) -> "PrecisionPair":
+        name = name.strip()
+        if name.startswith("KV"):
+            b = int(name[2:])
+            return cls(b, b)
+        if name.startswith("K") and "V" in name:
+            k, v = name[1:].split("V")
+            return cls(int(k), int(v))
+        raise ValueError(f"cannot parse precision pair {name!r}")
+
+    def astuple(self) -> tuple[int, int]:
+        return (self.k_bits, self.v_bits)
+
+
+# The 9 uniform candidates evaluated throughout the paper (Tables 2, 3, 5).
+CANDIDATE_PAIRS: tuple[PrecisionPair, ...] = tuple(
+    PrecisionPair(k, v) for k in (8, 4, 2) for v in (8, 4, 2)
+)
+FULL_PRECISION = PrecisionPair(16, 16)
+
+# The "key-first" Pareto set the paper finds for most layers (§D.1.1).
+KEY_FIRST_SET: tuple[PrecisionPair, ...] = tuple(
+    PrecisionPair.from_name(n) for n in ("KV8", "K8V4", "KV4", "K4V2", "KV2")
+)
+
+
+@dataclasses.dataclass
+class KVTunerSchedule:
+    """A full per-layer precision assignment plus provenance metadata."""
+
+    pairs: list[PrecisionPair]
+    mode: str = MODE_PER_TOKEN
+    model_name: str = ""
+    # Optional provenance from the offline search:
+    groups: list[list[int]] | None = None  # clustered layer-id groups
+    objectives: dict | None = None  # recorded (bits, accuracy/error) at search time
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"unknown mode {self.mode!r}")
+        self.pairs = [
+            p if isinstance(p, PrecisionPair) else PrecisionPair(*p) for p in self.pairs
+        ]
+
+    def __len__(self) -> int:
+        return len(self.pairs)
+
+    def __getitem__(self, layer: int) -> PrecisionPair:
+        return self.pairs[layer]
+
+    @property
+    def equivalent_bits(self) -> float:
+        """f_m(P) = sum(P) / 2L  (paper eq. 4)."""
+        if not self.pairs:
+            return 0.0
+        return sum(p.k_bits + p.v_bits for p in self.pairs) / (2 * len(self.pairs))
+
+    @property
+    def name(self) -> str:
+        return f"KVTuner-C{self.equivalent_bits:.2f}"
+
+    @classmethod
+    def uniform(cls, num_layers: int, pair: PrecisionPair, mode: str = MODE_PER_TOKEN,
+                model_name: str = "") -> "KVTunerSchedule":
+        return cls([pair] * num_layers, mode=mode, model_name=model_name)
+
+    @classmethod
+    def from_groups(cls, num_layers: int, groups: Sequence[Sequence[int]],
+                    group_pairs: Sequence[PrecisionPair], mode: str = MODE_PER_TOKEN,
+                    model_name: str = "") -> "KVTunerSchedule":
+        """Expand a per-group assignment (the MOO decision vector) to per-layer."""
+        pairs: list[PrecisionPair | None] = [None] * num_layers
+        for gids, pair in zip(groups, group_pairs):
+            for layer in gids:
+                if pairs[layer] is not None:
+                    raise ValueError(f"layer {layer} assigned twice")
+                pairs[layer] = pair
+        missing = [i for i, p in enumerate(pairs) if p is None]
+        if missing:
+            raise ValueError(f"layers without precision assignment: {missing}")
+        return cls(pairs, mode=mode, model_name=model_name,
+                   groups=[list(g) for g in groups])
+
+    # ---------------------------------------------------------------- io
+    def to_json(self) -> str:
+        return json.dumps({
+            "model_name": self.model_name,
+            "mode": self.mode,
+            "pairs": [p.astuple() for p in self.pairs],
+            "groups": self.groups,
+            "objectives": self.objectives,
+            "equivalent_bits": self.equivalent_bits,
+        }, indent=2)
+
+    @classmethod
+    def from_json(cls, text: str) -> "KVTunerSchedule":
+        d = json.loads(text)
+        sched = cls([PrecisionPair(*p) for p in d["pairs"]], mode=d["mode"],
+                    model_name=d.get("model_name", ""), groups=d.get("groups"))
+        sched.objectives = d.get("objectives")
+        return sched
+
+    def save(self, path) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    @classmethod
+    def load(cls, path) -> "KVTunerSchedule":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    # ------------------------------------------------------------ arrays
+    def bits_array(self):
+        """[L, 2] float array of (k_bits, v_bits) — feeds the dynamic-bits
+        fake-quant simulation path (single jit for any schedule)."""
+        import numpy as np
+
+        return np.asarray([[p.k_bits, p.v_bits] for p in self.pairs], dtype=np.float32)
+
+
+def pareto_front(points: Iterable[tuple[float, ...]]) -> list[int]:
+    """Indices of non-dominated points, minimizing every objective."""
+    pts = list(points)
+    keep = []
+    for i, p in enumerate(pts):
+        dominated = False
+        for j, q in enumerate(pts):
+            if j == i:
+                continue
+            if all(qi <= pi for qi, pi in zip(q, p)) and any(qi < pi for qi, pi in zip(q, p)):
+                dominated = True
+                break
+        if not dominated:
+            keep.append(i)
+    return keep

@@ -1,0 +1,61 @@
+"""Intra-layer KV precision-pair pruning (paper §5.3, Table 4).
+
+Per layer, keep only pairs on the Pareto frontier of
+(equivalent bits  ↓, relative attention output error e_o ↓). The paper finds
+the "key-first" set {KV8, K8V4, KV4, K4V2, KV2} survives for most layers under
+per-token-asym, with first/last layers and per-channel modes preferring
+value-first pairs — our benchmarks reproduce this structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.precision import PrecisionPair, pareto_front
+from repro.core.sensitivity import LayerErrors
+
+
+@dataclasses.dataclass
+class PrunedSpace:
+    """Per-layer surviving candidate pairs + their e_o (the clustering metric)."""
+
+    pairs: list[PrecisionPair]            # full candidate list (column order)
+    keep: list[list[int]]                 # per layer: indices into `pairs`
+    e_o: np.ndarray                       # [L, P] full table (for clustering)
+
+    def layer_candidates(self, layer: int) -> list[PrecisionPair]:
+        return [self.pairs[i] for i in self.keep[layer]]
+
+    def candidate_key(self, layer: int) -> tuple[int, ...]:
+        """Hashable id of the layer's surviving set — the paper's first
+        grouping criterion (layers sharing a candidate set cluster together)."""
+        return tuple(self.keep[layer])
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.keep)
+
+    def space_size(self) -> float:
+        out = 1.0
+        for k in self.keep:
+            out *= len(k)
+        return out
+
+
+def prune_intra_layer(errors: LayerErrors, always_keep_fp16: bool = False,
+                      eps: float = 1e-6) -> PrunedSpace:
+    """Pareto-prune (bits, e_o) per layer.
+
+    ``eps`` merges numerically-tied errors so strictly-dominated duplicates
+    drop (float noise between e.g. KV8 and K8V4 at tiny calibration sets).
+    """
+    pairs = errors.pairs
+    bits = np.asarray([p.equivalent_bits for p in pairs])
+    keep: list[list[int]] = []
+    for l in range(errors.e_o.shape[0]):
+        eo = errors.e_o[l]
+        pts = [(bits[i], round(float(eo[i]) / eps) * eps) for i in range(len(pairs))]
+        front = pareto_front(pts)
+        keep.append(sorted(front, key=lambda i: -bits[i]))
+    return PrunedSpace(pairs=list(pairs), keep=keep, e_o=errors.e_o.copy())

@@ -1,0 +1,228 @@
+"""Round-to-nearest asymmetric KV cache quantization (paper §3.2, eq. 2).
+
+Two families of entry points:
+
+* **Deployment path** (static bits, packed storage): ``quantize`` →
+  ``QuantizedTensor`` (uint8 codes packed along head_dim + per-group scale/zero)
+  → ``dequantize``. Bits are compile-time constants per layer, which is the
+  property KVTuner exploits for static-graph/TPU friendliness.
+
+* **Simulation path** (``fake_quant`` / ``fake_quant_dynamic``): quantize +
+  dequantize in one shot without packing. The *dynamic* variant takes bits as a
+  traced array so a single jitted computation can evaluate **any** layer-wise
+  schedule — this is what makes the NSGA-II search cheap (no retrace per
+  candidate), mirroring the paper's offline "simulated quantization" calibration
+  (Appendix B).
+
+Modes (paper §4.2):
+* per-token-asym: one (scale, zero) per token, reduced over head_dim groups.
+* per-channel-asym: one (scale, zero) per channel, reduced over token groups
+  (KIVI's key mode — exploits the strong channel-wise outliers of keys).
+
+Tensor convention: KV tensors are ``[..., S, D]`` (sequence, head_dim); leading
+axes are batch/heads.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import MODE_PER_CHANNEL, MODE_PER_TOKEN
+
+_EPS = 1e-8
+
+
+# ----------------------------------------------------------------- packing
+def pack_codes(codes: jax.Array, bits: int) -> jax.Array:
+    """Pack uint8 codes in [0, 2^bits) into uint8 along the last axis.
+
+    2-bit → 4 codes/byte, 4-bit → 2 codes/byte, 8-bit → identity. The last
+    axis (head_dim) must be divisible by ``8 // bits``.
+    """
+    if bits == 8:
+        return codes.astype(jnp.uint8)
+    if bits not in (2, 4):
+        raise ValueError(f"cannot pack bits={bits}")
+    vpb = 8 // bits  # values per byte
+    d = codes.shape[-1]
+    if d % vpb:
+        raise ValueError(f"last dim {d} not divisible by {vpb} (bits={bits})")
+    grouped = codes.reshape(*codes.shape[:-1], d // vpb, vpb).astype(jnp.uint32)
+    shifts = (jnp.arange(vpb, dtype=jnp.uint32) * bits)
+    packed = jnp.sum(grouped << shifts, axis=-1)
+    return packed.astype(jnp.uint8)
+
+
+def unpack_codes(packed: jax.Array, bits: int) -> jax.Array:
+    """Inverse of :func:`pack_codes`; returns uint8 codes."""
+    if bits == 8:
+        return packed.astype(jnp.uint8)
+    vpb = 8 // bits
+    mask = jnp.uint32((1 << bits) - 1)
+    shifts = (jnp.arange(vpb, dtype=jnp.uint32) * bits)
+    codes = (packed.astype(jnp.uint32)[..., None] >> shifts) & mask
+    return codes.reshape(*packed.shape[:-1], packed.shape[-1] * vpb).astype(jnp.uint8)
+
+
+# ----------------------------------------------------------- scale/zero math
+def _group_reshape(x: jax.Array, axis: int, group_size: int):
+    """Split ``axis`` into (n_groups, group_size). Returns reshaped array and
+    the positional index of the group_size axis."""
+    axis = axis % x.ndim
+    n = x.shape[axis]
+    g = min(group_size, n) if group_size > 0 else n
+    if n % g:
+        raise ValueError(f"axis size {n} not divisible by group size {g}")
+    new_shape = x.shape[:axis] + (n // g, g) + x.shape[axis + 1:]
+    return x.reshape(new_shape), axis + 1
+
+
+def compute_scale_zero(x: jax.Array, bits, axis: int, group_size: int):
+    """Asymmetric (scale, zero) over groups along ``axis``.
+
+    z = min(X), s = (max(X) - min(X)) / (2^B - 1)      (paper eq. 2)
+
+    ``bits`` may be a python int or a traced array (dynamic path). Returned
+    scale/zero have the group axis reduced to n_groups (keepdims within the
+    reshaped view).
+    """
+    xg, gaxis = _group_reshape(x.astype(jnp.float32), axis, group_size)
+    mn = jnp.min(xg, axis=gaxis, keepdims=True)
+    mx = jnp.max(xg, axis=gaxis, keepdims=True)
+    levels = jnp.asarray(2.0, dtype=jnp.float32) ** bits - 1.0
+    scale = jnp.maximum((mx - mn) / levels, _EPS)
+    return scale, mn, xg, gaxis
+
+
+def _mode_axis(mode: str) -> int:
+    # [..., S, D]: per-token reduces over D (-1); per-channel over S (-2).
+    if mode == MODE_PER_TOKEN:
+        return -1
+    if mode == MODE_PER_CHANNEL:
+        return -2
+    raise ValueError(f"unknown quant mode {mode!r} (KIVI resolves to per-mode per K/V)")
+
+
+# ------------------------------------------------------------- deployment
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QuantizedTensor:
+    """Packed quantized tensor + dequantization metadata.
+
+    ``codes`` is uint8, packed along head_dim. ``scale``/``zero`` are float32
+    with a broadcastable grouped shape. Static (aux) fields make the layout a
+    stable pytree so it can live inside jitted cache state.
+    """
+
+    codes: jax.Array
+    scale: jax.Array
+    zero: jax.Array
+    bits: int = dataclasses.field(metadata=dict(static=True))
+    mode: str = dataclasses.field(metadata=dict(static=True))
+    group_size: int = dataclasses.field(metadata=dict(static=True))
+    orig_shape: tuple = dataclasses.field(metadata=dict(static=True))
+    orig_dtype: jnp.dtype = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def packed_bytes(self) -> int:
+        import numpy as np
+
+        return int(np.prod(self.codes.shape)) + 8 * int(np.prod(self.scale.shape))
+
+
+def quantize(x: jax.Array, bits: int, mode: str = MODE_PER_TOKEN,
+             group_size: int = 32) -> QuantizedTensor:
+    """Quantize to packed codes (static-bits deployment path)."""
+    if bits == 16:
+        raise ValueError("bits=16 means no quantization; keep the raw tensor")
+    axis = _mode_axis(mode)
+    scale, zero, xg, gaxis = compute_scale_zero(x, bits, axis, group_size)
+    q = jnp.round((xg.astype(jnp.float32) - zero) / scale)
+    q = jnp.clip(q, 0, 2 ** bits - 1).astype(jnp.uint8)
+    q = q.reshape(x.shape)
+    # scale/zero keep the grouped shape (broadcastable after a reshape in dequant)
+    return QuantizedTensor(
+        codes=pack_codes(q, bits), scale=scale, zero=zero, bits=bits, mode=mode,
+        group_size=group_size, orig_shape=tuple(x.shape), orig_dtype=x.dtype)
+
+
+def dequantize(qt: QuantizedTensor) -> jax.Array:
+    """X̂ = Q(X) · s + z  (paper eq. 2)."""
+    codes = unpack_codes(qt.codes, qt.bits).astype(jnp.float32)
+    axis = _mode_axis(qt.mode)
+    cg, gaxis = _group_reshape(codes, axis, qt.group_size)
+    xhat = cg * qt.scale + qt.zero
+    return xhat.reshape(qt.orig_shape).astype(qt.orig_dtype)
+
+
+# ------------------------------------------------------------- simulation
+def fake_quant(x: jax.Array, bits: int, mode: str = MODE_PER_TOKEN,
+               group_size: int = 32) -> jax.Array:
+    """Static-bits quantize→dequantize without packing (for error metrics)."""
+    if bits >= 16:
+        return x
+    axis = _mode_axis(mode)
+    scale, zero, xg, gaxis = compute_scale_zero(x, bits, axis, group_size)
+    q = jnp.clip(jnp.round((xg.astype(jnp.float32) - zero) / scale), 0, 2 ** bits - 1)
+    return (q * scale + zero).reshape(x.shape).astype(x.dtype)
+
+
+def fake_quant_dynamic(x: jax.Array, bits: jax.Array, mode: str = MODE_PER_TOKEN,
+                       group_size: int = 32) -> jax.Array:
+    """Traced-bits fake quantization: `bits` is a scalar array.
+
+    One jitted graph evaluates any precision; `bits >= 16` passes through.
+    This powers the search loop over layer-wise schedules.
+    """
+    axis = _mode_axis(mode)
+    bits_f = jnp.asarray(bits, dtype=jnp.float32)
+    scale, zero, xg, gaxis = compute_scale_zero(x, bits_f, axis, group_size)
+    levels = 2.0 ** bits_f - 1.0
+    q = jnp.clip(jnp.round((xg.astype(jnp.float32) - zero) / scale), 0.0, levels)
+    out = (q * scale + zero).reshape(x.shape).astype(x.dtype)
+    return jnp.where(bits_f >= 16.0, x, out)
+
+
+def fake_quant_kv_dynamic(k: jax.Array, v: jax.Array, k_bits: jax.Array,
+                          v_bits: jax.Array, mode: str, group_size: int = 32):
+    """Apply the layer's (k_bits, v_bits) pair; `mode` may be 'kivi' which
+    resolves to per-channel keys + per-token values (paper §4.2)."""
+    from repro.core.precision import MODE_KIVI
+
+    if mode == MODE_KIVI:
+        k_mode, v_mode = MODE_PER_CHANNEL, MODE_PER_TOKEN
+    else:
+        k_mode = v_mode = mode
+    k_hat = fake_quant_dynamic(k, k_bits, k_mode, group_size)
+    v_hat = fake_quant_dynamic(v, v_bits, v_mode, group_size)
+    return k_hat, v_hat
+
+
+# ------------------------------------------------------------- error metrics
+def relative_error(x: jax.Array, x_hat: jax.Array) -> jax.Array:
+    """Relative error Σ|X - X̂| / Σ|X| (paper §3.2 e_k / e_v / e_o).
+
+    Norm-ratio form rather than mean elementwise ratio: attention outputs have
+    near-zero entries that make the elementwise ratio diverge; the norm ratio
+    reproduces the paper's Table 9 magnitudes (KV8 ≈ 1e-2, KV2 ≈ 0.6-0.9)."""
+    x = x.astype(jnp.float32)
+    x_hat = x_hat.astype(jnp.float32)
+    return jnp.sum(jnp.abs(x - x_hat)) / jnp.maximum(jnp.sum(jnp.abs(x)), _EPS)
+
+
+def absolute_error(x: jax.Array, x_hat: jax.Array) -> jax.Array:
+    """mean(|X - X̂|) — used for attention scores e_a (already normalized)."""
+    return jnp.mean(jnp.abs(x - x_hat))
+
+
+def kv_cache_bytes(shape, bits: int, group_size: int = 32) -> int:
+    """Bytes for one quantized [..., S, D] tensor incl. scale/zero overhead
+    (fp16 scale + fp16 zero per group). Used by the throughput roofline."""
+    import numpy as np
+
+    n = int(np.prod(shape))
+    groups = n // min(group_size, shape[-1])
+    return n * bits // 8 + groups * 4

@@ -1,0 +1,156 @@
+"""KVTuner: the end-to-end offline tuning pipeline (paper Fig. 1).
+
+    capture → layer_errors → intra-layer pruning → inter-layer clustering
+            → NSGA-II over group assignments (accuracy × memory)
+            → Pareto frontier of KVTunerSchedules (saved as JSON)
+
+Online serving loads a schedule and pays zero decision overhead — precision is
+static per layer (repro.serving / repro.cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sensitivity
+from repro.core.clustering import LayerGroups, cluster_layers
+from repro.core.moo import MOOResult, NSGA2
+from repro.core.precision import (CANDIDATE_PAIRS, MODE_PER_TOKEN,
+                                  KVTunerSchedule, PrecisionPair)
+from repro.core.pruning import PrunedSpace, prune_intra_layer
+
+
+@dataclasses.dataclass
+class TunerReport:
+    mode: str
+    errors: sensitivity.LayerErrors
+    pruned: PrunedSpace
+    groups: LayerGroups
+    moo: MOOResult | None
+    frontier: list[KVTunerSchedule]
+
+    def space_reduction(self) -> tuple[float, float, float]:
+        """(full 9^L, after pruning Π|S_p|, after clustering Π over groups)."""
+        L = self.pruned.num_layers
+        return (float(len(CANDIDATE_PAIRS)) ** L, self.pruned.space_size(),
+                self.groups.search_space_size())
+
+    def best_under_bits(self, max_bits: float) -> KVTunerSchedule | None:
+        ok = [s for s in self.frontier if s.equivalent_bits <= max_bits + 1e-9]
+        if not ok:
+            return None
+        return min(ok, key=lambda s: s.objectives["loss"])
+
+
+def make_sim_evaluator(api, params, batches: Sequence[dict],
+                       metric: Callable | None = None,
+                       mode: str = MODE_PER_TOKEN):
+    """Accuracy evaluator over the calibration set: a single jitted forward
+    with traced per-layer bits (no retrace per candidate schedule).
+
+    ``metric(logits, batch) -> scalar loss`` defaults to next-token NLL.
+    Returns fn(bits_array [L_attn, 2]) -> float loss (lower = better).
+    """
+    cfg = api.cfg
+
+    def default_metric(logits, batch):
+        from repro.models import common
+        mask = batch.get("loss_mask")
+        return common.softmax_cross_entropy(
+            logits[:, :-1], batch["tokens"][:, 1:],
+            None if mask is None else mask[:, 1:])
+
+    metric = metric or default_metric
+
+    @jax.jit
+    def one(bits, batch):
+        logits, _ = api.forward(params, batch, sim_bits=bits, sim_mode=mode)
+        return metric(logits, batch)
+
+    def evaluate(bits_array: np.ndarray) -> float:
+        bits = jnp.asarray(bits_array, jnp.float32)
+        vals = [float(one(bits, b)) for b in batches]
+        return float(np.mean(vals))
+
+    return evaluate
+
+
+class KVTuner:
+    """Adaptive layer-wise mixed-precision KV quantization tuner."""
+
+    def __init__(self, api, params, mode: str = MODE_PER_TOKEN,
+                 pairs=CANDIDATE_PAIRS, group_eps: float = 0.05):
+        self.api = api
+        self.params = params
+        self.mode = mode
+        self.pairs = list(pairs)
+        self.group_eps = group_eps
+
+    # ------------------------------------------------------- offline stages
+    def analyze(self, calib_batches: Sequence[dict]) -> tuple[
+            sensitivity.LayerErrors, PrunedSpace, LayerGroups]:
+        caps = sensitivity.capture_activations(self.api, self.params,
+                                               list(calib_batches))
+        errors = sensitivity.layer_errors(caps, self.api.cfg, self.mode,
+                                          self.pairs)
+        pruned = prune_intra_layer(errors)
+        groups = cluster_layers(pruned, eps=self.group_eps)
+        return errors, pruned, groups
+
+    def search(self, calib_batches: Sequence[dict],
+               eval_batches: Sequence[dict] | None = None,
+               metric: Callable | None = None, generations: int = 12,
+               pop_size: int = 32, max_bits: float | None = None,
+               seed: int = 0) -> TunerReport:
+        errors, pruned, groups = self.analyze(calib_batches)
+        evaluator = make_sim_evaluator(
+            self.api, self.params, list(eval_batches or calib_batches),
+            metric=metric, mode=self.mode)
+        n_attn = len(self.api.cfg.attention_layers())
+
+        def geno_to_bits(g: tuple[int, ...]) -> np.ndarray:
+            bits = np.zeros((n_attn, 2), np.float32)
+            for gi, choice in enumerate(g):
+                pair = self.pairs[groups.candidates[gi][choice]]
+                for layer in groups.groups[gi]:
+                    bits[layer] = (pair.k_bits, pair.v_bits)
+            return bits
+
+        def geno_to_schedule(g: tuple[int, ...]) -> KVTunerSchedule:
+            return KVTunerSchedule.from_groups(
+                n_attn, groups.groups,
+                [self.pairs[groups.candidates[gi][c]] for gi, c in enumerate(g)],
+                mode=self.mode, model_name=self.api.cfg.name)
+
+        def evaluate(g: tuple[int, ...]) -> tuple[float, float]:
+            bits = geno_to_bits(g)
+            return float(bits.mean()), evaluator(bits)
+
+        # seed with the uniform schedules expressible in every group
+        seeds = []
+        for pair in (PrecisionPair(8, 8), PrecisionPair(8, 4),
+                     PrecisionPair(4, 4), PrecisionPair(4, 2)):
+            try:
+                g = tuple(cand.index(self.pairs.index(pair))
+                          for cand in groups.candidates)
+                seeds.append(g)
+            except ValueError:
+                pass
+
+        nsga = NSGA2([len(c) for c in groups.candidates], evaluate,
+                     pop_size=pop_size, max_bits=max_bits, seed=seed)
+        result = nsga.run(generations=generations, seeds=seeds)
+
+        frontier = []
+        for idx in sorted(result.front,
+                          key=lambda i: result.objectives[i][0]):
+            sched = geno_to_schedule(result.genotypes[idx])
+            sched.objectives = {"bits": float(result.objectives[idx][0]),
+                                "loss": float(result.objectives[idx][1])}
+            frontier.append(sched)
+        return TunerReport(mode=self.mode, errors=errors, pruned=pruned,
+                           groups=groups, moo=result, frontier=frontier)

@@ -1,0 +1,99 @@
+"""Synthetic datasets, including the error-amplifying calibration task.
+
+The paper's calibration-set design principle (§5.3): long-context *reasoning*
+chains where a single flipped token invalidates the final answer (their GSM8K
+CoT example, Table 1). Offline we mirror that with **modular arithmetic
+chains**: the model must track a running value across many steps — any
+intermediate attention error corrupts every later step, maximizing the
+separation between KV precision pairs. A copy/recall task exercises retrieval
+heads (the quantization-sensitive pattern of §4.4 / Lemma 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# Token map: digits 0..9 → ids 0..9, ops and control tokens follow.
+PAD, BOS, EOS, EQ, PLUS, MINUS, SEP, QUERY = 10, 11, 12, 13, 14, 15, 16, 17
+VOCAB_BASE = 18
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskConfig:
+    vocab_size: int = 64          # ≥ VOCAB_BASE; extra ids used by recall keys
+    modulus: int = 10
+    chain_len: int = 8            # arithmetic steps per chain
+    seq_len: int = 64
+
+
+def chain_batch(cfg: TaskConfig, batch: int, rng: np.random.Generator):
+    """Running modular arithmetic: BOS a0 ± d1 = a1 ± d2 = a2 ... EOS.
+
+    Every `=` position must emit the correct running value — the LM loss on
+    those positions is the calibration metric (exact-match accuracy is the
+    fraction of chains with *all* results correct, mirroring GSM8K's
+    final-answer scoring where one flip breaks the chain).
+    """
+    toks = np.full((batch, cfg.seq_len), PAD, np.int32)
+    mask = np.zeros((batch, cfg.seq_len), np.float32)
+    for b in range(batch):
+        val = int(rng.integers(cfg.modulus))
+        seq = [BOS, val]
+        results = []
+        for _ in range(cfg.chain_len):
+            d = int(rng.integers(1, cfg.modulus))
+            op = PLUS if rng.random() < 0.5 else MINUS
+            val = (val + d) % cfg.modulus if op == PLUS else \
+                (val - d) % cfg.modulus
+            seq.extend([op, d, EQ, val])
+            results.append(len(seq) - 1)
+        seq.append(EOS)
+        seq = seq[:cfg.seq_len]
+        toks[b, :len(seq)] = seq
+        for p in results:
+            if p < cfg.seq_len:
+                mask[b, p] = 1.0  # loss/accuracy measured at result tokens
+    return {"tokens": toks, "loss_mask": mask}
+
+
+def recall_batch(cfg: TaskConfig, batch: int, rng: np.random.Generator,
+                 n_pairs: int = 6):
+    """Key-value recall: SEP k1 v1 k2 v2 ... QUERY k_i → v_i.
+    Exercises content-addressed (retrieval-head) attention."""
+    n_keys = cfg.vocab_size - VOCAB_BASE
+    toks = np.full((batch, cfg.seq_len), PAD, np.int32)
+    mask = np.zeros((batch, cfg.seq_len), np.float32)
+    for b in range(batch):
+        keys = rng.choice(n_keys, size=n_pairs, replace=False) + VOCAB_BASE
+        vals = rng.integers(0, 10, size=n_pairs)
+        seq = [BOS]
+        for k, v in zip(keys, vals):
+            seq.extend([SEP, int(k), int(v)])
+        qi = int(rng.integers(n_pairs))
+        seq.extend([QUERY, int(keys[qi]), int(vals[qi]), EOS])
+        seq = seq[:cfg.seq_len]
+        toks[b, :len(seq)] = seq
+        ans = len(seq) - 2
+        if 0 < ans < cfg.seq_len:
+            mask[b, ans] = 1.0
+    return {"tokens": toks, "loss_mask": mask}
+
+
+def mixed_batch(cfg: TaskConfig, batch: int, rng: np.random.Generator):
+    a = chain_batch(cfg, batch // 2, rng)
+    b = recall_batch(cfg, batch - batch // 2, rng)
+    return {k: np.concatenate([a[k], b[k]]) for k in a}
+
+
+def exact_match_accuracy(logits, batch) -> float:
+    """Fraction of *sequences* whose every masked position is argmax-correct
+    (chain-level accuracy: one intermediate flip fails the sample — the
+    paper's error-accumulation story in miniature)."""
+    import numpy as np
+
+    preds = np.asarray(logits).argmax(-1)[:, :-1]
+    targets = np.asarray(batch["tokens"])[:, 1:]
+    mask = np.asarray(batch["loss_mask"])[:, 1:] > 0
+    correct = (preds == targets) | ~mask
+    return float(np.all(correct, axis=1).mean())

@@ -1,0 +1,131 @@
+"""Logical-axis sharding rules → PartitionSpecs (MaxText-style), plus an
+ambient ``shard_hint`` used inside model code.
+
+Model code annotates tensors with *logical* axis names ("batch", "kv_seq",
+"experts", ...). A ``ShardingRules`` table maps logical names to mesh axes.
+Rules are arch-aware: dims that don't divide the mesh axis fall back to
+replication (JAX rejects uneven shards — verified empirically), which is how
+e.g. arctic's 56 heads or grok's 8 experts are handled on a 16-wide model axis.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Default logical → mesh-axis table. ``batch`` composes pod+data on the
+# multi-pod mesh; `mesh_axes` resolves names missing from the mesh.
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "flat_tokens": ("pod", "data"),
+    "model": ("model",),        # raw TP axis (weight in/out-proj dims)
+    "fsdp": ("data",),          # 2nd weight-sharding axis for big matrices
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "d_model": (),              # replicated by default (residual stream)
+    "d_ff": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "expert_ff": ("model",),
+    "expert_cap": ("data",),
+    "kv_seq": ("model",),       # KV cache sequence sharding (decode)
+    "kv_seq_long": ("data", "model"),  # long_500k batch=1
+    "seq": (),                  # activations seq usually unsharded
+    "mamba_inner": ("model",),
+    "layers": (),
+    "none": (),
+}
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    mesh: Mesh
+    table: dict[str, tuple[str, ...]]
+
+    def axes(self, logical: str, dim_size: int | None = None):
+        names = [a for a in self.table.get(logical, ()) if a in self.mesh.axis_names]
+        if not names:
+            return None
+        # greedy longest prefix that divides the dim (JAX rejects uneven shards)
+        if dim_size is not None:
+            kept = []
+            total = 1
+            for a in names:
+                if dim_size % (total * self.mesh.shape[a]) == 0:
+                    kept.append(a)
+                    total *= self.mesh.shape[a]
+                else:
+                    break
+            names = kept
+        if not names:
+            return None
+        return tuple(names) if len(names) > 1 else names[0]
+
+    def spec(self, *logical, shape: Sequence[int] | None = None) -> P:
+        parts = []
+        used: set = set()
+        for i, name in enumerate(logical):
+            dim = None if shape is None else shape[i]
+            ax = self.axes(name, dim) if name else None
+            # a mesh axis may shard at most one dim — earlier dims win
+            if isinstance(ax, tuple):
+                ax = tuple(a for a in ax if a not in used) or None
+                if isinstance(ax, tuple) and len(ax) == 1:
+                    ax = ax[0]
+            elif ax in used:
+                ax = None
+            if isinstance(ax, tuple):
+                used.update(ax)
+            elif ax:
+                used.add(ax)
+            # re-check divisibility after dedup pruning
+            if ax is not None and dim is not None:
+                total = 1
+                for a in (ax if isinstance(ax, tuple) else (ax,)):
+                    total *= self.mesh.shape[a]
+                if dim % total:
+                    ax = None
+            parts.append(ax)
+        return P(*parts)
+
+    def sharding(self, *logical, shape=None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*logical, shape=shape))
+
+
+_ACTIVE: contextvars.ContextVar[ShardingRules | None] = \
+    contextvars.ContextVar("sharding_rules", default=None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: ShardingRules | None):
+    tok = _ACTIVE.set(rules)
+    try:
+        yield rules
+    finally:
+        _ACTIVE.reset(tok)
+
+
+def active_rules() -> ShardingRules | None:
+    return _ACTIVE.get()
+
+
+def shard_hint(x: jax.Array, *logical: str) -> jax.Array:
+    """with_sharding_constraint if rules are active; no-op otherwise (tests,
+    single-device smoke runs). Logical names that miss divisibility replicate."""
+    rules = _ACTIVE.get()
+    if rules is None or len(logical) != x.ndim:
+        return x
+    spec = rules.spec(*logical, shape=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+def make_rules(mesh: Mesh, overrides: Mapping[str, tuple[str, ...]] | None = None,
+               ) -> ShardingRules:
+    table = dict(DEFAULT_RULES)
+    if overrides:
+        table.update(overrides)
+    return ShardingRules(mesh=mesh, table=table)

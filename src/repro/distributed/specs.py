@@ -1,0 +1,207 @@
+"""PartitionSpec assignment for params / optimizer state / decode state /
+batches, by pytree path + shape (divisibility-safe via ShardingRules).
+
+Policy (DESIGN.md §4):
+* weights: Megatron TP on the model axis (col-parallel in-proj, row-parallel
+  out-proj, vocab-parallel embeddings/head; experts on model when E divides);
+* any tensor still larger than ``fsdp_threshold`` bytes per chip gains a
+  second sharding axis over data (FSDP-style 2-D weight sharding) — this is
+  what fits arctic-480b / grok-1-314b / deepseek-67b on 16 GB v5e chips;
+* optimizer moments always take the extra data axis (ZeRO-1);
+* activations between blocks shard batch over (pod, data) and sequence over
+  model (Megatron sequence parallelism) — see DEFAULT_RULES;
+* KV cache shards over batch × sequence (KV heads ≤ 16 for every assigned
+  arch, so head-sharding is off the table — verified: JAX rejects uneven).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import ShardingRules
+
+# name → per-dim logical axes (by rank). "_" = replicated dim.
+_IN_PROJ = ("fsdp?", "model")      # [D, X] col-parallel
+_OUT_PROJ = ("model", "fsdp?")     # [X, D] row-parallel
+_PARAM_TABLE: dict[str, tuple[str, ...]] = {
+    "embed": ("fsdp?", "model"),   # [V, D]: D-sharded gather-free lookup
+    "lm_head": ("fsdp?", "model"),  # [D, V] vocab-parallel logits
+    "wq": _IN_PROJ, "wk": _IN_PROJ, "wv": _IN_PROJ, "wo": _OUT_PROJ,
+    "w_gate": _IN_PROJ, "w_up": _IN_PROJ, "w_down": _OUT_PROJ,
+    "in_proj": _IN_PROJ, "out_proj": _OUT_PROJ, "x_proj": _OUT_PROJ,
+    "dt_proj": ("_", "model"), "A_log": ("model", "_"), "D": ("model",),
+    "conv_w": ("_", "model"), "conv_b": ("model",),
+    "dt_bias": ("model",), "w_if": ("_", "_"), "if_bias": ("_",),
+    "w_in": _IN_PROJ, "w_out": _OUT_PROJ, "r": ("_", "_", "_"),
+    "router": ("_", "_"),
+    "proj": ("_", "_"), "mask_emb": ("_",),
+    "w1": ("_", "_"), "w2": ("_", "_"),  # vlm projector (small)
+}
+# stacked expert weights [E, D, F] / [E, F, D]
+_MOE_IN = ("experts", "_", "expert_ff")
+_MOE_OUT = ("experts", "expert_ff", "_")
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "name"):       # GetAttrKey: dataclass / namedtuple fields
+            out.append(str(p.name))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return out
+
+
+def _param_logical(path_names: list[str], shape: tuple[int, ...]) -> list[str]:
+    name = path_names[-1] if path_names else ""
+    in_moe = "moe" in path_names
+    if in_moe and name in ("w_gate", "w_up"):
+        base = list(_MOE_IN)
+    elif in_moe and name == "w_down":
+        base = list(_MOE_OUT)
+    elif name in _PARAM_TABLE:
+        base = list(_PARAM_TABLE[name])
+    else:
+        base = ["_"] * len(shape)
+    # stacked-layer leading dim (scan plans add [L, ...])
+    while len(base) < len(shape):
+        base = ["_"] + base
+    base = base[-len(shape):] if len(base) > len(shape) else base
+    return base
+
+
+@dataclasses.dataclass
+class SpecBuilder:
+    rules: ShardingRules
+    fsdp_threshold: int = 128 * 1024 * 1024  # bytes per chip after TP
+
+    def _resolve(self, logical: list[str], shape, *, force_fsdp: bool,
+                 itemsize: int = 2) -> P:
+        parts: list = []
+        used: set = set()
+        for dim, (name, size) in enumerate(zip(logical, shape)):
+            ax = None
+            if name not in ("_", "fsdp?"):
+                ax = self.rules.axes(name, size)
+                # a mesh axis shards at most one dim — earlier dims win
+                if isinstance(ax, tuple):
+                    ax = tuple(a for a in ax if a not in used) or None
+                    if isinstance(ax, tuple):
+                        if len(ax) == 1:
+                            ax = ax[0]
+                        if ax is not None:
+                            total = 1
+                            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                                total *= self.rules.mesh.shape[a]
+                            if size % total:
+                                ax = None
+                elif ax in used:
+                    ax = None
+                if isinstance(ax, tuple):
+                    used.update(ax)
+                elif ax:
+                    used.add(ax)
+            parts.append(ax)
+        # second axis: FSDP over data for big tensors / optimizer moments
+        per_chip = float(np.prod(shape) * itemsize)
+        for ax in used:
+            per_chip /= self.rules.mesh.shape[ax]
+        want_fsdp = force_fsdp or per_chip > self.fsdp_threshold
+        if want_fsdp:
+            fsdp_axes = [a for a in self.rules.table.get("fsdp", ())
+                         if a in self.rules.mesh.axis_names and a not in used]
+            # never FSDP the leading stacked-layers dim of scanned weights —
+            # each scan step would gather its slice across the data axis
+            start = 1 if len(shape) >= 3 else 0
+            for dim, name in list(enumerate(logical))[start:]:
+                if parts[dim] is None and fsdp_axes:
+                    total = int(np.prod([self.rules.mesh.shape[a]
+                                         for a in fsdp_axes]))
+                    if shape[dim] % total == 0 and shape[dim] >= total:
+                        parts[dim] = tuple(fsdp_axes) if len(fsdp_axes) > 1 \
+                            else fsdp_axes[0]
+                        break
+        return P(*parts)
+
+    # ------------------------------------------------------------ params
+    def params(self, abstract_params, force_fsdp: bool = False):
+        def assign(path, leaf):
+            names = _path_names(path)
+            itemsize = jax.dtypes.canonicalize_dtype(leaf.dtype).itemsize
+            logical = _param_logical(names, leaf.shape)
+            return self._resolve(logical, leaf.shape, force_fsdp=force_fsdp,
+                                 itemsize=itemsize)
+        return jax.tree_util.tree_map_with_path(assign, abstract_params)
+
+    def train_state(self, abstract_state):
+        """TrainState: params as usual; mu/nu/ef always FSDP (ZeRO-1)."""
+        def assign(path, leaf):
+            names = _path_names(path)
+            itemsize = jax.dtypes.canonicalize_dtype(leaf.dtype).itemsize
+            logical = _param_logical([n for n in names
+                                      if n not in ("mu", "nu", "residual",
+                                                   "params", "opt", "ef")],
+                                     leaf.shape)
+            force = any(n in ("mu", "nu", "residual") for n in names)
+            if not leaf.shape:
+                return P()
+            return self._resolve(logical, leaf.shape, force_fsdp=force,
+                                 itemsize=itemsize)
+        return jax.tree_util.tree_map_with_path(assign, abstract_state)
+
+    # ------------------------------------------------------------- decode
+    def decode_state(self, abstract_state, long_context: bool = False):
+        seq_rule = "kv_seq_long" if long_context else "kv_seq"
+
+        def assign(path, leaf):
+            names = _path_names(path)
+            name = names[-1] if names else ""
+            shape = leaf.shape
+            r = self.rules
+            if name in ("k_codes", "v_codes") and len(shape) == 4:
+                return r.spec("batch", "none", seq_rule, "none", shape=shape)
+            if name in ("k_scale", "k_zero", "v_scale", "v_zero"):
+                if len(shape) == 5:  # grouped scales: dim2 follows seq groups
+                    return r.spec("batch", "none", seq_rule, "none", "none",
+                                  shape=shape)
+                return P()
+            if name in ("k_res", "v_res"):
+                return r.spec("batch", "none", "none", "none", shape=shape)
+            if name == "ssm":       # mamba [B, di, N]
+                return r.spec("batch", "mamba_inner", "none", shape=shape)
+            if name == "conv":      # [B, K-1, di]
+                return r.spec("batch", "none", "mamba_inner", shape=shape)
+            if name == "c" and len(shape) == 4:  # mLSTM [B,H,dk,dv]
+                return r.spec("batch", "none", "none", "mamba_inner", shape=shape)
+            if name in ("n",) and len(shape) == 3:
+                return r.spec("batch", "none", "none", shape=shape)
+            if len(shape) >= 1 and shape and shape[0] > 1:
+                return r.spec("batch", *(["none"] * (len(shape) - 1)),
+                              shape=shape)
+            return P()
+
+        return jax.tree_util.tree_map_with_path(assign, abstract_state)
+
+    # -------------------------------------------------------------- batch
+    def batch(self, abstract_batch):
+        def assign(path, leaf):
+            return self.rules.spec("batch", *(["none"] * (len(leaf.shape) - 1)),
+                                   shape=leaf.shape)
+        return jax.tree_util.tree_map_with_path(assign, abstract_batch)
+
+    # ------------------------------------------------------------ helpers
+    def named(self, spec_tree):
+        mesh = self.rules.mesh
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+
+def abstract_like(fn, *args, **kw):
+    """jax.eval_shape convenience returning ShapeDtypeStruct pytrees."""
+    return jax.eval_shape(fn, *args, **kw)

@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: asymmetric KV quantization with in-VMEM packing.
+
+Tiles [S_blk, D] KV blocks HBM→VMEM, computes per-token or per-channel
+(scale, zero) on the VPU, packs 2/4-bit codes into uint8 along the lane
+(head_dim) axis, and writes packed codes + f32 scales back to HBM.
+
+Block geometry: S_blk = 128 rows (16 × 8-sublane tiles), D = head_dim on the
+lane axis (64–256 for the assigned archs). Per-channel groups span 32 rows —
+S_blk is a multiple of the group so each block owns whole groups (no
+cross-block reductions).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.precision import MODE_PER_CHANNEL, MODE_PER_TOKEN
+
+DEFAULT_BLOCK_S = 128
+
+
+def _pack_lanes(codes: jax.Array, bits: int) -> jax.Array:
+    """uint8 codes [S, D] → packed uint8 [S, D·bits/8] (lane-axis packing)."""
+    if bits == 8:
+        return codes.astype(jnp.uint8)
+    vpb = 8 // bits
+    s, d = codes.shape
+    grouped = codes.reshape(s, d // vpb, vpb).astype(jnp.uint32)
+    shifts = jnp.arange(vpb, dtype=jnp.uint32) * bits
+    return jnp.sum(grouped << shifts, axis=-1).astype(jnp.uint8)
+
+
+def _kvquant_kernel(x_ref, codes_ref, scale_ref, zero_ref, *, bits: int,
+                    mode: str, group_size: int):
+    x = x_ref[0].astype(jnp.float32)  # [S_blk, D]
+    s_blk, d = x.shape
+    levels = float(2 ** bits - 1)
+    if mode == MODE_PER_CHANNEL:
+        # groups of `group_size` rows share one (scale, zero) per channel
+        xg = x.reshape(s_blk // group_size, group_size, d)
+        mn = jnp.min(xg, axis=1, keepdims=True)
+        mx = jnp.max(xg, axis=1, keepdims=True)
+        scale = jnp.maximum((mx - mn) / levels, 1e-8)
+        q = jnp.clip(jnp.round((xg - mn) / scale), 0, levels)
+        codes = q.reshape(s_blk, d).astype(jnp.uint8)
+        scale_ref[0] = scale
+        zero_ref[0] = mn
+    else:
+        g = min(group_size, d)
+        xg = x.reshape(s_blk, d // g, g)
+        mn = jnp.min(xg, axis=2, keepdims=True)
+        mx = jnp.max(xg, axis=2, keepdims=True)
+        scale = jnp.maximum((mx - mn) / levels, 1e-8)
+        q = jnp.clip(jnp.round((xg - mn) / scale), 0, levels)
+        codes = q.reshape(s_blk, d).astype(jnp.uint8)
+        scale_ref[0] = scale
+        zero_ref[0] = mn
+    codes_ref[0] = _pack_lanes(codes, bits)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "mode", "group_size",
+                                             "block_s", "interpret"))
+def kvquant(x: jax.Array, bits: int, mode: str = MODE_PER_TOKEN,
+            group_size: int = 32, block_s: int = DEFAULT_BLOCK_S,
+            interpret: bool = True):
+    """x [N, S, D] → (codes [N,S,D·bits/8] u8, scale, zero f32) matching the
+    repro.core.quant layout. N is flattened batch×kv_heads."""
+    n, s, d = x.shape
+    block_s = min(block_s, s)
+    assert s % block_s == 0 and block_s % group_size == 0, (s, block_s)
+    ns = s // block_s
+    cd = d if bits == 8 else d * bits // 8
+    g = min(group_size, d)
+    if mode == MODE_PER_CHANNEL:
+        sshape = (n, s // group_size, 1, d)
+        sblock = (1, block_s // group_size, 1, d)
+        smap = lambda i, j: (i, j, 0, 0)
+    else:
+        sshape = (n, s, d // g, 1)
+        sblock = (1, block_s, d // g, 1)
+        smap = lambda i, j: (i, j, 0, 0)
+
+    codes, scale, zero = pl.pallas_call(
+        functools.partial(_kvquant_kernel, bits=bits, mode=mode,
+                          group_size=group_size),
+        grid=(n, ns),
+        in_specs=[pl.BlockSpec((1, block_s, d), lambda i, j: (i, j, 0))],
+        out_specs=[
+            pl.BlockSpec((1, block_s, cd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec(sblock, smap),
+            pl.BlockSpec(sblock, smap),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, s, cd), jnp.uint8),
+            jax.ShapeDtypeStruct(sshape, jnp.float32),
+            jax.ShapeDtypeStruct(sshape, jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return codes, scale, zero

@@ -1,0 +1,92 @@
+"""jit'd wrappers binding the Pallas kernels to the framework's cache layout.
+
+``interpret`` defaults to True off-TPU (the kernel body runs in Python on CPU
+for validation); on a TPU backend the compiled kernels run natively.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.cache.kvcache import LayerKVCache, _kv_modes
+from repro.core.precision import MODE_PER_TOKEN
+from repro.kernels import kvquant as kvquant_kernel
+from repro.kernels import qdecode as qdecode_kernel
+from repro.kernels import ref
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def kvquant(x: jax.Array, bits: int, mode: str = MODE_PER_TOKEN,
+            group_size: int = 32, interpret: bool | None = None):
+    """x [B, H, S, D] → (codes, scale, zero) in cache layout."""
+    b, h, s, d = x.shape
+    interpret = default_interpret() if interpret is None else interpret
+    codes, scale, zero = kvquant_kernel.kvquant(
+        x.reshape(b * h, s, d), bits, mode, group_size,
+        interpret=interpret)
+    cd = codes.shape[-1]
+    codes = codes.reshape(b, h, s, cd)
+    scale = scale.reshape(b, h, *scale.shape[1:])
+    zero = zero.reshape(b, h, *zero.shape[1:])
+    return codes, scale, zero
+
+
+def qdecode_attention(q: jax.Array, cache: LayerKVCache, positions, kind: str,
+                      window: int, interpret: bool | None = None) -> jax.Array:
+    """Fused decode attention over a quantized cache.
+
+    q: [B, 1, H, hd] (one new token, post-rope). Main segment goes through the
+    Pallas kernel; the bf16 residual window is attended in plain XLA and the
+    two partial softmaxes are merged (flash combine). Returns [B, 1, H, hd].
+
+    Restriction: windowed ring caches (gemma local layers) use the XLA path —
+    their ring position arithmetic is not worth a kernel (bounded S ≤ window).
+    """
+    if kind == "local" or cache.window:
+        raise NotImplementedError("windowed layers use the XLA decode path")
+    interpret = default_interpret() if interpret is None else interpret
+    b, one, h, d = q.shape
+    hkv = cache.k_res.shape[1]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, d)
+    k_mode, v_mode = _kv_modes(cache.mode)
+
+    r = cache.group_size
+    n_main = jnp.minimum(cache.length // r * r, cache.s_cap)
+    n_valid = jnp.broadcast_to(n_main, (b,))
+
+    def seg(codes, scale, zero, bits):
+        if bits >= 16:
+            return codes, jnp.zeros((1,), jnp.float32), jnp.zeros((1,), jnp.float32)
+        return codes, scale, zero
+
+    kc, ks, kz = seg(cache.k_codes, cache.k_scale, cache.k_zero, cache.k_bits)
+    vc, vs, vz = seg(cache.v_codes, cache.v_scale, cache.v_zero, cache.v_bits)
+
+    o_main, m_main, l_main = qdecode_kernel.qdecode(
+        qg, kc, ks, kz, vc, vs, vz, n_valid,
+        k_bits=cache.k_bits, v_bits=cache.v_bits, k_mode=k_mode, v_mode=v_mode,
+        group_size=cache.group_size, interpret=interpret)
+
+    # Residual window (≤ R recent bf16 tokens): plain XLA partial softmax.
+    n_res = cache.length - cache.length // r * r
+    k_res = cache.k_res.astype(jnp.float32)  # [B,Hkv,R,D]
+    v_res = cache.v_res.astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bhsd->bhgs", qg.astype(jnp.float32), k_res) \
+        / jnp.sqrt(float(d))
+    valid = (jnp.arange(cache.residual_len) < n_res)[None, None, None, :]
+    scores = jnp.where(valid, scores, -jnp.inf)
+    m_res = jnp.max(scores, axis=-1)
+    m_res_safe = jnp.where(jnp.isfinite(m_res), m_res, qdecode_kernel.NEG)
+    p = jnp.where(valid, jnp.exp(scores - m_res_safe[..., None]), 0.0)
+    l_res = jnp.sum(p, axis=-1)
+    o_res = jnp.einsum("bhgs,bhsd->bhgd", p, v_res)
+
+    out = ref.softmax_merge([(o_main, m_main, l_main),
+                             (o_res, m_res_safe, l_res)])
+    return out.reshape(b, 1, h, d).astype(q.dtype)

@@ -1,0 +1,166 @@
+"""Pallas TPU kernel: fused dequantization + flash decode attention over the
+packed mixed-precision KV main segment.
+
+This is the paper's hot spot mapped to TPU (DESIGN.md §3): decode attention is
+HBM-bandwidth-bound; quantized KV reduces the bytes streamed, and fusing
+dequant into the online-softmax loop means the bf16 K/V never materialize in
+HBM. Each KVTuner layer gets a **static** (k_bits, v_bits) specialization —
+coarse-grained per-layer precision keeps the kernel free of dynamic control
+flow, unlike token-level methods (QAQ/MiKV) that cannot avoid it.
+
+Geometry per grid step (b, h_kv, s_blk):
+  q tile      [G, D]       (G = query heads per kv head, MXU lhs)
+  K codes     [S_blk, D·kb/8] uint8 → unpack+dequant in VMEM → [S_blk, D]
+  scores      [G, S_blk]   (MXU), online-softmax into VMEM scratch acc [G, D]
+S_blk = 128 rows; D (lanes) is 64–256 for the assigned archs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.precision import MODE_PER_CHANNEL, MODE_PER_TOKEN
+
+DEFAULT_BLOCK_S = 128
+NEG = -1e30
+
+
+def _unpack_lanes(packed: jax.Array, bits: int, d: int) -> jax.Array:
+    if bits == 8:
+        return packed.astype(jnp.uint8)
+    vpb = 8 // bits
+    mask = jnp.uint32((1 << bits) - 1)
+    shifts = jnp.arange(vpb, dtype=jnp.uint32) * bits
+    s = packed.shape[0]
+    codes = (packed.astype(jnp.uint32)[..., None] >> shifts) & mask
+    return codes.reshape(s, d).astype(jnp.uint8)
+
+
+def _dequant_block(codes_ref, scale_ref, zero_ref, bits, mode, group_size, d):
+    """→ [S_blk, D] f32 from one VMEM-resident packed block."""
+    if bits >= 16:
+        return codes_ref[0, 0].astype(jnp.float32)
+    raw = _unpack_lanes(codes_ref[0, 0], bits, d).astype(jnp.float32)
+    s_blk = raw.shape[0]
+    if mode == MODE_PER_CHANNEL:
+        sc = scale_ref[0, 0]  # [S_blk/g, 1, D]
+        z = zero_ref[0, 0]
+        rg = raw.reshape(s_blk // group_size, group_size, d)
+        return (rg * sc + z).reshape(s_blk, d)
+    g = min(group_size, d)
+    sc = scale_ref[0, 0]      # [S_blk, D/g, 1]
+    z = zero_ref[0, 0]
+    rg = raw.reshape(s_blk, d // g, g)
+    return (rg * sc + z).reshape(s_blk, d)
+
+
+def _qdecode_kernel(q_ref, kc_ref, ks_ref, kz_ref, vc_ref, vs_ref, vz_ref,
+                    nv_ref, o_ref, m_ref, l_ref, acc_sc, m_sc, l_sc, *,
+                    k_bits, v_bits, k_mode, v_mode, group_size, block_s,
+                    num_blocks, d):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+        m_sc[...] = jnp.full_like(m_sc, NEG)
+        l_sc[...] = jnp.zeros_like(l_sc)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # [G, D]
+    k = _dequant_block(kc_ref, ks_ref, kz_ref, k_bits, k_mode, group_size, d)
+    scores = (q @ k.T) / jnp.sqrt(float(d))  # [G, S_blk]
+
+    pos = s_idx * block_s + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)
+    valid = pos < nv_ref[0, 0]
+    scores = jnp.where(valid, scores, NEG)
+
+    m_prev, l_prev = m_sc[...], l_sc[...]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new) * valid.astype(jnp.float32)
+
+    v = _dequant_block(vc_ref, vs_ref, vz_ref, v_bits, v_mode, group_size, d)
+    acc_sc[...] = acc_sc[...] * alpha + p @ v
+    l_sc[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    m_sc[...] = m_new
+
+    @pl.when(s_idx == num_blocks - 1)
+    def _done():
+        o_ref[0, 0] = acc_sc[...]
+        m_ref[0, 0] = m_sc[...][:, 0]
+        l_ref[0, 0] = l_sc[...][:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "k_bits", "v_bits", "k_mode", "v_mode", "group_size", "block_s",
+    "interpret"))
+def qdecode(q, k_codes, k_scale, k_zero, v_codes, v_scale, v_zero, n_valid, *,
+            k_bits: int, v_bits: int, k_mode: str, v_mode: str,
+            group_size: int = 32, block_s: int = DEFAULT_BLOCK_S,
+            interpret: bool = True):
+    """Fused dequant+attention over the packed main segment.
+
+    q [B, Hkv, G, D]; codes [B, Hkv, S, D·bits/8] (raw dtype when bits=16);
+    n_valid [B] i32. Returns (o [B,Hkv,G,D] f32 un-normalized, m, l) for
+    softmax-merging with the residual window (repro.kernels.ref.softmax_merge).
+    """
+    b, hkv, g, d = q.shape
+    s = k_codes.shape[2]
+    block_s = min(block_s, s)
+    assert s % block_s == 0 and block_s % group_size == 0
+    ns = s // block_s
+
+    def seg_specs(bits, mode):
+        cd = d if bits >= 16 else d * bits // 8
+        cspec = pl.BlockSpec((1, 1, block_s, cd), lambda b_, h, j: (b_, h, j, 0))
+        if bits >= 16:
+            dummy = pl.BlockSpec((1,), lambda b_, h, j: (0,))
+            return cspec, dummy, dummy
+        if mode == MODE_PER_CHANNEL:
+            sspec = pl.BlockSpec((1, 1, block_s // group_size, 1, d),
+                                 lambda b_, h, j: (b_, h, j, 0, 0))
+        else:
+            gg = min(group_size, d)
+            sspec = pl.BlockSpec((1, 1, block_s, d // gg, 1),
+                                 lambda b_, h, j: (b_, h, j, 0, 0))
+        return cspec, sspec, sspec
+
+    kc_spec, ks_spec, kz_spec = seg_specs(k_bits, k_mode)
+    vc_spec, vs_spec, vz_spec = seg_specs(v_bits, v_mode)
+
+    kernel = functools.partial(
+        _qdecode_kernel, k_bits=k_bits, v_bits=v_bits, k_mode=k_mode,
+        v_mode=v_mode, group_size=group_size, block_s=block_s, num_blocks=ns,
+        d=d)
+
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid=(b, hkv, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, h, j: (b_, h, 0, 0)),
+            kc_spec, ks_spec, kz_spec, vc_spec, vs_spec, vz_spec,
+            pl.BlockSpec((1, 1), lambda b_, h, j: (b_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, h, j: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, g), lambda b_, h, j: (b_, h, 0)),
+            pl.BlockSpec((1, 1, g), lambda b_, h, j: (b_, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_codes, k_scale, k_zero, v_codes, v_scale, v_zero,
+      n_valid[:, None].astype(jnp.int32))
+    return o, m, l

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for the Pallas kernels. Every kernel in this package is
+validated against these references in interpret mode across shape/dtype sweeps
+(tests/test_kernels.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.precision import MODE_PER_CHANNEL, MODE_PER_TOKEN
+
+
+def kvquant_ref(x: jax.Array, bits: int, mode: str, group_size: int = 32):
+    """x [BH, S, D] → (codes packed uint8, scale f32, zero f32) with the
+    repro.core.quant grouped-scale convention."""
+    qt = quant.quantize(x, bits, mode, group_size)
+    return qt.codes, qt.scale, qt.zero
+
+
+def qdecode_ref(q: jax.Array, k_codes, k_scale, k_zero, v_codes, v_scale,
+                v_zero, n_valid, *, k_bits: int, v_bits: int, k_mode: str,
+                v_mode: str, group_size: int = 32):
+    """Fused dequant + single-token attention over the packed main segment.
+
+    q [B, Hkv, G, D] (G = query heads per kv head); codes [B, Hkv, S, D·bits/8].
+    Returns partial-softmax stats (o [B,Hkv,G,D] f32, m [B,Hkv,G], l [B,Hkv,G])
+    so the caller can merge with the bf16 residual window.
+    """
+    b, hkv, g, d = q.shape
+    s = k_codes.shape[2]
+
+    def deq(codes, scale, zero, bits, mode):
+        if bits >= 16:
+            return codes.astype(jnp.float32)
+        raw = quant.unpack_codes(codes, bits).astype(jnp.float32)
+        if mode == MODE_PER_CHANNEL:
+            rg = raw.reshape(b, hkv, s // group_size, group_size, d)
+            return (rg * scale + zero).reshape(b, hkv, s, d)
+        gsz = min(group_size, d)
+        rg = raw.reshape(b, hkv, s, d // gsz, gsz)
+        return (rg * scale + zero).reshape(b, hkv, s, d)
+
+    k = deq(k_codes, k_scale, k_zero, k_bits, k_mode)
+    v = deq(v_codes, v_scale, v_zero, v_bits, v_mode)
+    scores = jnp.einsum("bhgd,bhsd->bhgs", q.astype(jnp.float32), k) / jnp.sqrt(d)
+    mask = (jnp.arange(s)[None, :] < n_valid[:, None])[:, None, None, :]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    m = jnp.max(scores, axis=-1)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(scores - m_safe[..., None])
+    p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhgs,bhsd->bhgd", p, v)
+    return o, m_safe, l
+
+
+def softmax_merge(parts):
+    """Merge [(o_i, m_i, l_i)] partial attention results (flash combine).
+    o_i are un-normalized (Σ p·V); returns normalized output f32."""
+    m = parts[0][1]
+    for _, mi, _ in parts[1:]:
+        m = jnp.maximum(m, mi)
+    l_tot = 0.0
+    o_tot = 0.0
+    for o_i, m_i, l_i in parts:
+        c = jnp.exp(m_i - m)
+        l_tot = l_tot + c * l_i
+        o_tot = o_tot + c[..., None] * o_i
+    return o_tot / jnp.maximum(l_tot, 1e-20)[..., None]

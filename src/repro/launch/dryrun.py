@@ -1,0 +1,139 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape ×
+mesh) cell on placeholder devices; record memory/cost/roofline terms.
+
+The two lines above MUST precede any other import (jax locks the device count
+on first init). Results are written incrementally to
+``experiments/dryrun/<arch>__<shape>__<mesh>.json`` so reruns resume.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_CONFIGS
+from repro.configs.base import SHAPES_BY_NAME, supported_shapes
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell, model_flops_for
+from repro.utils import hlo
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str,
+             schedule_profile: str = "kvtuner", out_dir: str = OUT_DIR,
+             force: bool = False, variant: str = "baseline") -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch}__{shape}__{mesh_kind}__{schedule_profile}"
+    if variant != "baseline":
+        tag += f"__{variant}"
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = ARCH_CONFIGS[arch]()
+    cell = SHAPES_BY_NAME[shape]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.size
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+           "devices": n_dev, "schedule": schedule_profile,
+           "variant": variant, "ok": False}
+    t0 = time.time()
+    try:
+        with mesh:
+            built = build_cell(cfg, cell, mesh,
+                               schedule_profile=schedule_profile,
+                               variant=variant)
+            lowered = built.lower()
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        report = hlo.analyze(compiled.as_text())
+        mf = model_flops_for(cfg, cell, n_dev)
+        rl = hlo.roofline_terms(report, model_flops_per_device=mf)
+
+        rec.update(
+            ok=True, lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            memory=dict(
+                argument_bytes=getattr(ma, "argument_size_in_bytes", None),
+                output_bytes=getattr(ma, "output_size_in_bytes", None),
+                temp_bytes=getattr(ma, "temp_size_in_bytes", None),
+                alias_bytes=getattr(ma, "alias_size_in_bytes", None),
+            ),
+            cost_analysis={k: ca.get(k) for k in
+                           ("flops", "bytes accessed") if k in ca},
+            hlo=dict(
+                flops=rl.flops, hbm_bytes=rl.hbm_bytes,
+                collective_bytes=dict(report.collective_bytes),
+                op_counts={k: v for k, v in sorted(report.op_counts.items())
+                           if any(c in k for c in hlo.COLLECTIVES)
+                           or k in ("dot", "while", "fusion")},
+                while_trips=report.while_trip_counts,
+            ),
+            roofline=dict(
+                compute_s=rl.compute_s, memory_s=rl.memory_s,
+                collective_s=rl.collective_s, dominant=rl.dominant,
+                model_flops_per_dev=mf,
+                useful_flops_ratio=rl.useful_flops_ratio,
+                roofline_fraction=rl.roofline_fraction,
+                step_time_s=rl.step_time_s,
+            ),
+        )
+    except Exception as e:  # record failures — they are dry-run bugs to fix
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2, default=float)
+    return rec
+
+
+def iter_all_cells():
+    for arch, cfg_fn in ARCH_CONFIGS.items():
+        cfg = cfg_fn()
+        for cell in supported_shapes(cfg):
+            yield arch, cell.name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--schedule", default="kvtuner")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    cells = list(iter_all_cells()) if args.all else [(args.arch, args.shape)]
+    meshes = ["single", "multi"] if args.all else [args.mesh]
+    for arch, shape in cells:
+        for mesh_kind in meshes:
+            rec = run_cell(arch, shape, mesh_kind, args.schedule,
+                           force=args.force, variant=args.variant)
+            status = "OK " if rec.get("ok") else "FAIL"
+            rl = rec.get("roofline", {})
+            print(f"[{status}] {arch:24s} {shape:12s} {mesh_kind:6s} "
+                  f"compile={rec.get('compile_s', '-')}s "
+                  f"dominant={rl.get('dominant', '-')} "
+                  f"{rec.get('error', '')}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

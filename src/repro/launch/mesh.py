@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+touches no jax device state — required because the dry-run must set
+XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = (data, model) — 256 chips (one v5e pod).
+    Multi-pod: (2, 16, 16) = (pod, data, model) — 512 chips; the pod axis
+    composes with data for batch/FSDP sharding (DCN-crossing collectives are
+    all-reduce only)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """Degenerate 1×1 mesh for CPU smoke tests of the sharded code path."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

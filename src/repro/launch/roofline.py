@@ -1,0 +1,119 @@
+"""Roofline report: aggregates experiments/dryrun/*.json into the
+EXPERIMENTS.md §Roofline table and picks the hillclimb candidates.
+
+    PYTHONPATH=src python -m repro.launch.roofline [--mesh single] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+_ADVICE = {
+    "compute": "raise MXU utilization: larger fused matmul tiles / fewer "
+               "remat recomputes (useful-FLOPs ratio is the lever)",
+    "memory": "cut HBM traffic: bf16 (not f32) attention intermediates, "
+              "fused flash kernel so scores never round-trip, lower KV bits",
+    "collective": "cut resharding: align layer in/out shardings (SP boundary), "
+                  "overlap collectives with compute, shrink KV all-gathers "
+                  "via seq-parallel softmax combine",
+}
+
+
+def load(mesh: str, schedule: str = "kvtuner") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(OUT_DIR, f"*__{mesh}__{schedule}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_s(x) -> str:
+    if x is None:
+        return "-"
+    if x >= 0.1:
+        return f"{x:.2f}s"
+    if x >= 1e-4:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}µs"
+
+
+def table(recs: list[dict]) -> str:
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "6ND/HLO | roofline-frac | per-dev args+temp |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | FAILED: "
+                         f"{r.get('error', '?')[:60]} | | | | | | |")
+            continue
+        rl = r["roofline"]
+        mem = r.get("memory") or {}
+        args = (mem.get("argument_bytes") or 0) / 2 ** 30
+        temp = (mem.get("temp_bytes") or 0) / 2 ** 30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(rl['compute_s'])} | "
+            f"{fmt_s(rl['memory_s'])} | {fmt_s(rl['collective_s'])} | "
+            f"**{rl['dominant']}** | {rl['useful_flops_ratio']:.2f} | "
+            f"{rl['roofline_fraction']:.3f} | {args:.1f}+{temp:.1f} GiB |")
+    return "\n".join(lines)
+
+
+def advice(recs: list[dict]) -> str:
+    out = []
+    for r in recs:
+        if not r.get("ok"):
+            continue
+        rl = r["roofline"]
+        out.append(f"- **{r['arch']} × {r['shape']}**: {rl['dominant']}-bound "
+                   f"→ {_ADVICE[rl['dominant']]}")
+    return "\n".join(out)
+
+
+def pick_hillclimb(recs: list[dict]) -> list[dict]:
+    ok = [r for r in recs if r.get("ok")]
+    if not ok:
+        return []
+    worst = min(ok, key=lambda r: r["roofline"]["roofline_fraction"])
+    coll = max(ok, key=lambda r: r["roofline"]["collective_s"] /
+               max(r["roofline"]["step_time_s"], 1e-30))
+    decodes = [r for r in ok if "decode" in r["shape"] or "long" in r["shape"]]
+    rep = max(decodes or ok, key=lambda r: r["roofline"]["memory_s"])
+    picks, seen = [], set()
+    for tag, r in (("worst-roofline-fraction", worst),
+                   ("most-collective-bound", coll),
+                   ("paper-representative-decode", rep)):
+        key = (r["arch"], r["shape"])
+        if key not in seen:
+            seen.add(key)
+            picks.append({"why": tag, **{k: r[k] for k in
+                                         ("arch", "shape", "roofline")}})
+    return picks
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--schedule", default="kvtuner")
+    args = ap.parse_args()
+    recs = load(args.mesh, args.schedule)
+    n_ok = sum(1 for r in recs if r.get("ok"))
+    print(f"## Roofline — {args.mesh} mesh ({n_ok}/{len(recs)} cells OK)\n")
+    print(table(recs))
+    print("\n### Dominant-term advice\n")
+    print(advice(recs))
+    print("\n### Hillclimb candidates\n")
+    for p in pick_hillclimb(recs):
+        print(f"- {p['why']}: {p['arch']} × {p['shape']} "
+              f"(dominant={p['roofline']['dominant']}, "
+              f"frac={p['roofline']['roofline_fraction']:.3f})")
+
+
+if __name__ == "__main__":
+    main()

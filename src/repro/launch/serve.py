@@ -1,0 +1,48 @@
+"""Production serving launcher: sharded prefill/decode programs for an
+assigned architecture with a KVTuner schedule on the production mesh.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-12b \
+        --shape decode_32k --schedule kvtuner [--multi-pod]
+"""
+import os
+
+if __name__ == "__main__":
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+
+from repro.configs import ARCH_CONFIGS
+from repro.configs.base import SHAPES_BY_NAME
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell, default_schedule
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCH_CONFIGS))
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--schedule", default="kvtuner",
+                    choices=["kvtuner", "kv8", "kv4", "kv16"])
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    cfg = ARCH_CONFIGS[args.arch]()
+    cell = SHAPES_BY_NAME[args.shape]
+    assert cell.kind in ("decode", "prefill")
+    sched = default_schedule(cfg, args.schedule)
+    if sched is not None:
+        print(f"schedule: {sched.name} ({sched.equivalent_bits:.2f}-bit, "
+              f"mode={sched.mode})")
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    with mesh:
+        built = build_cell(cfg, cell, mesh, schedule_profile=args.schedule)
+        compiled = built.lower().compile()
+        ma = compiled.memory_analysis()
+        print(f"compiled {built.name} on {mesh.size} chips")
+        print(f"  per-device: args={ma.argument_size_in_bytes/2**30:.3f}GiB "
+              f"temp={ma.temp_size_in_bytes/2**30:.3f}GiB")
+    print("serve program ready (attach repro.serving.engine on TPU hosts)")
+
+
+if __name__ == "__main__":
+    main()

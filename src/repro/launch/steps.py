@@ -1,0 +1,189 @@
+"""Cell builders: (arch × shape × mesh) → lowered step programs.
+
+One builder per shape kind:
+  train_*   → train_step(TrainState, batch)        (fwd + bwd + AdamW)
+  prefill_* → prefill_step(params, batch)          (fwd + cache quantization)
+  decode_* / long_* → serve_step(params, state, token)  (one token, full cache)
+
+Shardings come from repro.distributed.specs; the KVTuner schedule for
+inference cells is the paper-faithful mixed profile (sensitive first/last
+layers high, bulk K4V2 — the structure KVTuner's search recovers, §6.5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.core.precision import (MODE_KIVI, MODE_PER_TOKEN, KVTunerSchedule,
+                                  PrecisionPair)
+from repro.distributed.sharding import ShardingRules, make_rules, use_rules
+from repro.distributed.specs import SpecBuilder
+from repro.models.registry import ModelApi, build_model
+from repro.models import transformer as tfm
+from repro.training.optimizer import AdamW
+from repro.training.trainer import TrainState, make_train_step
+
+
+def default_schedule(cfg: ModelConfig, profile: str = "kvtuner",
+                     mode: str = MODE_KIVI) -> KVTunerSchedule | None:
+    """Representative schedules for full-size archs (no calibration data at
+    this scale — the *searched* schedules exist for the trained small model).
+
+    kvtuner: first/last attention layers K8V4, bulk K4V2 (≈3.1-bit) — the
+             sensitivity structure the paper reports (§6.5, Table 11).
+    kv8/kv4/kv16: uniform baselines for §Perf comparisons.
+    """
+    n = len(cfg.attention_layers())
+    if n == 0:
+        return None
+    if profile == "kvtuner":
+        pairs = [PrecisionPair(4, 2)] * n
+        for i in (0, n - 1):
+            pairs[i] = PrecisionPair(8, 4)
+        return KVTunerSchedule(pairs, mode=mode, model_name=cfg.name)
+    bits = {"kv8": 8, "kv4": 4, "kv16": 16}[profile]
+    return KVTunerSchedule.uniform(n, PrecisionPair(bits, bits), mode=mode,
+                                   model_name=cfg.name)
+
+
+def rules_for(cfg: ModelConfig, mesh, train: bool) -> ShardingRules:
+    overrides = {}
+    if train:
+        overrides["seq"] = ("model",)       # Megatron sequence parallelism
+    if cfg.family == "ssm":
+        # 125M-class model: no TP — both axes do data parallelism
+        overrides["batch"] = ("pod", "data", "model")
+        overrides["seq"] = ()
+    return make_rules(mesh, overrides)
+
+
+@dataclasses.dataclass
+class BuiltCell:
+    name: str
+    fn: object            # jitted, unlowered
+    abstract_args: tuple  # ShapeDtypeStructs
+    api: ModelApi
+
+    def lower(self):
+        return self.fn.lower(*self.abstract_args)
+
+
+def build_cell(cfg: ModelConfig, cell: ShapeCell, mesh,
+               schedule_profile: str = "kvtuner",
+               fsdp_threshold: int = 128 * 1024 * 1024,
+               donate: bool = True, variant: str = "baseline") -> BuiltCell:
+    if variant == "opt":
+        # §Perf optimized configuration (EXPERIMENTS.md): bf16 P·V, pinned
+        # SP↔TP reshard boundaries, seq-parallel flash decode combine
+        cfg = dataclasses.replace(cfg, attn_probs_bf16=True,
+                                  attn_boundary_hints=True, sp_decode=True,
+                                  moe_ep=True)
+    api = build_model(cfg)
+    rules = rules_for(cfg, mesh, train=(cell.kind == "train"))
+    builder = SpecBuilder(rules, fsdp_threshold=fsdp_threshold)
+    rng = jax.random.PRNGKey(0)
+
+    if cell.kind == "train":
+        opt = AdamW(lr=1e-4)
+        abstract_params = jax.eval_shape(api.init, rng)
+        abstract_state = jax.eval_shape(
+            lambda p: TrainState(params=p, opt=opt.init(p), ef=None),
+            abstract_params)
+        abstract_batch = api.input_specs(cell)
+        state_sh = builder.named(builder.train_state(abstract_state))
+        batch_sh = builder.named(builder.batch(abstract_batch))
+        grad_sh = None
+        if variant == "opt":
+            # ZeRO gradient layout: reduce-scatter instead of all-reduce
+            grad_sh = builder.named(builder.params(abstract_params,
+                                                   force_fsdp=True))
+        raw_step = make_train_step(api, opt, grad_shardings=grad_sh)
+
+        def step(state, batch):
+            with use_rules(rules):
+                return raw_step(state, batch)
+
+        fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, None),
+                     donate_argnums=(0,) if donate else ())
+        return BuiltCell(name=f"{cfg.name}:{cell.name}", fn=fn,
+                         abstract_args=(abstract_state, abstract_batch),
+                         api=api)
+
+    schedule = default_schedule(cfg, schedule_profile)
+
+    if cell.kind == "prefill":
+        abstract_params = jax.eval_shape(api.init, rng)
+        abstract_batch = api.input_specs(cell)
+        params_sh = builder.named(builder.params(abstract_params))
+        batch_sh = builder.named(builder.batch(abstract_batch))
+
+        def pre(params, batch):
+            with use_rules(rules):
+                if api.cfg.is_encoder:
+                    logits, _ = api.forward(params, batch)
+                    return logits[:, -1]
+                return api.prefill(params, batch, schedule,
+                                   capacity=cell.seq_len)
+
+        abstract_out = jax.eval_shape(pre, abstract_params, abstract_batch)
+        if api.cfg.is_encoder:
+            out_sh = None
+        else:
+            state_sh = builder.named(builder.decode_state(
+                abstract_out[1], long_context=cell.seq_len > 100_000))
+            out_sh = (None, state_sh)
+        fn = jax.jit(pre, in_shardings=(params_sh, batch_sh),
+                     out_shardings=out_sh)
+        return BuiltCell(name=f"{cfg.name}:{cell.name}", fn=fn,
+                         abstract_args=(abstract_params, abstract_batch),
+                         api=api)
+
+    # decode / long-context decode
+    abstract_params = jax.eval_shape(api.init, rng)
+    params_sh = builder.named(builder.params(abstract_params))
+    long = cell.seq_len > 100_000
+
+    def mk_state():
+        return tfm.init_decode_state(cfg, schedule, cell.global_batch,
+                                     cell.seq_len, extra_groups=4,
+                                     filled_to=cell.seq_len)
+
+    abstract_state = jax.eval_shape(mk_state)
+    state_sh = builder.named(builder.decode_state(abstract_state,
+                                                  long_context=long))
+    token = jax.ShapeDtypeStruct((cell.global_batch, 1), jnp.int32)
+    token_sh = NamedSharding(mesh, builder.rules.spec(
+        "batch", "none", shape=(cell.global_batch, 1)))
+
+    def serve_step(params, state, tok):
+        with use_rules(rules):
+            return api.decode_step(params, state, tok)
+
+    fn = jax.jit(serve_step, in_shardings=(params_sh, state_sh, token_sh),
+                 out_shardings=(None, state_sh),
+                 donate_argnums=(1,) if donate else ())
+    return BuiltCell(name=f"{cfg.name}:{cell.name}", fn=fn,
+                     abstract_args=(abstract_params, abstract_state, token),
+                     api=api)
+
+
+def model_flops_for(cfg: ModelConfig, cell: ShapeCell, n_devices: int) -> float:
+    """Analytic MODEL_FLOPS per device: 6·N_active·tokens (train) or
+    2·N_active·tokens (inference); decode processes one token per sequence."""
+    n_active = cfg.active_param_count()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        factor = 6.0
+    elif cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        factor = 2.0
+    else:
+        tokens = cell.global_batch
+        factor = 2.0
+    return factor * n_active * tokens / n_devices

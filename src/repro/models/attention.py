@@ -1,0 +1,380 @@
+"""GQA attention: chunked full-sequence path (train/prefill) and quantized-KV
+decode path, with fake-quant hooks for the KVTuner sensitivity/search loop.
+
+The full-sequence path chunks queries (flash-style, XLA scan) so [S, S] score
+matrices are never materialized — required for the 32k prefill cells. The
+decode path consumes a ``LayerKVCache`` (packed mixed-precision segments).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.cache.kvcache import LayerKVCache
+from repro.core import quant
+from repro.core.precision import MODE_KIVI, MODE_PER_CHANNEL, MODE_PER_TOKEN
+from repro.models import common
+
+NEG_INF = -2.0 ** 30  # large-negative in f32; avoids NaN from (-inf) - (-inf)
+
+
+def init_attention(rng, cfg) -> dict:
+    dt = common.dtype_of(cfg)
+    ks = common.split_keys(rng, 4)
+    d, hd = cfg.d_model, cfg.head_dim
+    p = {
+        "wq": common.dense_init(ks[0], d, cfg.num_heads * hd, dt),
+        "wk": common.dense_init(ks[1], d, cfg.num_kv_heads * hd, dt),
+        "wv": common.dense_init(ks[2], d, cfg.num_kv_heads * hd, dt),
+        "wo": common.dense_init(ks[3], cfg.num_heads * hd, d, dt),
+    }
+    if cfg.use_qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dt)
+        p["k_norm"] = jnp.zeros((hd,), dt)
+    return p
+
+
+def qkv(params, cfg, x, positions, theta):
+    """x [B,S,D] → q [B,S,H,hd], k/v [B,S,Hkv,hd] with RoPE applied.
+
+    ``cfg.attn_boundary_hints`` pins the SP↔TP reshard to exactly one
+    all-gather(seq)+head-shard transition per layer (Megatron-SP boundary)
+    instead of letting GSPMD pick per-op reshards (§Perf)."""
+    from repro.distributed.sharding import shard_hint
+
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = (x @ params["wq"]).reshape(b, s, cfg.num_heads, hd)
+    k = (x @ params["wk"]).reshape(b, s, cfg.num_kv_heads, hd)
+    v = (x @ params["wv"]).reshape(b, s, cfg.num_kv_heads, hd)
+    if getattr(cfg, "attn_boundary_hints", False):
+        q = shard_hint(q, "batch", "none", "heads", "none")
+        k = shard_hint(k, "batch", "none", "kv_heads", "none")
+        v = shard_hint(v, "batch", "none", "kv_heads", "none")
+    if cfg.use_qk_norm:
+        q = common.rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = common.rms_norm(k, params["k_norm"], cfg.norm_eps)
+    if theta:
+        q = common.apply_rope(q, positions, theta)
+        k = common.apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def _scores(q, k, cfg):
+    """q [B,Sq,H,hd] × k [B,Sk,Hkv,hd] → [B,H,Sq,Sk] (GQA via reshape)."""
+    b, sq, h, hd = q.shape
+    g = cfg.q_per_kv
+    qg = q.reshape(b, sq, cfg.num_kv_heads, g, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32)
+    return s.reshape(b, h, sq, k.shape[1]) / jnp.sqrt(hd).astype(jnp.float32)
+
+
+def _weighted_v(probs, v, cfg):
+    """probs [B,H,Sq,Sk] × v [B,Sk,Hkv,hd] → [B,Sq,H,hd].
+
+    With ``cfg.attn_probs_bf16`` the probabilities are cast to the value dtype
+    before the P·V matmul (f32 accumulation via preferred_element_type) — the
+    §Perf change that keeps the chunk-scan carries/cotangents in bf16 instead
+    of f32, halving attention HBM traffic and reshard collective bytes.
+    """
+    b, h, sq, sk = probs.shape
+    g = cfg.q_per_kv
+    pg = probs.reshape(b, cfg.num_kv_heads, g, sq, sk)
+    if getattr(cfg, "attn_probs_bf16", False):
+        pg = pg.astype(v.dtype)
+        o = jnp.einsum("bkgqs,bskh->bqkgh", pg, v,
+                       preferred_element_type=jnp.float32).astype(v.dtype)
+    else:
+        o = jnp.einsum("bkgqs,bskh->bqkgh", pg, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, v.shape[-1])
+
+
+def _mask_bias(q_pos, k_pos, kind: str, window: int) -> jax.Array:
+    """[Sq, Sk] additive f32 bias. kind: causal | local | bidir."""
+    if kind == "bidir":
+        return jnp.zeros((q_pos.shape[0], k_pos.shape[0]), jnp.float32)
+    allowed = k_pos[None, :] <= q_pos[:, None]
+    if kind == "local" and window:
+        allowed &= (q_pos[:, None] - k_pos[None, :]) < window
+    return jnp.where(allowed, 0.0, NEG_INF)
+
+
+def full_attention(q, k, v, cfg, kind: str = "causal", window: int = 0,
+                   q_positions=None, k_positions=None):
+    """Chunked softmax(QKᵀ)V over the full sequence.
+
+    Queries are processed in chunks of ``cfg.q_chunk`` via lax.scan with remat,
+    keeping peak score memory at [B, H, chunk, Sk].
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    if q_positions is None:
+        q_positions = jnp.arange(sq)
+    if k_positions is None:
+        k_positions = jnp.arange(sk)
+    chunk = min(cfg.q_chunk, sq)
+    if sq % chunk:
+        chunk = sq  # fallback: odd sizes run unchunked
+
+    def one_chunk(qc, qpos):
+        bias = _mask_bias(qpos, k_positions, kind, window)
+        s = _scores(qc, k, cfg) + bias
+        p = jax.nn.softmax(s, axis=-1)
+        return _weighted_v(p, v, cfg).astype(q.dtype)
+
+    if chunk == sq:
+        return one_chunk(q, q_positions)
+
+    n = sq // chunk
+    qs = q.reshape(b, n, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    ps = q_positions.reshape(n, chunk)
+    body = jax.checkpoint(lambda carry, xs: (carry, one_chunk(*xs))) \
+        if cfg.remat else (lambda carry, xs: (carry, one_chunk(*xs)))
+    _, out = jax.lax.scan(body, (), (qs, ps))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hd)
+
+
+# ---------------------------------------------------------------- simulation
+def sim_quant_kv(k, v, k_bits, v_bits, mode: str, group_size: int):
+    """Fake-quantize K/V ([B,S,H,hd] layout) with traced bits — the offline
+    calibration path (paper Appendix B: quantize+dequantize, no packing).
+    quant.py expects [..., S, D]; transpose head/seq around the call."""
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    k_hat, v_hat = quant.fake_quant_kv_dynamic(kt, vt, k_bits, v_bits, mode,
+                                               group_size)
+    return k_hat.transpose(0, 2, 1, 3), v_hat.transpose(0, 2, 1, 3)
+
+
+# ------------------------------------------------- seq-parallel decode (§Perf)
+def _sp_decode_main(qg, cache: LayerKVCache, rules):
+    """Sequence-parallel flash decode over the sharded main segment.
+
+    Beyond-paper optimization: with the KV cache sequence-sharded, the naive
+    lowering all-gathers the dequantized KV every layer (O(S·D) bytes on the
+    ICI). Here each shard attends to its local packed block and only the
+    per-query softmax statistics (o, m, l) — O(B·H·D) bytes — cross the
+    network (psum/pmax combine, exactly ref.softmax_merge's algebra).
+
+    qg [B, Hkv, G, D] (replicated over the seq axes). Returns (o, m, l)
+    un-normalized partials, replicated, ready to merge with the residual.
+    """
+    from jax import shard_map
+
+    mesh = rules.mesh
+    b, hkv, g, d = qg.shape
+    s_cap = cache.s_cap
+    codes_spec = rules.spec("batch", "none", "kv_seq", "none",
+                            shape=cache.k_codes.shape)
+    seq_axes = codes_spec[2]
+    if seq_axes is None:
+        return None  # cache sequence not sharded → sp is a no-op
+    seq_axes_t = seq_axes if isinstance(seq_axes, tuple) else (seq_axes,)
+    n_sh = 1
+    for a in seq_axes_t:
+        n_sh *= mesh.shape[a]
+    for arr in (cache.k_scale, cache.k_zero, cache.v_scale, cache.v_zero):
+        if arr.ndim == 5 and arr.shape[2] % n_sh:
+            return None  # group count not shardable → fall back to XLA path
+    if s_cap % n_sh:
+        return None
+    batch_spec = rules.spec("batch", shape=(b,))[0]
+
+    def scale_spec(arr, mode_is_channel):
+        if arr.ndim != 5:
+            return jax.sharding.PartitionSpec()
+        return jax.sharding.PartitionSpec(batch_spec, None, seq_axes, None, None)
+
+    from repro.core.precision import MODE_PER_CHANNEL
+    k_mode, v_mode = _kv_modes_for(cache)
+    P = jax.sharding.PartitionSpec
+    in_specs = (
+        P(batch_spec, None, None, None),                       # qg
+        P(batch_spec, None, seq_axes, None),                   # k_codes
+        scale_spec(cache.k_scale, k_mode), scale_spec(cache.k_zero, k_mode),
+        P(batch_spec, None, seq_axes, None),                   # v_codes
+        scale_spec(cache.v_scale, v_mode), scale_spec(cache.v_zero, v_mode),
+        P(),                                                   # length
+    )
+    out_specs = (P(batch_spec, None, None, None),
+                 P(batch_spec, None, None),
+                 P(batch_spec, None, None))
+
+    n_shards = 1
+    for a in seq_axes_t:
+        n_shards *= mesh.shape[a]
+    s_local = s_cap // n_shards
+    r = cache.group_size
+
+    def local(qg_l, kc, ks, kz, vc, vs, vz, length):
+        shard_ix = jax.lax.axis_index(seq_axes_t)
+        k = _deq_segment(kc, ks, kz, cache.k_bits, k_mode, r, cache.head_dim)
+        v = _deq_segment(vc, vs, vz, cache.v_bits, v_mode, r, cache.head_dim)
+        scores = jnp.einsum("bhgd,bhsd->bhgs", qg_l.astype(jnp.float32), k) \
+            / jnp.sqrt(float(cache.head_dim))
+        n_main = jnp.minimum(length // r * r, s_cap)
+        pos = shard_ix * s_local + jnp.arange(s_local)
+        valid = (pos < n_main)[None, None, None, :]
+        scores = jnp.where(valid, scores, NEG_INF)
+        m_l = jnp.max(scores, axis=-1)
+        p = jnp.where(valid, jnp.exp(scores - m_l[..., None]), 0.0)
+        l_l = jnp.sum(p, axis=-1)
+        o_l = jnp.einsum("bhgs,bhsd->bhgd", p, v)
+        # flash combine across sequence shards: O(B·H·D) on the wire
+        m_g = jax.lax.pmax(m_l, seq_axes_t)
+        corr = jnp.exp(m_l - m_g)
+        l_g = jax.lax.psum(l_l * corr, seq_axes_t)
+        o_g = jax.lax.psum(o_l * corr[..., None], seq_axes_t)
+        return o_g, m_g, l_g
+
+    f = shard_map(local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    return f(qg, cache.k_codes, cache.k_scale, cache.k_zero, cache.v_codes,
+             cache.v_scale, cache.v_zero, cache.length)
+
+
+def _kv_modes_for(cache: LayerKVCache):
+    from repro.cache.kvcache import _kv_modes
+    return _kv_modes(cache.mode)
+
+
+def _sp_feasible(cfg, cache: LayerKVCache) -> bool:
+    """sp_decode preconditions: active rules, seq-sharded cache, shardable
+    group counts (divisibility is checked here; infeasible → XLA path)."""
+    from repro.distributed.sharding import active_rules
+
+    rules = active_rules()
+    if rules is None:
+        return False
+    spec = rules.spec("batch", "none", "kv_seq", "none",
+                      shape=cache.k_codes.shape)
+    seq_axes = spec[2]
+    if seq_axes is None:
+        return False
+    axes = seq_axes if isinstance(seq_axes, tuple) else (seq_axes,)
+    n_sh = 1
+    for a in axes:
+        n_sh *= rules.mesh.shape[a]
+    if cache.s_cap % n_sh:
+        return False
+    for arr in (cache.k_scale, cache.k_zero, cache.v_scale, cache.v_zero):
+        if arr.ndim == 5 and arr.shape[2] % n_sh:
+            return False
+    return True
+
+
+def _deq_segment(codes, scale, zero, bits, mode, group_size, d):
+    """Pure-function clone of LayerKVCache._deq for shard_map bodies."""
+    from repro.core.precision import MODE_PER_CHANNEL
+
+    if bits >= 16:
+        return codes.astype(jnp.float32)
+    b, h, s, _ = codes.shape
+    raw = quant.unpack_codes(codes, bits).astype(jnp.float32)
+    if mode == MODE_PER_CHANNEL:
+        rg = raw.reshape(b, h, s // group_size, group_size, d)
+        out = rg * scale + zero
+    else:
+        g = min(group_size, d)
+        rg = raw.reshape(b, h, s, d // g, g)
+        out = rg * scale + zero
+    return out.reshape(b, h, s, d)
+
+
+# -------------------------------------------------------------------- decode
+def decode_attention(params, cfg, x, cache: LayerKVCache, pos, kind: str,
+                     window: int, theta: float, use_pallas: bool = False):
+    """One-token decode: q from x [B,1,D] against the quantized cache.
+
+    Returns (attn_out [B,1,D], new_cache). The XLA path materializes the
+    dequantized cache; the Pallas path (TPU target) streams packed blocks
+    (repro.kernels.qdecode) — selected by ``use_pallas``.
+    """
+    b = x.shape[0]
+    hd = cfg.head_dim
+    positions = jnp.full((b, 1), pos, jnp.int32) if jnp.ndim(pos) == 0 else pos
+    q, k_new, v_new = qkv(params, cfg, x, positions, theta)
+    new_cache = cache.append(k_new.transpose(0, 2, 1, 3), v_new.transpose(0, 2, 1, 3))
+
+    if use_pallas:
+        from repro.kernels import ops as kops
+        out = kops.qdecode_attention(q, new_cache, positions, kind, window)
+    elif getattr(cfg, "sp_decode", False) and kind != "local" \
+            and not cache.window and _sp_feasible(cfg, new_cache):
+        from repro.distributed.sharding import active_rules
+        from repro.kernels import ref as kref
+
+        rules = active_rules()
+        qg = q.reshape(b, cfg.num_kv_heads, cfg.q_per_kv, hd)
+        o_m, m_m, l_m = _sp_decode_main(qg, new_cache, rules)
+        # residual window: tiny, replicated, plain partial softmax
+        r = new_cache.group_size
+        n_res = new_cache.length - new_cache.length // r * r
+        k_res = new_cache.k_res.astype(jnp.float32)
+        v_res = new_cache.v_res.astype(jnp.float32)
+        sc = jnp.einsum("bhgd,bhsd->bhgs", qg.astype(jnp.float32), k_res) \
+            / jnp.sqrt(float(hd))
+        valid = (jnp.arange(new_cache.residual_len) < n_res)[None, None, None]
+        sc = jnp.where(valid, sc, NEG_INF)
+        m_r = jnp.max(sc, axis=-1)
+        p = jnp.where(valid, jnp.exp(sc - m_r[..., None]), 0.0)
+        l_r = jnp.sum(p, axis=-1)
+        o_r = jnp.einsum("bhgs,bhsd->bhgd", p, v_res)
+        out = kref.softmax_merge([(o_m, m_m, l_m), (o_r, m_r, l_r)])
+        out = out.reshape(b, 1, cfg.num_heads, hd).astype(x.dtype)
+    else:
+        k_all, v_all, valid = new_cache.dequant(dtype=x.dtype)  # [B,Hkv,S',D]
+        k_pos = new_cache.token_positions()
+        q_pos = positions[:, 0]  # [B]
+        allowed = valid[None, :] & (k_pos[None, :] <= q_pos[:, None])
+        if kind == "local" and window:
+            allowed &= (q_pos[:, None] - k_pos[None, :]) < window
+        bias = jnp.where(allowed, 0.0, NEG_INF)[:, None, None, :]  # [B,1,1,S']
+        s = _scores(q, k_all.transpose(0, 2, 1, 3), cfg) + bias
+        p = jax.nn.softmax(s, axis=-1)
+        out = _weighted_v(p, v_all.transpose(0, 2, 1, 3), cfg).astype(x.dtype)
+
+    y = out.reshape(b, 1, cfg.num_heads * hd) @ params["wo"]
+    return y, new_cache
+
+
+# ----------------------------------------------------------------- training
+@dataclasses.dataclass
+class AttnSim:
+    """Per-layer simulation knobs threaded through full forward passes:
+    traced (k_bits, v_bits) + static mode. bits >= 16 disables quantization."""
+
+    k_bits: jax.Array | float = 16.0
+    v_bits: jax.Array | float = 16.0
+    mode: str = MODE_PER_TOKEN
+
+
+def attention_block(params, cfg, x, positions, kind: str, window: int,
+                    theta: float, sim: AttnSim | None = None, capture=None,
+                    layer_id: int | None = None):
+    """Full-sequence attention sublayer (train / prefill / calibration).
+
+    * ``sim`` applies fake quantization to K/V before attention — the paper's
+      calibration mode where "dequantized KV cache [is used] for self-attention
+      during prefilling, enabling error accumulation across layers" (§5.3).
+    * ``capture`` (a dict) stashes per-layer Q/K/V/output for sensitivity
+      analysis (§4) — only usable on non-scanned stacks.
+    Returns (y [B,S,D], (k, v) post-rope tensors in [B,S,Hkv,hd]).
+    """
+    q, k, v = qkv(params, cfg, x, positions, theta)
+    k_used, v_used = k, v
+    if sim is not None:
+        k_used, v_used = sim_quant_kv(k, v, sim.k_bits, sim.v_bits, sim.mode,
+                                      cfg.kv_group_size)
+    out = full_attention(q, k_used, v_used, cfg, kind=kind, window=window,
+                         q_positions=positions[0] if positions.ndim > 1 else positions,
+                         k_positions=positions[0] if positions.ndim > 1 else positions)
+    b, s, _, _ = out.shape
+    y = out.reshape(b, s, cfg.num_heads * cfg.head_dim) @ params["wo"]
+    if capture is not None and layer_id is not None:
+        capture[layer_id] = {"q": q, "k": k, "v": v, "o": out}
+    return y, (k_used, v_used)

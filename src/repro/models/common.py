@@ -1,0 +1,96 @@
+"""Shared pure-JAX building blocks: norms, RoPE, MLPs, initializers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# --------------------------------------------------------------------- init
+def dense_init(rng, in_dim: int, out_dim: int, dtype, scale: float = 0.02):
+    return (scale * jax.random.truncated_normal(
+        rng, -2.0, 2.0, (in_dim, out_dim), jnp.float32)).astype(dtype)
+
+
+def embed_init(rng, vocab: int, dim: int, dtype, scale: float = 0.02):
+    return (scale * jax.random.truncated_normal(
+        rng, -2.0, 2.0, (vocab, dim), jnp.float32)).astype(dtype)
+
+
+def split_keys(rng, n: int):
+    return list(jax.random.split(rng, n))
+
+
+# --------------------------------------------------------------------- norms
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., None, :]  # add head axis
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------- mlp
+def init_mlp(rng, d_model: int, d_ff: int, act: str, dtype):
+    ks = split_keys(rng, 3)
+    if act == "silu":  # swiglu: gate, up, down
+        return {"w_gate": dense_init(ks[0], d_model, d_ff, dtype),
+                "w_up": dense_init(ks[1], d_model, d_ff, dtype),
+                "w_down": dense_init(ks[2], d_ff, d_model, dtype)}
+    return {"w_up": dense_init(ks[0], d_model, d_ff, dtype),
+            "w_down": dense_init(ks[1], d_ff, d_model, dtype)}
+
+
+def apply_mlp(params: dict, x: jax.Array, act: str) -> jax.Array:
+    if act == "silu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        h = jax.nn.gelu(x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+def mlp_kind(params: dict) -> str:
+    return "silu" if "w_gate" in params else "gelu"
+
+
+# -------------------------------------------------------------------- losses
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: jax.Array | None = None) -> jax.Array:
+    """Mean token NLL in f32; labels [..., S] int32; mask 1=count."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

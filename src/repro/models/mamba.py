@@ -1,0 +1,143 @@
+"""Mamba (S6) block for the jamba hybrid — selective scan in chunked-remat
+form (TPU adaptation: sequential CUDA scan → chunked lax.scan; the inner-dim
+axis shards over ``model`` since channels are independent in the recurrence).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_hint
+from repro.models import common
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class MambaState:
+    """Decode-time recurrent state: constant memory wrt sequence length."""
+
+    ssm: jax.Array   # [B, d_inner, N] f32
+    conv: jax.Array  # [B, d_conv-1, d_inner] last inputs for the causal conv
+
+
+def init_mamba(rng, cfg) -> dict:
+    dt = common.dtype_of(cfg)
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    n = cfg.mamba_d_state
+    r = cfg.mamba_dt_rank
+    ks = common.split_keys(rng, 6)
+    # S4D-real initialization for A; dt bias so softplus(dt) spans [1e-3, 0.1].
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    dt_init = jnp.exp(jax.random.uniform(ks[0], (di,)) *
+                      (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))
+    return {
+        "in_proj": common.dense_init(ks[1], d, 2 * di, dt),
+        "conv_w": 0.1 * jax.random.normal(ks[2], (cfg.mamba_d_conv, di), jnp.float32),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": common.dense_init(ks[3], di, r + 2 * n, dt),
+        "dt_proj": common.dense_init(ks[4], r, di, jnp.float32, scale=r ** -0.5),
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(a),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": common.dense_init(ks[5], di, d, dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 prev: jax.Array | None = None):
+    """Depthwise causal conv over S via explicit shifted taps (kernel ≤ 4).
+
+    x [B,S,di]; prev [B, K-1, di] decode context. Returns (y, new_prev)."""
+    k = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    ext = jnp.concatenate([prev, x], axis=1)  # [B, S+K-1, di]
+    y = sum(ext[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    new_prev = ext[:, -(k - 1):]
+    return y + b.astype(y.dtype), new_prev
+
+
+def _ssm_params(params, xc, cfg):
+    """xc [B,S,di] → (dt [B,S,di], B [B,S,N], C [B,S,N]) in f32."""
+    n, r = cfg.mamba_d_state, cfg.mamba_dt_rank
+    proj = (xc @ params["x_proj"]).astype(jnp.float32)
+    dt_r, bc = proj[..., :r], proj[..., r:]
+    bmat, cmat = bc[..., :n], bc[..., n:]
+    dt = jax.nn.softplus(dt_r @ params["dt_proj"] + params["dt_bias"])
+    return dt, bmat, cmat
+
+
+def _scan_chunked(dt, xc, bmat, cmat, a, init_state, chunk: int, remat: bool):
+    """h_t = exp(dt_t A) h_{t-1} + (dt_t x_t) B_t ; y_t = Σ_n C_t[n] h_t[:, n].
+
+    dt/xc: [B,S,di]; bmat/cmat: [B,S,N]; a: [di,N]. The [B,·,di,N] discretized
+    operands are formed **inside** each rematerialized chunk — materializing
+    them over the full sequence is O(B·S·di·N) and was the dominant memory
+    term at train_4k (caught by the dry-run memory analysis)."""
+    b, s, di = dt.shape
+    n = a.shape[1]
+    c = min(chunk, s)
+    while s % c:
+        c -= 1
+    nc = s // c
+
+    def inner(h, xs):
+        dtt, xct, bt, ct = xs  # [B,di], [B,di], [B,N], [B,N]
+        a_bar = jnp.exp(dtt[..., None] * a)
+        bx = (dtt * xct)[..., None] * bt[:, None, :]
+        h = a_bar * h + bx
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    def outer(h, xs):
+        return jax.lax.scan(inner, h, xs)
+
+    if remat and nc > 1:
+        outer = jax.checkpoint(outer)
+
+    def to_chunks(x):
+        return x.reshape(b, nc, c, *x.shape[2:]).transpose(
+            1, 2, 0, *range(3, x.ndim + 1))
+
+    xs = tuple(map(to_chunks, (dt, xc, bmat, cmat)))
+    h, ys = jax.lax.scan(outer, init_state, xs)  # ys [nc, c, B, di]
+    y = ys.transpose(2, 0, 1, 3).reshape(b, s, di)
+    return y, h
+
+
+def apply_mamba(params, cfg, x, state: MambaState | None = None,
+                chunk: int = 128):
+    """x [B,S,D] → (y [B,S,D], new_state). Full-sequence (train/prefill) when
+    state covers it; decode passes S=1 with a carried state."""
+    b, s, d = x.shape
+    di = cfg.mamba_expand * d
+    n = cfg.mamba_d_state
+    xz = x @ params["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in = shard_hint(x_in, "batch", "seq", "mamba_inner")
+
+    prev = state.conv if state is not None else None
+    xc, new_conv = _causal_conv(x_in, params["conv_w"], params["conv_b"], prev)
+    xc = jax.nn.silu(xc)
+
+    dt, bmat, cmat = _ssm_params(params, xc, cfg)
+    a = -jnp.exp(params["A_log"])                       # [di, N]
+
+    h0 = state.ssm if state is not None else jnp.zeros((b, di, n), jnp.float32)
+    y, h = _scan_chunked(dt, xc.astype(jnp.float32), bmat, cmat, a, h0, chunk,
+                         cfg.remat)
+    y = y + params["D"] * xc.astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(z))
+    out = y @ params["out_proj"]
+    return out, MambaState(ssm=h, conv=new_conv)
+
+
+def init_mamba_state(cfg, batch: int) -> MambaState:
+    di = cfg.mamba_expand * cfg.d_model
+    return MambaState(
+        ssm=jnp.zeros((batch, di, cfg.mamba_d_state), jnp.float32),
+        conv=jnp.zeros((batch, cfg.mamba_d_conv - 1, di), common.dtype_of(cfg)))

@@ -1,0 +1,188 @@
+"""Top-k MoE with capacity-based scatter dispatch (GShard-style, XLA-friendly).
+
+Static shapes throughout: tokens above capacity are dropped (standard capacity
+factor semantics). Expert weights are stacked ``[E, ...]`` and shard over the
+``experts`` logical axis when E divides the mesh (arctic: 128/16 ✓, jamba:
+16/16 ✓); otherwise (grok-1: 8 experts) the ``expert_ff`` axis carries TP.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_hint
+from repro.models import common
+
+
+def init_moe(rng, cfg) -> dict:
+    dt = common.dtype_of(cfg)
+    ks = common.split_keys(rng, 4)
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+    scale = 0.02
+    def stack(key, shape):
+        return (scale * jax.random.truncated_normal(
+            key, -2.0, 2.0, shape, jnp.float32)).astype(dt)
+    return {
+        "router": common.dense_init(ks[0], d, e, jnp.float32),
+        "w_gate": stack(ks[1], (e, d, f)),
+        "w_up": stack(ks[2], (e, d, f)),
+        "w_down": stack(ks[3], (e, f, d)),
+    }
+
+
+def apply_moe_ep(params: dict, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array] | None:
+    """Expert-parallel MoE via shard_map (§Perf iteration on arctic-480b).
+
+    The jit/GSPMD lowering of the gather-combine materializes a **replicated**
+    [T·k, D] f32 intermediate and all-reduces it (measured: 56 GiB fwd +
+    112 GiB bwd per layer → 11.8 TB/step on arctic train_4k). Here experts
+    stay sharded on ``model``; every shard FFNs only its own experts' tokens
+    and contributes a *partial* token-sharded output, combined with one
+    psum over the expert axis — O(T_local·D) bytes instead of O(T·D·k)
+    replicated.
+
+    Trade-off vs the dense path: capacity is enforced per (expert ×
+    data-shard), C_local = cf·T_local·k/E, so drop decisions are local
+    (standard EP semantics). Returns None when preconditions fail
+    (no active rules / E not divisible by the expert axis / T not divisible).
+    """
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import active_rules
+
+    rules = active_rules()
+    if rules is None:
+        return None
+    mesh = rules.mesh
+    e, k = cfg.num_experts, cfg.experts_per_token
+    exp_ax = rules.axes("experts", e)
+    if exp_ax is None or isinstance(exp_ax, tuple):
+        return None
+    n_exp_sh = mesh.shape[exp_ax]
+    b, s, d = x.shape
+    t = b * s
+    tok_axes = rules.axes("flat_tokens", t)
+    if tok_axes is None:
+        return None
+    tok_axes_t = tok_axes if isinstance(tok_axes, tuple) else (tok_axes,)
+    if exp_ax in tok_axes_t:
+        return None
+    n_tok_sh = 1
+    for a in tok_axes_t:
+        n_tok_sh *= mesh.shape[a]
+    t_loc = t // n_tok_sh
+    e_loc = e // n_exp_sh
+    cap = int(cfg.capacity_factor * t_loc * k / e)
+    cap = max(-(-cap // 8) * 8, 8)
+
+    def local(xf, router, wg, wu, wd):
+        logits = xf.astype(jnp.float32) @ router            # [T_loc, E]
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_i = jax.lax.top_k(probs, k)
+        top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.mean(jnp.sum(jax.nn.one_hot(top_i, e), axis=1), axis=0)
+        aux = e * jnp.sum(me * ce)
+        aux = jax.lax.pmean(aux, tok_axes_t)
+
+        my_base = jax.lax.axis_index(exp_ax) * e_loc
+        flat_e = top_i.reshape(-1)
+        mine = (flat_e >= my_base) & (flat_e < my_base + e_loc)
+        local_e = jnp.clip(flat_e - my_base, 0, e_loc - 1)
+        onehot = jax.nn.one_hot(local_e, e_loc, dtype=jnp.int32) * \
+            mine[:, None].astype(jnp.int32)
+        pos = jnp.cumsum(onehot, axis=0) - onehot
+        mypos = jnp.take_along_axis(pos, local_e[:, None], axis=1)[:, 0]
+        keep = mine & (mypos < cap)
+        safe_pos = jnp.where(keep, mypos, cap - 1)
+
+        xrep = jnp.repeat(xf, k, axis=0)
+        buf = jnp.zeros((e_loc, cap, d), x.dtype)
+        buf = buf.at[local_e, safe_pos].add(
+            jnp.where(keep[:, None], xrep, 0).astype(x.dtype), mode="drop")
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg)) * \
+            jnp.einsum("ecd,edf->ecf", buf, wu)
+        out_buf = jnp.einsum("ecf,efd->ecd", h, wd)
+        gathered = out_buf[local_e, safe_pos]
+        weighted = gathered.astype(jnp.float32) * \
+            top_p.reshape(-1)[:, None] * keep[:, None]
+        y_part = jnp.sum(weighted.reshape(t_loc, k, d), axis=1)
+        y = jax.lax.psum(y_part.astype(jnp.float32), exp_ax)
+        return y.astype(x.dtype), aux
+
+    tok_spec = tok_axes_t[0] if len(tok_axes_t) == 1 else tok_axes_t
+    f = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(tok_spec, None), P(None, None),
+                  P(exp_ax, None, None), P(exp_ax, None, None),
+                  P(exp_ax, None, None)),
+        out_specs=(P(tok_spec, None), P()),
+        check_vma=False)
+    y, aux = f(x.reshape(t, d), params["router"], params["w_gate"],
+               params["w_up"], params["w_down"])
+    return y.reshape(b, s, d), aux
+
+
+def apply_moe(params: dict, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
+    """x [B,S,D] → (y [B,S,D], aux_loss scalar).
+
+    Dispatch: top-k routing → intra-expert positions via cumsum over the
+    one-hot assignment matrix → scatter into an [E, C, D] buffer → batched
+    expert matmuls → gather-combine weighted by normalized router probs.
+
+    ``cfg.moe_ep`` switches to the shard_map expert-parallel path (§Perf)
+    when its sharding preconditions hold.
+    """
+    if getattr(cfg, "moe_ep", False):
+        out = apply_moe_ep(params, x, cfg)
+        if out is not None:
+            return out
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    t = b * s
+    xf = x.reshape(t, d)
+
+    logits = (xf.astype(jnp.float32) @ params["router"])  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                # [T, k]
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    # Load-balancing auxiliary loss (Switch-style): E * Σ_e f_e · p_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(top_i, e), axis=1), axis=0)
+    aux = e * jnp.sum(me * ce)
+
+    cap = int(cfg.capacity_factor * t * k / e)
+    cap = max(-(-cap // 8) * 8, 8)  # pad for lane alignment
+
+    flat_e = top_i.reshape(-1)                             # [T*k] token-major
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)    # [T*k, E]
+    pos = jnp.cumsum(onehot, axis=0) - onehot              # position pre-insert
+    mypos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]  # [T*k]
+    keep = (mypos < cap)
+
+    # Scatter tokens into per-expert capacity buffers.
+    xrep = jnp.repeat(xf, k, axis=0)                       # [T*k, D]
+    xrep = shard_hint(xrep, "flat_tokens", "none")
+    safe_pos = jnp.where(keep, mypos, cap - 1)
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[flat_e, safe_pos].add(
+        jnp.where(keep[:, None], xrep, 0).astype(x.dtype), mode="drop")
+    buf = shard_hint(buf, "experts", "expert_cap", "none")
+
+    # Batched expert FFN (swiglu), sharded over experts / expert_ff.
+    wg = shard_hint(params["w_gate"], "experts", "none", "expert_ff")
+    wu = shard_hint(params["w_up"], "experts", "none", "expert_ff")
+    wd = shard_hint(params["w_down"], "experts", "expert_ff", "none")
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg)) * \
+        jnp.einsum("ecd,edf->ecf", buf, wu)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, wd)
+    out_buf = shard_hint(out_buf, "experts", "expert_cap", "none")
+
+    # Gather-combine.
+    gathered = out_buf[flat_e, safe_pos]                   # [T*k, D]
+    gathered = shard_hint(gathered, "flat_tokens", "none")
+    weighted = gathered.astype(jnp.float32) * top_p.reshape(-1)[:, None] * keep[:, None]
+    y = jnp.sum(weighted.reshape(t, k, d), axis=1).astype(x.dtype)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,75 @@
+"""Public model API: build a ModelApi from a ModelConfig, and input_specs
+(ShapeDtypeStruct stand-ins) for every (arch × shape) dry-run cell."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.core.precision import KVTunerSchedule
+from repro.models import transformer as tfm
+
+
+@dataclasses.dataclass
+class ModelApi:
+    cfg: ModelConfig
+
+    def init(self, rng):
+        return tfm.init_params(self.cfg, rng)
+
+    def forward(self, params, batch, **kw):
+        return tfm.forward(params, self.cfg, batch, **kw)
+
+    def train_loss(self, params, batch, rng=None):
+        return tfm.train_loss(params, self.cfg, batch, rng)
+
+    def prefill(self, params, batch, schedule=None, **kw):
+        return tfm.prefill(params, self.cfg, batch, schedule, **kw)
+
+    def decode_step(self, params, state, token, **kw):
+        return tfm.decode_step(params, self.cfg, state, token, **kw)
+
+    def init_decode_state(self, schedule, batch, capacity, **kw):
+        return tfm.init_decode_state(self.cfg, schedule, batch, capacity, **kw)
+
+    # ------------------------------------------------------------ dry-run
+    def input_specs(self, cell: ShapeCell) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input of this cell.
+        No device allocation — feeds jit(...).lower() directly."""
+        cfg = self.cfg
+        b, s = cell.global_batch, cell.seq_len
+        i32 = jnp.int32
+
+        def sds(shape, dtype=i32):
+            return jax.ShapeDtypeStruct(shape, dtype)
+
+        if cfg.is_encoder:
+            batch = {"frames": sds((b, s, cfg.frontend_dim), jnp.bfloat16)}
+            if cell.kind == "train":
+                batch["mask"] = sds((b, s), jnp.bool_)
+                batch["targets"] = sds((b, s), i32)
+            return batch
+        if cfg.family == "vlm":
+            s_img = min(cfg.image_tokens, s // 2)
+            if cell.kind == "decode":
+                return {"token": sds((b, 1), i32)}
+            return {"tokens": sds((b, s - s_img), i32),
+                    "patch_embeds": sds((b, s_img, cfg.vision_dim), jnp.bfloat16)}
+        if cell.kind == "decode":
+            return {"token": sds((b, 1), i32)}
+        return {"tokens": sds((b, s), i32)}
+
+    def decode_state_specs(self, cell: ShapeCell,
+                           schedule: KVTunerSchedule | None = None):
+        """ShapeDtypeStructs for the decode-state pytree at this cell (cache
+        holding `seq_len` tokens). Uses eval_shape → no allocation."""
+        fn = partial(tfm.init_decode_state, self.cfg, schedule,
+                     cell.global_batch, cell.seq_len, 4, cell.seq_len)
+        return jax.eval_shape(fn)
+
+
+def build_model(cfg: ModelConfig) -> ModelApi:
+    return ModelApi(cfg=cfg)

@@ -1,0 +1,562 @@
+"""Model assembly for all assigned families: init / forward / train-loss /
+prefill / decode, with scan-over-layers for deep homogeneous stacks and
+python-loop paths for heterogeneous ones (and for activation capture).
+
+Entry points are pure functions over a params pytree; `repro.models.registry`
+wraps them into a `ModelApi`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.cache.kvcache import LayerKVCache, init_model_cache
+from repro.configs.base import (ATTN_GLOBAL, ATTN_LOCAL, MAMBA, MLSTM, SLSTM,
+                                ModelConfig)
+from repro.core.precision import MODE_PER_TOKEN, KVTunerSchedule
+from repro.distributed.sharding import shard_hint
+from repro.models import attention, common, mamba as mamba_mod, moe as moe_mod
+from repro.models import xlstm as xlstm_mod
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+# ==================================================================== init
+def _init_layer(rng, cfg: ModelConfig, kind: str, layer_id: int) -> dict:
+    dt = common.dtype_of(cfg)
+    ks = common.split_keys(rng, 4)
+    p: dict = {"ln1": jnp.zeros((cfg.d_model,), dt)}
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        p["attn"] = attention.init_attention(ks[0], cfg)
+    elif kind == MAMBA:
+        p["mamba"] = mamba_mod.init_mamba(ks[0], cfg)
+    elif kind == MLSTM:
+        p["mlstm"] = xlstm_mod.init_mlstm(ks[0], cfg)
+        return p  # xlstm blocks have no separate MLP sublayer
+    elif kind == SLSTM:
+        p["slstm"] = xlstm_mod.init_slstm(ks[0], cfg)
+        p["ln2"] = jnp.zeros((cfg.d_model,), dt)
+        d_ff = -(-4 * cfg.d_model // 3 // 128) * 128
+        p["mlp"] = common.init_mlp(ks[1], cfg.d_model, d_ff, "silu", dt)
+        return p
+    p["ln2"] = jnp.zeros((cfg.d_model,), dt)
+    is_moe = bool(cfg.num_experts) and layer_id in cfg.moe_layers()
+    if is_moe:
+        p["moe"] = moe_mod.init_moe(ks[1], cfg)
+        if cfg.moe_dense_residual:
+            p["mlp"] = common.init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.act, dt)
+    else:
+        p["mlp"] = common.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dt)
+    return p
+
+
+def init_params(cfg: ModelConfig, rng) -> dict:
+    dt = common.dtype_of(cfg)
+    keys = common.split_keys(rng, cfg.num_layers + 4)
+    kinds = cfg.layer_kinds()
+    params: dict = {
+        "embed": common.embed_init(keys[-1], cfg.vocab_size, cfg.d_model, dt),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = common.dense_init(keys[-2], cfg.d_model,
+                                              cfg.vocab_size, dt)
+    if cfg.family == "vlm":
+        params["mm_proj"] = {
+            "w1": common.dense_init(keys[-3], cfg.vision_dim, cfg.d_model, dt),
+            "w2": common.dense_init(keys[-4], cfg.d_model, cfg.d_model, dt),
+        }
+    if cfg.is_encoder:
+        params["frontend"] = {
+            "proj": common.dense_init(keys[-3], cfg.frontend_dim, cfg.d_model, dt),
+            "mask_emb": 0.02 * jax.random.normal(keys[-4], (cfg.frontend_dim,), jnp.float32).astype(dt),
+        }
+    layer_params = [_init_layer(keys[i], cfg, kinds[i], i)
+                    for i in range(cfg.num_layers)]
+    plan = _scan_plan(cfg)
+    if plan == "stack":
+        params["layers"] = jax.tree.map(lambda *xs: jnp.stack(xs), *layer_params)
+    elif plan == "period":
+        # jamba: stack position-j sublayers across periods → {"sub j": [P, ...]}
+        period = cfg.attn_period
+        n_periods = cfg.num_layers // period
+        params["layers"] = {
+            f"sub{j}": jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[layer_params[p * period + j] for p in range(n_periods)])
+            for j in range(period)
+        }
+    else:
+        params["layers"] = layer_params
+    return params
+
+
+def _scan_plan(cfg: ModelConfig) -> str:
+    """stack: one scan over all layers. period: scan over repeating patterns
+    (jamba). loop: python loop (xlstm, capture mode)."""
+    if not cfg.scan_layers:
+        return "loop"
+    if cfg.family == "ssm":
+        return "loop"
+    if cfg.family == "hybrid" and cfg.attn_period:
+        if cfg.num_layers % cfg.attn_period == 0:
+            return "period"
+        return "loop"
+    if cfg.is_homogeneous or cfg.local_global_ratio:
+        # gemma local/global layers share param structure → traced mask select
+        if cfg.num_experts and cfg.moe_every > 1:
+            return "loop"
+        return "stack"
+    return "loop"
+
+
+# ============================================================ layer forward
+def layer_params_at(params, cfg: ModelConfig, i: int):
+    """Extract layer i's params regardless of storage plan (list / stacked /
+    period-stacked)."""
+    ls = params["layers"]
+    if isinstance(ls, list):
+        return ls[i]
+    if isinstance(ls, dict) and "sub0" in ls:
+        period = cfg.attn_period
+        return jax.tree.map(lambda a: a[i // period], ls[f"sub{i % period}"])
+    return jax.tree.map(lambda a: a[i], ls)
+
+
+def _rope_theta(cfg, kind):
+    if cfg.local_global_ratio and kind == ATTN_GLOBAL and cfg.rope_theta_global:
+        return cfg.rope_theta_global
+    return cfg.rope_theta
+
+
+def _attn_sublayer(p, cfg, x, positions, kind, sim, capture, layer_id,
+                   is_global=None):
+    h = common.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if is_global is not None:
+        # gemma scan path: traced local/global select (masks and rope theta)
+        y, kv = _dual_attention_block(p["attn"], cfg, h, positions, is_global,
+                                      sim=sim)
+    else:
+        window = cfg.local_window if kind == ATTN_LOCAL else 0
+        mask_kind = "bidir" if cfg.is_encoder else (
+            "local" if kind == ATTN_LOCAL else "causal")
+        y, kv = attention.attention_block(
+            p["attn"], cfg, h, positions, mask_kind, window,
+            _rope_theta(cfg, kind) if not cfg.is_encoder else 0.0,
+            sim=sim, capture=capture, layer_id=layer_id)
+    return x + y, kv
+
+
+def _dual_attention_block(p, cfg, h, positions, is_global, sim=None):
+    """Gemma3 scanned attention: is_global is a traced bool scalar selecting
+    mask window and rope theta, keeping the scan body homogeneous."""
+    b, s, _ = h.shape
+    hd = cfg.head_dim
+    q = (h @ p["wq"]).reshape(b, s, cfg.num_heads, hd)
+    k = (h @ p["wk"]).reshape(b, s, cfg.num_kv_heads, hd)
+    v = (h @ p["wv"]).reshape(b, s, cfg.num_kv_heads, hd)
+    if cfg.use_qk_norm:
+        q = common.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = common.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    th_l, th_g = cfg.rope_theta, cfg.rope_theta_global or cfg.rope_theta
+    q = jnp.where(is_global, common.apply_rope(q, positions, th_g),
+                  common.apply_rope(q, positions, th_l))
+    k = jnp.where(is_global, common.apply_rope(k, positions, th_g),
+                  common.apply_rope(k, positions, th_l))
+    if sim is not None:
+        k_used, v_used = attention.sim_quant_kv(
+            k, v, sim.k_bits, sim.v_bits, sim.mode, cfg.kv_group_size)
+    else:
+        k_used, v_used = k, v
+    pos1 = positions[0] if positions.ndim > 1 else positions
+    # traced-window trick: local → window, global → larger-than-seq window
+    window = jnp.where(is_global, jnp.int32(2 ** 30), jnp.int32(cfg.local_window))
+    out = _windowed_attention(q, k_used, v_used, cfg, pos1, window)
+    y = out.reshape(b, s, cfg.num_heads * hd) @ p["wo"]
+    return y, (k_used, v_used)
+
+
+def _windowed_attention(q, k, v, cfg, positions, window):
+    """full_attention variant whose window is a traced scalar."""
+    b, sq, h, hd = q.shape
+    chunk = min(cfg.q_chunk, sq)
+    if sq % chunk:
+        chunk = sq
+
+    def one_chunk(qc, qpos):
+        allowed = (positions[None, :] <= qpos[:, None]) & \
+            ((qpos[:, None] - positions[None, :]) < window)
+        bias = jnp.where(allowed, 0.0, attention.NEG_INF)
+        s = attention._scores(qc, k, cfg) + bias
+        p = jax.nn.softmax(s, axis=-1)
+        return attention._weighted_v(p, v, cfg).astype(q.dtype)
+
+    if chunk == sq:
+        return one_chunk(q, positions)
+    n = sq // chunk
+    qs = q.reshape(b, n, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    ps = positions.reshape(n, chunk)
+    body = lambda carry, xs: (carry, one_chunk(*xs))
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    _, out = jax.lax.scan(body, (), (qs, ps))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hd)
+
+
+def _ffn_sublayer(p, cfg, x, layer_id):
+    aux = jnp.zeros((), jnp.float32)
+    if "mlp" not in p and "moe" not in p:
+        return x, aux
+    h = common.rms_norm(x, p["ln2"], cfg.norm_eps)
+    y = jnp.zeros_like(x)
+    if "moe" in p:
+        y_moe, aux = moe_mod.apply_moe(p["moe"], h, cfg)
+        y = y + y_moe
+        if "mlp" in p:  # arctic dense residual in parallel with MoE
+            y = y + common.apply_mlp(p["mlp"], h, cfg.act)
+    else:
+        y = common.apply_mlp(p["mlp"], h, cfg.act)
+    return x + y, aux
+
+
+def _apply_layer_full(p, cfg, kind, x, positions, *, sim=None, capture=None,
+                      layer_id=None, is_global=None, rec_state=None):
+    """One transformer layer over the full sequence. Returns
+    (x, kv_or_None, rec_state_or_None, aux_loss)."""
+    kv = None
+    new_rec = None
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        x, kv = _attn_sublayer(p, cfg, x, positions, kind, sim, capture,
+                               layer_id, is_global=is_global)
+    elif kind == MAMBA:
+        h = common.rms_norm(x, p["ln1"], cfg.norm_eps)
+        y, new_rec = mamba_mod.apply_mamba(p["mamba"], cfg, h, state=rec_state)
+        x = x + y
+    elif kind == MLSTM:
+        h = common.rms_norm(x, p["ln1"], cfg.norm_eps)
+        y, new_rec = xlstm_mod.apply_mlstm(p["mlstm"], cfg, h, state=rec_state)
+        return x + y, None, new_rec, jnp.zeros((), jnp.float32)
+    elif kind == SLSTM:
+        h = common.rms_norm(x, p["ln1"], cfg.norm_eps)
+        y, new_rec = xlstm_mod.apply_slstm(p["slstm"], cfg, h, state=rec_state)
+        x = x + y
+    x, aux = _ffn_sublayer(p, cfg, x, layer_id)
+    return x, kv, new_rec, aux
+
+
+# =========================================================== input embedding
+def embed_inputs(params, cfg: ModelConfig, batch: dict):
+    """Returns (x [B,S,D], positions [B,S]). Handles the three input kinds:
+    text tokens, VLM tokens+patch embeds (image first), audio frames+mask."""
+    dt = common.dtype_of(cfg)
+    if cfg.is_encoder:
+        frames = batch["frames"].astype(dt)
+        if "mask" in batch:
+            frames = jnp.where(batch["mask"][..., None],
+                               params["frontend"]["mask_emb"], frames)
+        x = frames @ params["frontend"]["proj"]
+        b, s, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+        # sinusoidal position embedding (conv-pos frontend is stubbed)
+        half = cfg.d_model // 2
+        freqs = jnp.exp(-jnp.arange(half) / half * jnp.log(10000.0))
+        ang = pos[..., None] * freqs
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dt)
+        return x + pe, pos
+    tok = batch["tokens"]
+    x = params["embed"][tok]
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(dt)
+        img = jax.nn.gelu(pe @ params["mm_proj"]["w1"]) @ params["mm_proj"]["w2"]
+        x = jnp.concatenate([img, x], axis=1)  # anyres tiles prepended
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    return x, pos
+
+
+def unembed(params, cfg, x):
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return shard_hint(logits, "batch", "seq", "vocab")
+
+
+# ================================================================== forward
+def forward(params, cfg: ModelConfig, batch: dict, *, sim_bits=None,
+            sim_mode: str = MODE_PER_TOKEN, capture=None, collect_kv=False):
+    """Full-sequence forward.
+
+    * ``sim_bits``: [n_attn_layers, 2] traced (k_bits, v_bits) — the paper's
+      calibration mode (fake-quant K/V inside attention, errors accumulate
+      across layers). One jit serves every schedule.
+    * ``capture``: dict → per-attention-layer Q/K/V/attn-out (forces loop path).
+    * ``collect_kv``: additionally return per-attention-layer post-rope (K, V)
+      ([B,S,Hkv,hd]) for prefill cache construction.
+
+    Returns (logits, aux) where aux = {"aux_loss", "kv"?}.
+    """
+    x, positions = embed_inputs(params, cfg, batch)
+    x = shard_hint(x, "batch", "seq", "d_model")
+    kinds = cfg.layer_kinds()
+    attn_ids = cfg.attention_layers()
+    plan = _scan_plan(cfg) if capture is None else "loop"
+
+    def layer_sim(layer_id):
+        if sim_bits is None:
+            return None
+        ai = attn_ids.index(layer_id)
+        return attention.AttnSim(k_bits=sim_bits[ai, 0], v_bits=sim_bits[ai, 1],
+                                 mode=sim_mode)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    kv_out: list = []
+
+    if plan == "stack":
+        x, aux_total, kv_out = _forward_stack(
+            params, cfg, x, positions, kinds, sim_bits, sim_mode, collect_kv)
+    elif plan == "period":
+        x, aux_total, kv_out = _forward_period(
+            params, cfg, x, positions, kinds, sim_bits, sim_mode, collect_kv)
+    else:
+        for i, kind in enumerate(kinds):
+            p = layer_params_at(params, cfg, i)
+            x, kv, _, aux = _apply_layer_full(
+                p, cfg, kind, x, positions, sim=layer_sim(i)
+                if kind in (ATTN_GLOBAL, ATTN_LOCAL) else None,
+                capture=capture, layer_id=i)
+            aux_total += aux
+            if collect_kv and kv is not None:
+                kv_out.append(kv)
+
+    logits = unembed(params, cfg, x)
+    aux = {"aux_loss": aux_total}
+    if collect_kv:
+        aux["kv"] = kv_out
+    return logits, aux
+
+
+def _forward_stack(params, cfg, x, positions, kinds, sim_bits, sim_mode,
+                   collect_kv):
+    """lax.scan over stacked layer params (dense / gemma / uniform-MoE)."""
+    n = cfg.num_layers
+    is_global = jnp.asarray([k == ATTN_GLOBAL for k in kinds])
+    gemma = bool(cfg.local_global_ratio)
+    bits = sim_bits if sim_bits is not None else jnp.full((n, 2), 16.0)
+
+    def body(carry, xs):
+        x, aux = carry
+        lp, ig, lb = xs
+        sim = attention.AttnSim(k_bits=lb[0], v_bits=lb[1], mode=sim_mode) \
+            if sim_bits is not None else None
+        x, kv, _, a = _apply_layer_full(
+            lp, cfg, ATTN_GLOBAL, x, positions, sim=sim,
+            is_global=(ig if gemma else None))
+        out = None
+        if collect_kv:
+            out = tuple(shard_hint(t, "batch", "kv_seq", "none", "none")
+                        for t in kv)
+        return (x, aux + a), out
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x, aux_total), kvs = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (params["layers"], is_global, bits))
+    kv_out = []
+    if collect_kv:
+        k_all, v_all = kvs  # [L, B, S, Hkv, hd]
+        kv_out = [(k_all[i], v_all[i]) for i in range(n)]
+    return x, aux_total, kv_out
+
+
+def _forward_period(params, cfg, x, positions, kinds, sim_bits, sim_mode,
+                    collect_kv):
+    """Jamba: scan over repeating periods; each period applies its
+    heterogeneous sublayers in a python loop inside the scan body."""
+    period = cfg.attn_period
+    n_periods = cfg.num_layers // period
+    pkinds = kinds[:period]
+    bits = sim_bits if sim_bits is not None else \
+        jnp.full((len(cfg.attention_layers()), 2), 16.0)
+    attn_per_period = sum(1 for k in pkinds if k in (ATTN_GLOBAL, ATTN_LOCAL))
+    bits_p = bits.reshape(n_periods, attn_per_period, 2)
+
+    def body(carry, xs):
+        x, aux = carry
+        pparams, pbits = xs
+        ai = 0
+        kvs = []
+        for j, kind in enumerate(pkinds):
+            sim = None
+            if kind in (ATTN_GLOBAL, ATTN_LOCAL) and sim_bits is not None:
+                sim = attention.AttnSim(k_bits=pbits[ai, 0],
+                                        v_bits=pbits[ai, 1], mode=sim_mode)
+            x, kv, _, a = _apply_layer_full(
+                pparams[f"sub{j}"], cfg, kind, x, positions, sim=sim,
+                layer_id=j)
+            aux += a
+            if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+                ai += 1
+                kvs.append(kv)
+        out = None
+        if collect_kv and kvs:
+            out = tuple(shard_hint(t, "batch", "kv_seq", "none", "none")
+                        for t in kvs[0])
+        return (x, aux), out
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x, aux_total), kvs = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (params["layers"], bits_p))
+    kv_out = []
+    if collect_kv and kvs is not None:
+        k_all, v_all = kvs
+        kv_out = [(k_all[i], v_all[i]) for i in range(n_periods)]
+    return x, aux_total, kv_out
+
+
+# =================================================================== losses
+def train_loss(params, cfg: ModelConfig, batch: dict, rng=None):
+    logits, aux = forward(params, cfg, batch)
+    if cfg.is_encoder:
+        loss = common.softmax_cross_entropy(
+            logits, batch["targets"], batch.get("mask"))
+    else:
+        logits_txt = logits
+        if cfg.family == "vlm":
+            # image positions carry no LM loss; logits cover [img ; text]
+            s_img = batch["patch_embeds"].shape[1]
+            logits_txt = logits[:, s_img:]
+        if "labels" in batch:  # labels[t] = target for position t
+            loss = common.softmax_cross_entropy(
+                logits_txt, batch["labels"], batch.get("loss_mask"))
+        else:  # next-token objective
+            mask = batch.get("loss_mask")
+            loss = common.softmax_cross_entropy(
+                logits_txt[:, :-1], batch["tokens"][:, 1:],
+                None if mask is None else mask[:, 1:])
+    return loss + AUX_LOSS_WEIGHT * aux["aux_loss"], {"nll": loss}
+
+
+# ============================================================ prefill/decode
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DecodeState:
+    caches: list        # per layer: LayerKVCache | None
+    rec: list           # per layer: MambaState/MLSTMState/SLSTMState | None
+    pos: jax.Array      # [B] next position index
+
+
+def prefill(params, cfg: ModelConfig, batch: dict,
+            schedule: KVTunerSchedule | None, capacity: int | None = None,
+            extra_groups: int = 4):
+    """Full forward + quantized cache construction per the schedule.
+
+    Quantization of the prefill KV (not just decode KV) matches the paper's
+    deployment/calibration setting ("KV cache quantization is enabled during
+    both prefilling and decoding stages", §E.1).
+    """
+    x, positions = embed_inputs(params, cfg, batch)
+    seq = x.shape[1]
+    b = x.shape[0]
+    capacity = capacity or seq
+    kinds = cfg.layer_kinds()
+    plan = _scan_plan(cfg)
+    caches = init_model_cache(cfg, schedule, b, capacity, extra_groups)
+    rec: list = [None] * cfg.num_layers
+
+    if plan in ("stack", "period"):
+        logits, aux = forward(params, cfg, batch, collect_kv=True)
+        kvs = aux["kv"]
+        for slot, i in enumerate(cfg.attention_layers()):
+            k, v = kvs[slot]  # [B,S,Hkv,hd]
+            caches[i] = caches[i].fill(k.transpose(0, 2, 1, 3),
+                                       v.transpose(0, 2, 1, 3))
+    else:
+        x0 = shard_hint(x, "batch", "seq", "d_model")
+        xcur = x0
+        for i, kind in enumerate(kinds):
+            p = layer_params_at(params, cfg, i)
+            xcur, kv, new_rec, _ = _apply_layer_full(
+                p, cfg, kind, xcur, positions, layer_id=i)
+            if kv is not None:
+                k, v = kv
+                caches[i] = caches[i].fill(k.transpose(0, 2, 1, 3),
+                                           v.transpose(0, 2, 1, 3))
+            rec[i] = new_rec
+        logits = unembed(params, cfg, xcur)
+
+    state = DecodeState(caches=caches, rec=rec,
+                        pos=jnp.full((b,), seq, jnp.int32))
+    return logits[:, -1], state
+
+
+def decode_step(params, cfg: ModelConfig, state: DecodeState, token,
+                use_pallas: bool = False):
+    """One decode step. token [B, 1] int32 → (logits [B, vocab], new state).
+
+    Python loop over layers: per-layer caches are heterogeneous under a mixed
+    schedule (different packed widths), which is un-scannable by construction.
+    """
+    b = token.shape[0]
+    x = params["embed"][token]  # [B,1,D]
+    x = shard_hint(x, "batch", "seq", "d_model")
+    positions = state.pos[:, None]
+    kinds = cfg.layer_kinds()
+    new_caches, new_rec = list(state.caches), list(state.rec)
+
+    for i, kind in enumerate(kinds):
+        p = layer_params_at(params, cfg, i)
+        if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+            h = common.rms_norm(x, p["ln1"], cfg.norm_eps)
+            window = cfg.local_window if kind == ATTN_LOCAL else 0
+            y, new_caches[i] = attention.decode_attention(
+                p["attn"], cfg, h, state.caches[i], positions,
+                "local" if kind == ATTN_LOCAL else "causal", window,
+                _rope_theta(cfg, kind), use_pallas=use_pallas)
+            x = x + y
+        elif kind == MAMBA:
+            h = common.rms_norm(x, p["ln1"], cfg.norm_eps)
+            y, new_rec[i] = mamba_mod.apply_mamba(p["mamba"], cfg, h,
+                                                  state=state.rec[i])
+            x = x + y
+        elif kind == MLSTM:
+            h = common.rms_norm(x, p["ln1"], cfg.norm_eps)
+            y, new_rec[i] = xlstm_mod.apply_mlstm(p["mlstm"], cfg, h,
+                                                  state=state.rec[i])
+            x = x + y
+            continue
+        elif kind == SLSTM:
+            h = common.rms_norm(x, p["ln1"], cfg.norm_eps)
+            y, new_rec[i] = xlstm_mod.apply_slstm(p["slstm"], cfg, h,
+                                                  state=state.rec[i])
+            x = x + y
+        x, _ = _ffn_sublayer(p, cfg, x, i)
+
+    logits = unembed(params, cfg, x)[:, 0]
+    return logits, DecodeState(caches=new_caches, rec=new_rec,
+                               pos=state.pos + 1)
+
+
+def init_decode_state(cfg: ModelConfig, schedule, batch: int, capacity: int,
+                      extra_groups: int = 4, filled_to: int | None = None):
+    """Fresh (or pretend-prefilled, for dry-runs) decode state."""
+    caches = init_model_cache(cfg, schedule, batch, capacity, extra_groups)
+    rec: list = []
+    for kind in cfg.layer_kinds():
+        if kind == MAMBA:
+            rec.append(mamba_mod.init_mamba_state(cfg, batch))
+        elif kind == MLSTM:
+            rec.append(xlstm_mod.init_mlstm_state(cfg, batch))
+        elif kind == SLSTM:
+            rec.append(xlstm_mod.init_slstm_state(cfg, batch))
+        else:
+            rec.append(None)
+    pos = jnp.full((batch,), filled_to or 0, jnp.int32)
+    if filled_to:
+        caches = [None if c is None else dataclasses.replace(
+            c, length=jnp.asarray(filled_to, jnp.int32)) for c in caches]
+    return DecodeState(caches=caches, rec=rec, pos=pos)

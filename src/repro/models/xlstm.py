@@ -1,0 +1,187 @@
+"""xLSTM blocks (mLSTM + sLSTM) — attention-free recurrent architecture.
+
+KVTuner is **inapplicable** here (no KV cache; see DESIGN.md §5) — the arch is
+implemented without the technique. Decode state is O(1) in sequence length,
+which is why xlstm runs the long_500k cell.
+
+TPU adaptation: the CUDA fused recurrent kernels become chunked lax.scan with
+remat; the mLSTM matrix memory C [B,H,dk,dv] shards its value dim over
+``model`` (the recurrence is independent along dv).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_hint
+from repro.models import common
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class MLSTMState:
+    c: jax.Array  # [B, H, dk, dv] f32 matrix memory
+    n: jax.Array  # [B, H, dk] f32 normalizer
+    m: jax.Array  # [B, H] f32 log-stabilizer
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SLSTMState:
+    c: jax.Array  # [B, D] f32 cell
+    n: jax.Array  # [B, D]
+    m: jax.Array  # [B, D]
+    h: jax.Array  # [B, D] recurrent output
+
+
+# ------------------------------------------------------------------- mLSTM
+def init_mlstm(rng, cfg) -> dict:
+    dt = common.dtype_of(cfg)
+    d = cfg.d_model
+    di = int(cfg.mlstm_proj_factor * d)
+    h = cfg.num_heads
+    ks = common.split_keys(rng, 7)
+    return {
+        "w_up": common.dense_init(ks[0], d, di, dt),
+        "w_gate": common.dense_init(ks[1], d, di, dt),
+        "wq": common.dense_init(ks[2], di, di, dt),
+        "wk": common.dense_init(ks[3], di, di, dt),
+        "wv": common.dense_init(ks[4], di, di, dt),
+        "w_if": common.dense_init(ks[5], di, 2 * h, jnp.float32),
+        "if_bias": jnp.concatenate([jnp.zeros((h,)), 3.0 * jnp.ones((h,))]),
+        "w_down": common.dense_init(ks[6], di, d, dt),
+    }
+
+
+def _mlstm_scan(q, k, v, i_raw, f_raw, state: MLSTMState, chunk: int, remat: bool):
+    """q/k/v [B,S,H,hd] f32; gates [B,S,H]. Sequential, chunked + remat."""
+    b, s, h, hd = q.shape
+
+    def inner(carry, xs):
+        c, n, m = carry
+        qt, kt, vt, it, ft = xs  # [B,H,hd] / [B,H]
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m, it)
+        alpha = jnp.exp(logf + m - m_new)[..., None]
+        beta = jnp.exp(it - m_new)[..., None]
+        c = alpha[..., None] * c + beta[..., None] * (kt[..., :, None] * vt[..., None, :])
+        n = alpha * n + beta * kt
+        denom = jnp.maximum(jnp.abs(jnp.sum(n * qt, -1)), 1.0)[..., None]
+        ht = jnp.einsum("bhkv,bhk->bhv", c, qt) / denom
+        return (c, n, m_new), ht
+
+    def outer(carry, xs):
+        return jax.lax.scan(inner, carry, xs)
+
+    c = min(chunk, s)
+    while s % c:
+        c -= 1
+    nc = s // c
+    if remat and nc > 1:
+        outer = jax.checkpoint(outer)
+
+    def chunks(x):  # [B,S,...] → [nc, c, B, ...]
+        return x.reshape(b, nc, c, *x.shape[2:]).transpose(
+            1, 2, 0, *range(3, x.ndim + 1))
+
+    carry = (state.c, state.n, state.m)
+    carry, hs = jax.lax.scan(outer, carry, tuple(map(chunks, (q, k, v, i_raw, f_raw))))
+    out = hs.transpose(2, 0, 1, 3, 4).reshape(b, s, h, hd)
+    return out, MLSTMState(*carry)
+
+
+def apply_mlstm(params, cfg, x, state: MLSTMState | None = None, chunk: int = 128):
+    b, s, d = x.shape
+    di = int(cfg.mlstm_proj_factor * d)
+    h = cfg.num_heads
+    hd = di // h
+    u = x @ params["w_up"]
+    z = x @ params["w_gate"]
+    u = shard_hint(u, "batch", "seq", "mamba_inner")
+
+    def heads(w):
+        return (u @ w).reshape(b, s, h, hd).astype(jnp.float32)
+
+    q, k, v = heads(params["wq"]) / jnp.sqrt(hd), heads(params["wk"]), heads(params["wv"])
+    gates = (u.astype(jnp.float32) @ params["w_if"]) + params["if_bias"]
+    i_raw, f_raw = gates[..., :h], gates[..., h:]
+    if state is None:
+        state = init_mlstm_state(cfg, b)
+    out, new_state = _mlstm_scan(q, k, v, i_raw, f_raw, state, chunk, cfg.remat)
+    out = out.reshape(b, s, di).astype(x.dtype) * jax.nn.silu(z)
+    return out @ params["w_down"], new_state
+
+
+def init_mlstm_state(cfg, batch: int) -> MLSTMState:
+    di = int(cfg.mlstm_proj_factor * cfg.d_model)
+    h = cfg.num_heads
+    hd = di // h
+    return MLSTMState(c=jnp.zeros((batch, h, hd, hd), jnp.float32),
+                      n=jnp.zeros((batch, h, hd), jnp.float32),
+                      m=jnp.full((batch, h), -1e9, jnp.float32))
+
+
+# ------------------------------------------------------------------- sLSTM
+def init_slstm(rng, cfg) -> dict:
+    dt = common.dtype_of(cfg)
+    d = cfg.d_model
+    h = cfg.num_heads
+    hd = d // h
+    ks = common.split_keys(rng, 3)
+    return {
+        "w_in": common.dense_init(ks[0], d, 4 * d, dt),
+        # block-diagonal recurrent matrices, one [hd, 4*hd] block per head
+        "r": (0.02 * jax.random.truncated_normal(
+            ks[1], -2.0, 2.0, (h, hd, 4 * hd), jnp.float32)),
+        "bias": jnp.concatenate(
+            [jnp.zeros((d,)), 3.0 * jnp.ones((d,)), jnp.zeros((2 * d,))]),
+        "w_out": common.dense_init(ks[2], d, d, dt),
+    }
+
+
+def apply_slstm(params, cfg, x, state: SLSTMState | None = None, chunk: int = 128):
+    """Strictly sequential (h feeds back into the gates); chunked remat scan."""
+    b, s, d = x.shape
+    h = cfg.num_heads
+    hd = d // h
+    wx = (x @ params["w_in"]).astype(jnp.float32)  # [B,S,4D]
+    if state is None:
+        state = init_slstm_state(cfg, b)
+
+    def inner(carry, xs):
+        c, n, m, hprev = carry
+        wxt = xs  # [B, 4D]
+        hr = hprev.reshape(b, h, hd)
+        rec = jnp.einsum("bhk,hkj->bhj", hr, params["r"]).reshape(b, 4 * d)
+        pre = wxt + rec + params["bias"]
+        ig, fg, zg, og = jnp.split(pre, 4, axis=-1)
+        logf = jax.nn.log_sigmoid(fg)
+        m_new = jnp.maximum(logf + m, ig)
+        alpha = jnp.exp(logf + m - m_new)
+        beta = jnp.exp(ig - m_new)
+        c = alpha * c + beta * jnp.tanh(zg)
+        n = alpha * n + beta
+        hnew = jax.nn.sigmoid(og) * c / jnp.maximum(n, 1.0)
+        return (c, n, m_new, hnew), hnew
+
+    def outer(carry, xs):
+        return jax.lax.scan(inner, carry, xs)
+
+    c = min(chunk, s)
+    while s % c:
+        c -= 1
+    nc = s // c
+    if cfg.remat and nc > 1:
+        outer = jax.checkpoint(outer)
+    wxc = wx.reshape(b, nc, c, 4 * d).transpose(1, 2, 0, 3)
+    carry, hs = jax.lax.scan(outer, (state.c, state.n, state.m, state.h), wxc)
+    out = hs.transpose(2, 0, 1, 3).reshape(b, s, d).astype(x.dtype)
+    return out @ params["w_out"], SLSTMState(*carry)
+
+
+def init_slstm_state(cfg, batch: int) -> SLSTMState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(c=z, n=z, m=jnp.full((batch, d), -1e9, jnp.float32), h=z)

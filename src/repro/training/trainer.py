@@ -1,0 +1,135 @@
+"""Fault-tolerant training loop: checkpoint/restart, retry-on-failure,
+stateless-resumable data, optional int8 error-feedback gradient compression.
+
+The jitted step is mesh-agnostic: under `Mesh`+sharding rules it lowers to the
+production SPMD program (launch/train.py); on a single CPU device it runs the
+same code for smoke tests and the small-model end-to-end example.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.training import grad_compress
+from repro.training.optimizer import AdamW, AdamWState
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: dict
+    opt: AdamWState
+    ef: grad_compress.EFState | None
+
+
+def make_train_step(api, optimizer: AdamW, compress_grads: bool = False,
+                    grad_shardings=None):
+    """(state, batch) → (state, metrics). Pure; jit at call site with
+    in_shardings/out_shardings for the production mesh.
+
+    ``grad_shardings`` (params-shaped NamedSharding tree) pins gradients to
+    the ZeRO layout so GSPMD emits **reduce-scatter** instead of materializing
+    replicated gradients through a full all-reduce — on arctic-480b this was
+    a 13 TB/device/step collective (§Perf iteration 2)."""
+
+    def step(state: TrainState, batch: dict):
+        def loss_fn(p):
+            loss, metrics = api.train_loss(p, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params)
+        if grad_shardings is not None:
+            grads = jax.tree.map(jax.lax.with_sharding_constraint, grads,
+                                 grad_shardings)
+        ef = state.ef
+        if compress_grads and ef is not None:
+            grads, ef = grad_compress.apply_error_feedback(grads, ef)
+        new_params, opt, opt_metrics = optimizer.update(
+            grads, state.opt, state.params)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return TrainState(params=new_params, opt=opt, ef=ef), metrics
+
+    return step
+
+
+@dataclasses.dataclass
+class Trainer:
+    api: object
+    optimizer: AdamW
+    source: object                      # stateless: batch_at(step)
+    ckpt: CheckpointManager | None = None
+    ckpt_every: int = 100
+    compress_grads: bool = False
+    max_retries: int = 3
+    log_every: int = 25
+    log_fn: Callable = print
+
+    def init_state(self, rng) -> TrainState:
+        params = self.api.init(rng)
+        ef = grad_compress.init_error_feedback(params) \
+            if self.compress_grads else None
+        return TrainState(params=params, opt=self.optimizer.init(params), ef=ef)
+
+    def run(self, total_steps: int, rng=None, state: TrainState | None = None,
+            jit: bool = True) -> tuple[TrainState, list[dict]]:
+        """Train with checkpoint-resume. On a step failure (hardware fault in
+        production; any exception here) the loop restores the last committed
+        checkpoint and continues — up to max_retries per step index."""
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        step_fn = make_train_step(self.api, self.optimizer,
+                                  self.compress_grads)
+        if jit:
+            step_fn = jax.jit(step_fn, donate_argnums=(0,))
+
+        start = 0
+        if state is None:
+            state = self.init_state(rng)
+            if self.ckpt is not None:
+                restored = self.ckpt.restore_latest(state)
+                if restored is not None:
+                    start, state, extra = restored
+                    self.log_fn(f"[trainer] resumed from step {start}")
+
+        history: list[dict] = []
+        retries = 0
+        step = start
+        t0 = time.time()
+        while step < total_steps:
+            batch = {k: jnp.asarray(v)
+                     for k, v in self.source.batch_at(step).items()}
+            try:
+                state, metrics = step_fn(state, batch)
+            except Exception as e:  # noqa: BLE001 — fault-tolerance boundary
+                retries += 1
+                if retries > self.max_retries or self.ckpt is None:
+                    raise
+                self.log_fn(f"[trainer] step {step} failed ({e}); "
+                            f"restoring last checkpoint")
+                restored = self.ckpt.restore_latest(state)
+                if restored is not None:
+                    step, state, _ = restored
+                continue
+            retries = 0
+            step += 1
+            if step % self.log_every == 0 or step == total_steps:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = step
+                m["steps_per_s"] = self.log_every / max(time.time() - t0, 1e-9)
+                t0 = time.time()
+                history.append(m)
+                self.log_fn(f"[trainer] step {step}: loss={m['loss']:.4f} "
+                            f"gnorm={m.get('grad_norm', 0):.3f}")
+            if self.ckpt is not None and step % self.ckpt_every == 0:
+                self.ckpt.save(step, state, blocking=False)
+        if self.ckpt is not None:
+            self.ckpt.save(total_steps, state, blocking=True)
+        return state, history

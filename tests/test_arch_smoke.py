@@ -1,0 +1,122 @@
+"""Per-architecture smoke tests: instantiate the REDUCED same-family config,
+run one forward + one train step on CPU, assert output shapes + no NaNs.
+(The FULL configs are exercised via the dry-run on placeholder devices.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_CONFIGS, SMOKE_CONFIGS
+from repro.configs.base import supported_shapes
+from repro.core.precision import KVTunerSchedule, PrecisionPair
+from repro.models.registry import build_model
+from repro.training.optimizer import AdamW
+from repro.training.trainer import TrainState, make_train_step
+
+jax.config.update("jax_platform_name", "cpu")
+
+B, S = 2, 32
+
+
+def _batch_for(cfg, rng):
+    if cfg.is_encoder:
+        return {
+            "frames": jax.random.normal(rng, (B, S, cfg.frontend_dim),
+                                        jnp.bfloat16),
+            "mask": jax.random.bernoulli(rng, 0.2, (B, S)),
+            "targets": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+        }
+    if cfg.family == "vlm":
+        s_img = min(cfg.image_tokens, 8)
+        return {
+            "tokens": jax.random.randint(rng, (B, S - s_img), 0, cfg.vocab_size),
+            "patch_embeds": jax.random.normal(rng, (B, s_img, cfg.vision_dim),
+                                              jnp.bfloat16),
+        }
+    return {"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size)}
+
+
+@pytest.mark.parametrize("arch", sorted(SMOKE_CONFIGS))
+def test_smoke_forward_and_train_step(arch):
+    cfg = SMOKE_CONFIGS[arch]()
+    api = build_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = api.init(rng)
+    batch = _batch_for(cfg, jax.random.PRNGKey(1))
+
+    logits, aux = api.forward(params, batch)
+    b_eff = B
+    s_eff = S if cfg.family != "vlm" else batch["tokens"].shape[1] + \
+        batch["patch_embeds"].shape[1]
+    assert logits.shape == (b_eff, s_eff, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any()), \
+        f"{arch}: NaN logits"
+
+    opt = AdamW(lr=1e-3)
+    step = jax.jit(make_train_step(api, opt))
+    state = TrainState(params=params, opt=opt.init(params), ef=None)
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"])), f"{arch}: non-finite loss"
+    assert float(metrics["grad_norm"]) > 0
+
+
+@pytest.mark.parametrize("arch", [a for a in sorted(SMOKE_CONFIGS)
+                                  if not SMOKE_CONFIGS[a]().is_encoder])
+def test_smoke_prefill_decode(arch):
+    """Decode parity: one decode step after prefill ≈ the full-forward logits
+    at that position (mixed-precision cache ⇒ bounded deviation)."""
+    cfg = SMOKE_CONFIGS[arch]()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = _batch_for(cfg, jax.random.PRNGKey(1))
+    toks = batch["tokens"]
+    n_attn = len(cfg.attention_layers())
+    sched = KVTunerSchedule.uniform(n_attn, PrecisionPair(8, 8)) if n_attn \
+        else None
+
+    pre = dict(batch)
+    pre["tokens"] = toks[:, :-1]
+    _, state = api.prefill(params, pre, sched, capacity=S + 8)
+    logits, state2 = api.decode_step(params, state, toks[:, -1:])
+    assert logits.shape == (B, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+
+    full, _ = api.forward(params, batch)
+    err = float(jnp.max(jnp.abs(logits.astype(jnp.float32) -
+                                full[:, -1].astype(jnp.float32))))
+    assert err < 0.75, f"{arch}: decode diverges from forward ({err})"
+    assert int(state2.pos[0]) == int(state.pos[0]) + 1
+
+
+@pytest.mark.parametrize("arch", sorted(ARCH_CONFIGS))
+def test_full_config_metadata(arch):
+    """Full configs build, expose the assigned hyperparameters, and report
+    plausible parameter counts (no allocation — metadata only)."""
+    cfg = ARCH_CONFIGS[arch]()
+    assert cfg.num_layers >= 12
+    assert cfg.vocab_size > 0
+    n = cfg.param_count()
+    expected = {
+        "tinyllama-1.1b": 1.1e9, "llava-next-mistral-7b": 7.2e9,
+        "gemma3-27b": 27e9, "deepseek-67b": 67e9, "gemma3-12b": 12e9,
+        "xlstm-125m": 0.125e9, "arctic-480b": 480e9, "grok-1-314b": 314e9,
+        "jamba-v0.1-52b": 52e9, "hubert-xlarge": 1.0e9,
+        "paper-llama3.1-8b": 8e9,
+    }[arch]
+    assert 0.5 * expected < n < 1.7 * expected, \
+        f"{arch}: param count {n/1e9:.2f}B vs expected ~{expected/1e9:.1f}B"
+    shapes = supported_shapes(cfg)
+    assert any(s.name == "train_4k" for s in shapes)
+    if cfg.is_encoder:
+        assert all(s.kind != "decode" for s in shapes)
+
+
+def test_shape_cell_skip_rules():
+    """Exact applicability table from DESIGN.md §5."""
+    expect_long = {"gemma3-27b", "gemma3-12b", "xlstm-125m", "jamba-v0.1-52b"}
+    for arch, cfg_fn in ARCH_CONFIGS.items():
+        if arch == "paper-llama3.1-8b":
+            continue
+        names = {s.name for s in supported_shapes(cfg_fn())}
+        assert ("long_500k" in names) == (arch in expect_long), arch
+        assert ("decode_32k" in names) == (arch != "hubert-xlarge"), arch

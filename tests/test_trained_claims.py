@@ -1,0 +1,96 @@
+"""Paper-claim checks on the TRAINED benchmark model (attention structure is
+what creates the sensitivity asymmetries — random init provably can't, see
+tests/test_kvtuner.py). Uses the cached artifact from benchmarks/common.py;
+skips if it hasn't been trained yet (run `python -m benchmarks.run` first)."""
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.core import sensitivity
+from repro.core.clustering import cluster_layers
+from repro.core.precision import MODE_KIVI, MODE_PER_TOKEN
+from repro.core.pruning import prune_intra_layer
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def trained():
+    from benchmarks.common import ART_DIR, get_bench_model
+    if not os.path.isdir(ART_DIR) or not os.listdir(ART_DIR):
+        pytest.skip("bench model not trained yet (run python -m benchmarks.run)")
+    ctx = get_bench_model()
+    caps = sensitivity.capture_activations(ctx.api, ctx.params,
+                                           ctx.calib_batches())
+    return ctx, caps
+
+
+def test_trained_model_solves_task(trained):
+    from repro.data import synthetic
+    ctx, _ = trained
+    eb = ctx.eval_batches(1, 32)[0]
+    logits, _ = ctx.api.forward(ctx.params, eb)
+    em = synthetic.exact_match_accuracy(
+        logits, {k: np.asarray(v) for k, v in eb.items()})
+    assert em > 0.9
+
+
+def test_errors_monotone_and_key_sensitivity(trained):
+    """Monotonicity + Lemma-1 consistency.
+
+    Our trained 2M model's attention is highly *concentrated* (the chain task
+    induces streaming/positional heads) — exactly the regime the paper's
+    Lemma 1 proves robust to key quantization. So unlike the 8B models of
+    Table 3 (retrieval-heavy → key-dominant errors), this model is
+    value-sensitive; we assert the predictions that are scale-invariant:
+    monotonicity in bits, key degradation at matched value precision, and
+    the concentration-robustness link itself (checked in the benchmark's
+    sparsity/e_o correlation). See EXPERIMENTS.md §Reproduction scale note.
+    """
+    ctx, caps = trained
+    for mode in (MODE_PER_TOKEN, MODE_KIVI):
+        errs = sensitivity.layer_errors(caps, ctx.api.cfg, mode)
+        names = {p.name: i for i, p in enumerate(errs.pairs)}
+        eo = errs.e_o.mean(axis=0)
+        assert eo[names["KV8"]] < eo[names["KV4"]] < eo[names["KV2"]]
+        # dropping K bits at fixed V strictly hurts (both columns)
+        assert eo[names["K2V4"]] > eo[names["K8V4"]]
+        assert eo[names["K2V8"]] > eo[names["K8V8" if "K8V8" in names
+                                          else "KV8"]]
+    # Lemma 1: the model's attention is concentrated → keys must be MORE
+    # robust than values here (the inverse of the paper's 8B retrieval-heavy
+    # regime, and the direct prediction of its own theory)
+    errs = sensitivity.layer_errors(caps, ctx.api.cfg, MODE_PER_TOKEN)
+    names = {p.name: i for i, p in enumerate(errs.pairs)}
+    eo = errs.e_o.mean(axis=0)
+    sparsity = sensitivity.attention_pattern_stats(caps, ctx.api.cfg.q_per_kv)
+    if sparsity.mean() > 0.5:  # concentrated-attention regime
+        assert eo[names["K2V8"]] < eo[names["K8V2"]]
+
+
+def test_layer_profile_prompt_independent(trained):
+    """§4.5: sensitivity profile is a model property, not a prompt property."""
+    ctx, caps = trained
+    errs_a = sensitivity.layer_errors(caps, ctx.api.cfg, MODE_PER_TOKEN)
+    caps_b = sensitivity.capture_activations(
+        ctx.api, ctx.params, ctx.calib_batches(seed=987654))
+    errs_b = sensitivity.layer_errors(caps_b, ctx.api.cfg, MODE_PER_TOKEN)
+    i = [p.name for p in errs_a.pairs].index("KV4")
+    corr = np.corrcoef(errs_a.e_o[:, i], errs_b.e_o[:, i])[0, 1]
+    assert corr > 0.8, f"layer profile not prompt-independent (corr={corr:.3f})"
+
+
+def test_pipeline_reduces_space_on_trained_model(trained):
+    ctx, caps = trained
+    errs = sensitivity.layer_errors(caps, ctx.api.cfg, MODE_PER_TOKEN)
+    pruned = prune_intra_layer(errs)
+    groups = cluster_layers(pruned, eps=0.25)
+    L = pruned.num_layers
+    assert pruned.space_size() < 9.0 ** L
+    assert groups.search_space_size() <= pruned.space_size()
+    assert groups.num_groups <= L
