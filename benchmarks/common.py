@@ -26,7 +26,10 @@ from repro.training.trainer import Trainer, TrainState
 
 ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                        "artifacts", "bench_model")
-TRAIN_STEPS = 700
+# 700 steps leaves the chain task half-solved (exact-match ~0.56, loss still
+# falling); the paper-claim tests gate on a model that actually solves it
+# (tests/test_trained_claims.py needs exact-match > 0.9, reached by ~2000).
+TRAIN_STEPS = 2000
 
 
 def bench_config() -> ModelConfig:

@@ -44,6 +44,9 @@ def main() -> None:
             pop=8 if args.fast else 16),
         "t8_throughput": lambda: table8_throughput.run(
             ctx, n_prompts=4 if args.fast else 8),
+        "t8_engines": lambda: table8_throughput.run_engines(
+            ctx, n_requests=6 if args.fast else 10,
+            max_new=6 if args.fast else 8),
         "kernels_micro": lambda: kernels_micro.run(ctx),
     }
     checkers = {
@@ -54,6 +57,7 @@ def main() -> None:
         "t10_clustering": table10_clustering.check_paper_claims,
         "t5_accuracy": table5_accuracy.check_paper_claims,
         "t8_throughput": table8_throughput.check_paper_claims,
+        "t8_engines": table8_throughput.check_engine_claims,
         "kernels_micro": kernels_micro.check_paper_claims,
     }
     wanted = set(tables) if args.tables == "all" else \

@@ -1,0 +1,138 @@
+"""Reusable quantize/pack/dequant codec for KV cache segments.
+
+Extracted from ``LayerKVCache`` so every storage layout — the dense per-request
+segment cache and the shared paged block pool — speaks the same packed format:
+uint8 codes packed along head_dim + per-group f32 (scale, zero), with the
+grouped-scale convention of ``repro.core.quant``.
+
+A ``SegmentCodec`` describes ONE side (K or V) with a resolved mode
+(per-token or per-channel; the 'kivi' pair mode is resolved by ``KVCodec``).
+Precision is static — bits/mode are python values, so every codec method
+lowers with zero dynamic control flow (the KVTuner property).
+
+Shape convention: segments are ``[*lead, S, D]`` with arbitrary leading axes
+(``[B, Hkv]`` for the dense cache, ``[N_blocks, Hkv]`` for the paged pool).
+Grouped scale/zero shapes:
+
+* per-channel (groups of ``R`` tokens): ``[*lead, S/R, 1, D]``
+* per-token (groups of ``min(R, D)`` channels): ``[*lead, S, D/g, 1]``
+* bits >= 16 (no quantization): scale/zero collapse to a ``(1,)`` dummy.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.precision import (MODE_KIVI, MODE_PER_CHANNEL, MODE_PER_TOKEN,
+                                  PrecisionPair)
+
+
+def kv_modes(mode: str) -> tuple[str, str]:
+    """Resolve a pair mode to (k_mode, v_mode); 'kivi' = per-channel keys,
+    per-token values (paper §4.2)."""
+    if mode == MODE_KIVI:
+        return MODE_PER_CHANNEL, MODE_PER_TOKEN
+    return mode, mode
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentCodec:
+    """Static codec for one packed K or V segment."""
+
+    bits: int
+    mode: str          # resolved per-segment mode (never 'kivi')
+    group_size: int
+    head_dim: int
+
+    @property
+    def quantized(self) -> bool:
+        return self.bits < 16
+
+    @property
+    def code_dim(self) -> int:
+        """Packed last-axis width of the codes tensor."""
+        d = self.head_dim
+        return d if self.bits >= 16 else d * self.bits // 8
+
+    def scale_shape(self, lead: tuple, n_tokens: int) -> tuple:
+        if self.bits >= 16:
+            return (1,)
+        d, r = self.head_dim, self.group_size
+        if self.mode == MODE_PER_CHANNEL:  # groups along S
+            return (*lead, n_tokens // r, 1, d)
+        return (*lead, n_tokens, d // min(r, d), 1)
+
+    def init_segment(self, lead: tuple, n_tokens: int, dtype):
+        """Zero-initialized (codes, scale, zero) for a [*lead, n_tokens, D]
+        segment; raw dtype storage when bits >= 16."""
+        if self.bits >= 16:
+            codes = jnp.zeros((*lead, n_tokens, self.head_dim), dtype)
+            # two distinct dummies: aliased buffers break jit donation
+            return (codes, jnp.zeros((1,), jnp.float32),
+                    jnp.zeros((1,), jnp.float32))
+        codes = jnp.zeros((*lead, n_tokens, self.code_dim), jnp.uint8)
+        sshape = self.scale_shape(lead, n_tokens)
+        return codes, jnp.ones(sshape, jnp.float32), jnp.zeros(sshape, jnp.float32)
+
+    def encode(self, x: jax.Array):
+        """x [*lead, S, D] → (codes, scale, zero). Passthrough when bits>=16
+        (dummy scale/zero so the pytree structure is layout-stable)."""
+        if self.bits >= 16:
+            dummy = jnp.zeros((1,), jnp.float32)
+            return x, dummy, dummy
+        qt = quant.quantize(x, self.bits, self.mode, self.group_size)
+        return qt.codes, qt.scale, qt.zero
+
+    def decode(self, codes: jax.Array, scale: jax.Array, zero: jax.Array,
+               dtype=jnp.bfloat16) -> jax.Array:
+        """codes [*lead, S, cd] → X̂ [*lead, S, D] (any number of lead axes)."""
+        if self.bits >= 16:
+            return codes.astype(dtype)
+        *lead, s, _ = codes.shape
+        d, r = self.head_dim, self.group_size
+        raw = quant.unpack_codes(codes, self.bits).astype(jnp.float32)
+        if self.mode == MODE_PER_CHANNEL:
+            rg = raw.reshape(*lead, s // r, r, d)
+            out = rg * scale + zero
+        else:
+            g = min(r, d)
+            rg = raw.reshape(*lead, s, d // g, g)
+            out = rg * scale + zero
+        return out.reshape(*lead, s, d).astype(dtype)
+
+    def segment_bytes(self, lead: tuple, n_tokens: int, dtype) -> int:
+        """Packed bytes of a [*lead, n_tokens, D] segment incl. scale/zero."""
+        import numpy as np
+
+        n_lead = int(np.prod(lead)) if lead else 1
+        if self.bits >= 16:
+            return n_lead * n_tokens * self.head_dim * jnp.dtype(dtype).itemsize
+        codes = n_lead * n_tokens * self.code_dim
+        scales = 2 * 4 * int(np.prod(self.scale_shape(lead, n_tokens)))
+        return codes + scales
+
+
+@dataclasses.dataclass(frozen=True)
+class KVCodec:
+    """The (K, V) codec pair for one attention layer."""
+
+    k: SegmentCodec
+    v: SegmentCodec
+    mode: str          # original pair mode (may be 'kivi')
+    group_size: int
+
+    @classmethod
+    def make(cls, pair: PrecisionPair, mode: str, group_size: int,
+             head_dim: int) -> "KVCodec":
+        k_mode, v_mode = kv_modes(mode)
+        return cls(
+            k=SegmentCodec(pair.k_bits, k_mode, group_size, head_dim),
+            v=SegmentCodec(pair.v_bits, v_mode, group_size, head_dim),
+            mode=mode, group_size=group_size)
+
+    @property
+    def head_dim(self) -> int:
+        return self.k.head_dim

@@ -26,28 +26,13 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.cache.codec import KVCodec, SegmentCodec, kv_modes
 from repro.core.precision import (MODE_KIVI, MODE_PER_CHANNEL, MODE_PER_TOKEN,
                                   PrecisionPair)
 from repro.core import quant
 
-
-def _kv_modes(mode: str) -> tuple[str, str]:
-    if mode == MODE_KIVI:
-        return MODE_PER_CHANNEL, MODE_PER_TOKEN
-    return mode, mode
-
-
-def _code_dim(d: int, bits: int) -> int:
-    return d if bits >= 16 else d * bits // 8
-
-
-def _scale_shape(b, h, n_groups_s, d, mode, group_size, bits):
-    """Grouped scale/zero shape per repro.core.quant._group_reshape convention."""
-    if bits >= 16:
-        return (1,)
-    if mode == MODE_PER_CHANNEL:  # groups along S
-        return (b, h, n_groups_s, 1, d)
-    return (b, h, n_groups_s * group_size, d // min(group_size, d), 1)
+# Back-compat alias: the mode-pair resolution now lives in the shared codec.
+_kv_modes = kv_modes
 
 
 @jax.tree_util.register_dataclass
@@ -86,21 +71,10 @@ class LayerKVCache:
             # round the group count to a multiple of 16 so scale/zero tensors
             # (whose dim is n_groups) stay shardable on a 16-wide mesh axis
             s_cap = -(-s_cap // (16 * r)) * (16 * r)
-        ng = s_cap // r
-        k_mode, v_mode = _kv_modes(mode)
         b, h, d = batch, kv_heads, head_dim
-
-        def seg(bits, m):
-            if bits >= 16:
-                codes = jnp.zeros((b, h, s_cap, d), dtype)
-                sc = jnp.zeros((1,), jnp.float32)
-                return codes, sc, sc
-            codes = jnp.zeros((b, h, s_cap, _code_dim(d, bits)), jnp.uint8)
-            sshape = _scale_shape(b, h, ng, d, m, r, bits)
-            return codes, jnp.ones(sshape, jnp.float32), jnp.zeros(sshape, jnp.float32)
-
-        kc, ks, kz = seg(pair.k_bits, k_mode)
-        vc, vs, vz = seg(pair.v_bits, v_mode)
+        codec = KVCodec.make(pair, mode, r, d)
+        kc, ks, kz = codec.k.init_segment((b, h), s_cap, dtype)
+        vc, vs, vz = codec.v.init_segment((b, h), s_cap, dtype)
         return cls(
             k_codes=kc, k_scale=ks, k_zero=kz, v_codes=vc, v_scale=vs, v_zero=vz,
             k_res=jnp.zeros((b, h, r, d), dtype), v_res=jnp.zeros((b, h, r, d), dtype),
@@ -115,6 +89,12 @@ class LayerKVCache:
     @property
     def head_dim(self) -> int:
         return self.k_res.shape[3]
+
+    @property
+    def codec(self) -> KVCodec:
+        """The layer's static (K, V) codec — shared with the paged pool."""
+        return KVCodec.make(PrecisionPair(self.k_bits, self.v_bits), self.mode,
+                            self.group_size, self.head_dim)
 
     def _quant_block(self, block: jax.Array, bits: int, m: str):
         """Quantize one [B,H,R,D] token block → (codes, scale, zero) with the
@@ -232,19 +212,8 @@ class LayerKVCache:
 
     # ------------------------------------------------------------- dequant
     def _deq(self, codes, scale, zero, bits, m, dtype):
-        if bits >= 16:
-            return codes.astype(dtype)
-        b, h, s, _ = codes.shape
-        d = self.head_dim
-        raw = quant.unpack_codes(codes, bits).astype(jnp.float32)
-        if m == MODE_PER_CHANNEL:
-            rg = raw.reshape(b, h, s // self.group_size, self.group_size, d)
-            out = rg * scale + zero
-        else:
-            g = min(self.group_size, d)
-            rg = raw.reshape(b, h, s, d // g, g)
-            out = rg * scale + zero
-        return out.reshape(b, h, s, d).astype(dtype)
+        return SegmentCodec(bits, m, self.group_size, self.head_dim).decode(
+            codes, scale, zero, dtype)
 
     def dequant(self, dtype=jnp.bfloat16):
         """Full materialized (K̂, V̂, valid) of shape [B,H,S_cap+R,D]; `valid`

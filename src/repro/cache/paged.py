@@ -1,0 +1,292 @@
+"""Shared paged pool of quantized KV blocks (vLLM-style, TPU-static shapes).
+
+Instead of one private ``ceil(S/R)·R`` segment per request, every attention
+layer owns ONE global pool of ``num_blocks`` packed blocks; a block holds
+exactly ``R = group_size`` tokens, so each block is one quantization group
+(one per-channel scale row, or R per-token scale rows). Requests map logical
+group ``g`` to a physical block through a per-slot **page table** shared by
+all layers; blocks are allocated at admission and recycled when a request
+finishes — continuous batching without reshaping or re-jitting anything.
+
+Layout per layer (per-layer static ``(k_bits, v_bits)`` preserved, so mixed
+precision still lowers with zero dynamic control flow):
+
+* ``k_codes [N, Hkv, R, D·kb/8]`` uint8 (raw dtype when bits >= 16)
+* ``k_scale/k_zero``: per-channel ``[N, Hkv, 1, 1, D]``,
+  per-token ``[N, Hkv, R, D/g, 1]``, dummy ``(1,)`` when unquantized
+* same for V, plus per-slot bf16 residual windows
+  ``k_res/v_res [max_slots, Hkv, R, D]`` and nothing else — lengths and the
+  page table live in the decode state, shared across layers.
+
+**Block 0 is reserved as a scratch block**: conditional flushes scatter
+non-flushing slots' (quantized-but-dead) residuals there, so the decode step
+has no per-slot control flow. Page-table entries of unallocated groups also
+point at block 0; both are masked out by the per-slot length, so its contents
+are never observed.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.cache.codec import KVCodec
+from repro.cache.kvcache import LayerKVCache
+from repro.core.precision import MODE_PER_CHANNEL, MODE_PER_TOKEN, PrecisionPair
+
+#: physical block id reserved as the scatter target for masked-out writes.
+SCRATCH_BLOCK = 0
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PagedKVPool:
+    """One attention layer's share of the paged pool. A registered pytree;
+    bits/mode/sizes are static aux data (compile-time per layer)."""
+
+    k_codes: jax.Array
+    k_scale: jax.Array
+    k_zero: jax.Array
+    v_codes: jax.Array
+    v_scale: jax.Array
+    v_zero: jax.Array
+    k_res: jax.Array   # [max_slots, Hkv, R, D] working dtype
+    v_res: jax.Array
+
+    k_bits: int = dataclasses.field(metadata=dict(static=True))
+    v_bits: int = dataclasses.field(metadata=dict(static=True))
+    mode: str = dataclasses.field(metadata=dict(static=True))
+    group_size: int = dataclasses.field(metadata=dict(static=True))
+
+    # ------------------------------------------------------------- create
+    @classmethod
+    def init(cls, num_blocks: int, max_slots: int, kv_heads: int,
+             head_dim: int, pair: PrecisionPair, mode: str = MODE_PER_TOKEN,
+             group_size: int = 32, dtype=jnp.bfloat16) -> "PagedKVPool":
+        codec = KVCodec.make(pair, mode, group_size, head_dim)
+        r = group_size
+        kc, ks, kz = codec.k.init_segment((num_blocks, kv_heads), r, dtype)
+        vc, vs, vz = codec.v.init_segment((num_blocks, kv_heads), r, dtype)
+        # separate residual buffers: the serving state is jit-donated, and
+        # donating one buffer twice (aliased k_res/v_res) is an XLA error
+        k_res = jnp.zeros((max_slots, kv_heads, r, head_dim), dtype)
+        v_res = jnp.zeros((max_slots, kv_heads, r, head_dim), dtype)
+        return cls(k_codes=kc, k_scale=ks, k_zero=kz, v_codes=vc, v_scale=vs,
+                   v_zero=vz, k_res=k_res, v_res=v_res,
+                   k_bits=pair.k_bits, v_bits=pair.v_bits, mode=mode,
+                   group_size=r)
+
+    # ------------------------------------------------------------ helpers
+    @property
+    def num_blocks(self) -> int:
+        return self.k_codes.shape[0]
+
+    @property
+    def max_slots(self) -> int:
+        return self.k_res.shape[0]
+
+    @property
+    def head_dim(self) -> int:
+        return self.k_res.shape[3]
+
+    @property
+    def codec(self) -> KVCodec:
+        return KVCodec.make(PrecisionPair(self.k_bits, self.v_bits), self.mode,
+                            self.group_size, self.head_dim)
+
+    # ------------------------------------------------------------- prefill
+    def adopt_prefill(self, cache: LayerKVCache, slot: jax.Array,
+                      pages: jax.Array) -> "PagedKVPool":
+        """Copy a freshly prefilled dense **batch-1** ``LayerKVCache`` into
+        this pool: the first ``len(pages)`` full groups go to physical blocks
+        ``pages``; the cache's residual window goes to the slot's residual.
+
+        Group-block equality is by construction: the dense prefill quantizes
+        per R-token group with the same codec, so adopted blocks are bitwise
+        what the wave engine's cache holds.
+        """
+        if (cache.k_bits, cache.v_bits, cache.mode, cache.group_size) != \
+                (self.k_bits, self.v_bits, self.mode, self.group_size):
+            raise ValueError("cache codec does not match pool codec")
+        n_groups = int(pages.shape[0])   # static
+        r = self.group_size
+        hkv = self.k_res.shape[1]
+        c = self.codec
+
+        def side(codes_p, scale_p, zero_p, codes_c, scale_c, zero_c, seg):
+            if n_groups:
+                blk = codes_c[0, :, :n_groups * r] \
+                    .reshape(hkv, n_groups, r, -1).transpose(1, 0, 2, 3)
+                codes_p = codes_p.at[pages].set(blk.astype(codes_p.dtype))
+                if seg.quantized:
+                    if seg.mode == MODE_PER_CHANNEL:
+                        sb = scale_c[0, :, :n_groups].transpose(1, 0, 2, 3)[:, :, None]
+                        zb = zero_c[0, :, :n_groups].transpose(1, 0, 2, 3)[:, :, None]
+                    else:
+                        gg = scale_c.shape[-2]
+                        sb = scale_c[0, :, :n_groups * r] \
+                            .reshape(hkv, n_groups, r, gg, 1).transpose(1, 0, 2, 3, 4)
+                        zb = zero_c[0, :, :n_groups * r] \
+                            .reshape(hkv, n_groups, r, gg, 1).transpose(1, 0, 2, 3, 4)
+                    scale_p = scale_p.at[pages].set(sb)
+                    zero_p = zero_p.at[pages].set(zb)
+            return codes_p, scale_p, zero_p
+
+        kc, ks, kz = side(self.k_codes, self.k_scale, self.k_zero,
+                          cache.k_codes, cache.k_scale, cache.k_zero, c.k)
+        vc, vs, vz = side(self.v_codes, self.v_scale, self.v_zero,
+                          cache.v_codes, cache.v_scale, cache.v_zero, c.v)
+        k_res = self.k_res.at[slot].set(cache.k_res[0].astype(self.k_res.dtype))
+        v_res = self.v_res.at[slot].set(cache.v_res[0].astype(self.v_res.dtype))
+        return dataclasses.replace(self, k_codes=kc, k_scale=ks, k_zero=kz,
+                                   v_codes=vc, v_scale=vs, v_zero=vz,
+                                   k_res=k_res, v_res=v_res)
+
+    # -------------------------------------------------------------- append
+    def append(self, k_new: jax.Array, v_new: jax.Array, lengths: jax.Array,
+               alive: jax.Array, page_table: jax.Array) -> "PagedKVPool":
+        """Append one token per live slot; flush full residual groups into
+        their page-table block. Fully batched, no per-slot control flow:
+
+        * the residual write is a masked one-hot update at ``lengths % R``;
+        * every slot's residual is (re)quantized each step, but only slots
+          whose new length crosses a group boundary scatter to their real
+          block — everyone else scatters to :data:`SCRATCH_BLOCK`.
+
+        ``k_new/v_new [max_slots, Hkv, 1, D]``; ``lengths [max_slots]`` i32
+        pre-append; ``alive [max_slots]`` bool; ``page_table [max_slots, P]``.
+        """
+        r = self.group_size
+        slot_in_group = jnp.mod(lengths, r)
+        write = (jnp.arange(r)[None, :] == slot_in_group[:, None]) \
+            & alive[:, None]
+        wmask = write[:, None, :, None]
+        k_res = jnp.where(wmask, k_new.astype(self.k_res.dtype), self.k_res)
+        v_res = jnp.where(wmask, v_new.astype(self.v_res.dtype), self.v_res)
+
+        new_len = lengths + alive.astype(jnp.int32)
+        flush = alive & (jnp.mod(new_len, r) == 0)
+        g = jnp.maximum(new_len // r - 1, 0)
+        bids = jnp.where(
+            flush,
+            jnp.take_along_axis(page_table, g[:, None], axis=1)[:, 0],
+            SCRATCH_BLOCK)
+
+        c = self.codec
+
+        def side(codes_p, scale_p, zero_p, res, seg):
+            bc, bs, bz = seg.encode(res)   # [max_slots, Hkv, R, ...]
+            codes_p = codes_p.at[bids].set(bc)
+            if seg.quantized:
+                scale_p = scale_p.at[bids].set(bs)
+                zero_p = zero_p.at[bids].set(bz)
+            return codes_p, scale_p, zero_p
+
+        kc, ks, kz = side(self.k_codes, self.k_scale, self.k_zero, k_res, c.k)
+        vc, vs, vz = side(self.v_codes, self.v_scale, self.v_zero, v_res, c.v)
+        return dataclasses.replace(self, k_codes=kc, k_scale=ks, k_zero=kz,
+                                   v_codes=vc, v_scale=vs, v_zero=vz,
+                                   k_res=k_res, v_res=v_res)
+
+    # ------------------------------------------------------------- dequant
+    def gather_dequant(self, page_table: jax.Array, dtype=jnp.bfloat16):
+        """Materialize per-slot (K̂, V̂) ``[max_slots, Hkv, P·R, D]`` by
+        gathering pool blocks through the page table (XLA reference path;
+        the Pallas kernel streams blocks via the same table instead)."""
+        c = self.codec
+
+        def side(codes, scale, zero, seg):
+            blocks = codes[page_table]                  # [B, P, Hkv, R, cd]
+            if seg.quantized:
+                s, z = scale[page_table], zero[page_table]
+            else:
+                s, z = scale, zero
+            x = seg.decode(blocks, s, z, dtype)         # [B, P, Hkv, R, D]
+            b, p, h, r, d = x.shape
+            return x.transpose(0, 2, 1, 3, 4).reshape(b, h, p * r, d)
+
+        k = side(self.k_codes, self.k_scale, self.k_zero, c.k)
+        v = side(self.v_codes, self.v_scale, self.v_zero, c.v)
+        return k, v
+
+    # --------------------------------------------------------------- sizes
+    def block_bytes(self) -> int:
+        """Packed bytes of ONE block (codes + scales, K and V)."""
+        import numpy as np
+
+        total = 0
+        for arr in (self.k_codes, self.k_scale, self.k_zero, self.v_codes,
+                    self.v_scale, self.v_zero):
+            n = int(np.prod(arr.shape)) * arr.dtype.itemsize
+            total += n // self.num_blocks if arr.ndim > 1 else 0
+        return total
+
+    def pool_bytes(self) -> int:
+        import numpy as np
+
+        total = 0
+        for arr in (self.k_codes, self.k_scale, self.k_zero, self.v_codes,
+                    self.v_scale, self.v_zero, self.k_res, self.v_res):
+            total += int(np.prod(arr.shape)) * arr.dtype.itemsize
+        return total
+
+
+def init_model_pools(cfg, schedule, max_slots: int, num_blocks: int) -> list:
+    """Per-attention-layer paged pools following a KVTunerSchedule (mirrors
+    ``init_model_cache``). Non-attention layers get ``None``.
+
+    Windowed (local-attention) layers are not paged yet — their ring caches
+    are bounded by the window and gain nothing from paging; configs using
+    them must serve through the wave engine.
+    """
+    from repro.configs.base import ATTN_LOCAL
+
+    kinds = cfg.layer_kinds()
+    attn_ids = cfg.attention_layers()
+    pools: list = []
+    for i, kind in enumerate(kinds):
+        if i not in attn_ids:
+            pools.append(None)
+            continue
+        if kind == ATTN_LOCAL:
+            raise NotImplementedError(
+                "paged KV pool does not support windowed local-attention "
+                "layers; use the wave engine for this config")
+        pair = schedule[attn_ids.index(i)] if schedule is not None else \
+            PrecisionPair(16, 16)
+        pools.append(PagedKVPool.init(
+            num_blocks, max_slots, cfg.num_kv_heads, cfg.head_dim, pair,
+            mode=schedule.mode if schedule is not None else MODE_PER_TOKEN,
+            group_size=cfg.kv_group_size, dtype=jnp.dtype(cfg.dtype)))
+    return pools
+
+
+class BlockAllocator:
+    """Host-side free-list allocator over physical block ids ``1..N-1``
+    (block 0 is the scratch block). Purely python — allocation happens
+    between jitted steps, never inside them."""
+
+    def __init__(self, num_blocks: int):
+        self.num_blocks = num_blocks
+        self._free = list(range(num_blocks - 1, 0, -1))
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list[int] | None:
+        """n block ids, or None if the pool can't satisfy the request."""
+        if n > len(self._free):
+            return None
+        if n == 0:
+            return []
+        taken = self._free[-n:][::-1]
+        del self._free[len(self._free) - n:]
+        return taken
+
+    def release(self, blocks) -> None:
+        for b in blocks:
+            if not 0 < b < self.num_blocks:
+                raise ValueError(f"bad block id {b}")
+            self._free.append(b)

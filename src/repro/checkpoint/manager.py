@@ -2,7 +2,9 @@
 
 Layout per step:  <dir>/step_<N>/
     manifest.json           tree structure, shapes, dtypes, step metadata
-    <leaf-key>.npz.zst      zstd-compressed raw buffers (one file per leaf)
+    <leaf-key>.zst|.bin     raw buffers, one file per leaf (zstd-compressed
+                            when the optional ``zstandard`` module is present,
+                            plain bytes otherwise; restore handles either)
     COMMITTED               written last — partial checkpoints are never loaded
 
 Design points for the 1000-node posture:
@@ -27,7 +29,11 @@ from typing import Any
 
 import jax
 import numpy as np
-import zstandard as zstd
+
+try:  # optional dependency: compression only, format stays readable without it
+    import zstandard as zstd
+except ImportError:
+    zstd = None
 
 _SEP = "/"
 
@@ -71,14 +77,16 @@ class CheckpointManager:
             os.makedirs(tmp)
             manifest = {"step": step, "extra": extra or {},
                         "treedef": str(treedef), "leaves": {}}
-            cctx = zstd.ZstdCompressor(level=3)
+            cctx = zstd.ZstdCompressor(level=3) if zstd is not None else None
+            ext = ".zst" if cctx is not None else ".bin"
             for key, arr in host.items():
-                fname = key.replace(_SEP, "__") + ".zst"
+                fname = key.replace(_SEP, "__") + ext
                 manifest["leaves"][key] = {
                     "shape": list(arr.shape), "dtype": str(arr.dtype),
                     "file": fname}
+                buf = arr.tobytes()
                 with open(os.path.join(tmp, fname), "wb") as f:
-                    f.write(cctx.compress(arr.tobytes()))
+                    f.write(cctx.compress(buf) if cctx is not None else buf)
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
                 json.dump(manifest, f)
             with open(os.path.join(tmp, "COMMITTED"), "w") as f:
@@ -127,7 +135,7 @@ class CheckpointManager:
             raise FileNotFoundError(f"no committed checkpoint at step {step}")
         with open(os.path.join(path, "manifest.json")) as f:
             manifest = json.load(f)
-        dctx = zstd.ZstdDecompressor()
+        dctx = zstd.ZstdDecompressor() if zstd is not None else None
         flat_target = _flatten(target_tree)
         flat_shard = _flatten(shardings) if shardings is not None else {}
         out_flat = {}
@@ -136,7 +144,13 @@ class CheckpointManager:
             if meta is None:
                 raise KeyError(f"checkpoint missing leaf {key!r}")
             with open(os.path.join(path, meta["file"]), "rb") as f:
-                buf = dctx.decompress(f.read())
+                buf = f.read()
+            if meta["file"].endswith(".zst"):
+                if dctx is None:
+                    raise RuntimeError(
+                        "checkpoint was written zstd-compressed but the "
+                        "'zstandard' module is not installed")
+                buf = dctx.decompress(buf)
             arr = np.frombuffer(buf, dtype=np.dtype(meta["dtype"])) \
                 .reshape(meta["shape"]).copy()
             sh = flat_shard.get(key)

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.precision import MODE_PER_CHANNEL, MODE_PER_TOKEN
+from repro.kernels.runtime import resolve_interpret
 
 DEFAULT_BLOCK_S = 128
 
@@ -65,9 +66,12 @@ def _kvquant_kernel(x_ref, codes_ref, scale_ref, zero_ref, *, bits: int,
                                              "block_s", "interpret"))
 def kvquant(x: jax.Array, bits: int, mode: str = MODE_PER_TOKEN,
             group_size: int = 32, block_s: int = DEFAULT_BLOCK_S,
-            interpret: bool = True):
+            interpret: bool | None = None):
     """x [N, S, D] → (codes [N,S,D·bits/8] u8, scale, zero f32) matching the
-    repro.core.quant layout. N is flattened batch×kv_heads."""
+    repro.core.quant layout. N is flattened batch×kv_heads.
+
+    ``interpret=None`` resolves backend-aware (repro.kernels.runtime)."""
+    interpret = resolve_interpret(interpret)
     n, s, d = x.shape
     block_s = min(block_s, s)
     assert s % block_s == 0 and block_s % group_size == 0, (s, block_s)

@@ -15,10 +15,7 @@ from repro.core.precision import MODE_PER_TOKEN
 from repro.kernels import kvquant as kvquant_kernel
 from repro.kernels import qdecode as qdecode_kernel
 from repro.kernels import ref
-
-
-def default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+from repro.kernels.runtime import default_interpret
 
 
 def kvquant(x: jax.Array, bits: int, mode: str = MODE_PER_TOKEN,
@@ -73,20 +70,65 @@ def qdecode_attention(q: jax.Array, cache: LayerKVCache, positions, kind: str,
         k_bits=cache.k_bits, v_bits=cache.v_bits, k_mode=k_mode, v_mode=v_mode,
         group_size=cache.group_size, interpret=interpret)
 
-    # Residual window (≤ R recent bf16 tokens): plain XLA partial softmax.
-    n_res = cache.length - cache.length // r * r
-    k_res = cache.k_res.astype(jnp.float32)  # [B,Hkv,R,D]
-    v_res = cache.v_res.astype(jnp.float32)
-    scores = jnp.einsum("bhgd,bhsd->bhgs", qg.astype(jnp.float32), k_res) \
+    res = _residual_partial(qg, cache.k_res, cache.v_res,
+                            cache.length - cache.length // r * r)
+    out = ref.softmax_merge([(o_main, m_main, l_main), res])
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def _residual_partial(qg, k_res, v_res, n_res):
+    """Partial softmax over the bf16 residual window (≤ R recent tokens),
+    plain XLA. qg [B,Hkv,G,D]; k_res/v_res [B,Hkv,R,D]; n_res [] or [B] i32.
+    Returns un-normalized (o, m, l) for flash-merging with the main segment."""
+    d = qg.shape[-1]
+    r = k_res.shape[2]
+    kf = k_res.astype(jnp.float32)
+    vf = v_res.astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bhsd->bhgs", qg.astype(jnp.float32), kf) \
         / jnp.sqrt(float(d))
-    valid = (jnp.arange(cache.residual_len) < n_res)[None, None, None, :]
+    n_res = jnp.asarray(n_res)
+    if n_res.ndim == 0:
+        valid = (jnp.arange(r) < n_res)[None, None, None, :]
+    else:
+        valid = (jnp.arange(r)[None, :] < n_res[:, None])[:, None, None, :]
     scores = jnp.where(valid, scores, -jnp.inf)
     m_res = jnp.max(scores, axis=-1)
     m_res_safe = jnp.where(jnp.isfinite(m_res), m_res, qdecode_kernel.NEG)
     p = jnp.where(valid, jnp.exp(scores - m_res_safe[..., None]), 0.0)
     l_res = jnp.sum(p, axis=-1)
-    o_res = jnp.einsum("bhgs,bhsd->bhgd", p, v_res)
+    o_res = jnp.einsum("bhgs,bhsd->bhgd", p, vf)
+    return o_res, m_res_safe, l_res
 
-    out = ref.softmax_merge([(o_main, m_main, l_main),
-                             (o_res, m_res_safe, l_res)])
+
+def qdecode_paged_attention(q: jax.Array, pool, page_table: jax.Array,
+                            lengths: jax.Array,
+                            interpret: bool | None = None) -> jax.Array:
+    """Fused decode attention over the shared paged block pool.
+
+    q [B, 1, H, hd] (one new token per slot, post-rope); ``pool`` is a
+    ``repro.cache.paged.PagedKVPool``; page_table [B, P] physical block ids;
+    lengths [B] effective per-slot token counts (post-append). The paged main
+    segment goes through the scalar-prefetch Pallas kernel; each slot's bf16
+    residual window is attended in XLA and flash-merged. Returns [B, 1, H, hd].
+    """
+    from repro.cache.paged import PagedKVPool  # noqa: F401 (doc/type only)
+
+    interpret = default_interpret() if interpret is None else interpret
+    b, _, h, d = q.shape
+    hkv = pool.k_res.shape[1]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, d)
+    k_mode, v_mode = _kv_modes(pool.mode)
+    r = pool.group_size
+    n_main = (lengths // r * r).astype(jnp.int32)
+
+    o_main, m_main, l_main = qdecode_kernel.qdecode_paged(
+        qg, pool.k_codes, pool.k_scale, pool.k_zero,
+        pool.v_codes, pool.v_scale, pool.v_zero,
+        page_table, n_main,
+        k_bits=pool.k_bits, v_bits=pool.v_bits, k_mode=k_mode, v_mode=v_mode,
+        group_size=r, interpret=interpret)
+
+    res = _residual_partial(qg, pool.k_res, pool.v_res, lengths - n_main)
+    out = ref.softmax_merge([(o_main, m_main, l_main), res])
     return out.reshape(b, 1, h, d).astype(q.dtype)

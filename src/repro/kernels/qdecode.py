@@ -24,6 +24,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.precision import MODE_PER_CHANNEL, MODE_PER_TOKEN
+from repro.kernels.runtime import resolve_interpret
 
 DEFAULT_BLOCK_S = 128
 NEG = -1e30
@@ -101,13 +102,17 @@ def _qdecode_kernel(q_ref, kc_ref, ks_ref, kz_ref, vc_ref, vs_ref, vz_ref,
 def qdecode(q, k_codes, k_scale, k_zero, v_codes, v_scale, v_zero, n_valid, *,
             k_bits: int, v_bits: int, k_mode: str, v_mode: str,
             group_size: int = 32, block_s: int = DEFAULT_BLOCK_S,
-            interpret: bool = True):
+            interpret: bool | None = None):
     """Fused dequant+attention over the packed main segment.
 
     q [B, Hkv, G, D]; codes [B, Hkv, S, D·bits/8] (raw dtype when bits=16);
     n_valid [B] i32. Returns (o [B,Hkv,G,D] f32 un-normalized, m, l) for
     softmax-merging with the residual window (repro.kernels.ref.softmax_merge).
+
+    ``interpret=None`` resolves backend-aware: compiled on TPU, interpret
+    elsewhere (repro.kernels.runtime).
     """
+    interpret = resolve_interpret(interpret)
     b, hkv, g, d = q.shape
     s = k_codes.shape[2]
     block_s = min(block_s, s)
@@ -163,4 +168,124 @@ def qdecode(q, k_codes, k_scale, k_zero, v_codes, v_scale, v_zero, n_valid, *,
         interpret=interpret,
     )(q, k_codes, k_scale, k_zero, v_codes, v_scale, v_zero,
       n_valid[:, None].astype(jnp.int32))
+    return o, m, l
+
+
+# ===================================================================== paged
+def _qdecode_paged_kernel(pt_ref, nv_ref, q_ref, kc_ref, ks_ref, kz_ref,
+                          vc_ref, vs_ref, vz_ref, o_ref, m_ref, l_ref,
+                          acc_sc, m_sc, l_sc, *, k_bits, v_bits, k_mode,
+                          v_mode, group_size, num_pages, d):
+    b_idx = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+        m_sc[...] = jnp.full_like(m_sc, NEG)
+        l_sc[...] = jnp.zeros_like(l_sc)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # [G, D]
+    k = _dequant_block(kc_ref, ks_ref, kz_ref, k_bits, k_mode, group_size, d)
+    scores = (q @ k.T) / jnp.sqrt(float(d))  # [G, R]
+
+    r = k.shape[0]
+    pos = j * r + jax.lax.broadcasted_iota(jnp.int32, (1, r), 1)
+    valid = pos < nv_ref[b_idx]
+    scores = jnp.where(valid, scores, NEG)
+
+    m_prev, l_prev = m_sc[...], l_sc[...]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new) * valid.astype(jnp.float32)
+
+    v = _dequant_block(vc_ref, vs_ref, vz_ref, v_bits, v_mode, group_size, d)
+    acc_sc[...] = acc_sc[...] * alpha + p @ v
+    l_sc[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    m_sc[...] = m_new
+
+    @pl.when(j == num_pages - 1)
+    def _done():
+        o_ref[0, 0] = acc_sc[...]
+        m_ref[0, 0] = m_sc[...][:, 0]
+        l_ref[0, 0] = l_sc[...][:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "k_bits", "v_bits", "k_mode", "v_mode", "group_size", "interpret"))
+def qdecode_paged(q, k_codes, k_scale, k_zero, v_codes, v_scale, v_zero,
+                  page_table, n_valid, *, k_bits: int, v_bits: int,
+                  k_mode: str, v_mode: str, group_size: int = 32,
+                  interpret: bool | None = None):
+    """Fused dequant+attention over the shared paged block pool.
+
+    The page table is a **scalar-prefetch** argument: BlockSpec index maps
+    read ``page_table[b, j]`` to pick the physical block DMA'd for logical
+    group ``j`` of slot ``b`` — the kernel streams only live blocks, in
+    logical order, straight out of the global pool.
+
+    q [B, Hkv, G, D]; pool codes [N, Hkv, R, D·bits/8] (raw dtype when
+    bits=16); page_table [B, P] i32 physical block ids; n_valid [B] i32
+    tokens in the main (paged) segment per slot. Returns un-normalized
+    (o, m, l) partials for softmax-merging with the per-slot residual.
+    """
+    interpret = resolve_interpret(interpret)
+    b, hkv, g, d = q.shape
+    n_pages = page_table.shape[1]
+    r = group_size
+    assert k_codes.shape[2] == r, (k_codes.shape, r)
+
+    def seg_specs(bits, mode):
+        cd = d if bits >= 16 else d * bits // 8
+        cspec = pl.BlockSpec((1, 1, r, cd),
+                             lambda b_, h, j, pt, nv: (pt[b_, j], h, 0, 0))
+        if bits >= 16:
+            dummy = pl.BlockSpec((1,), lambda b_, h, j, pt, nv: (0,))
+            return cspec, dummy, dummy
+        if mode == MODE_PER_CHANNEL:
+            sspec = pl.BlockSpec((1, 1, 1, 1, d),
+                                 lambda b_, h, j, pt, nv: (pt[b_, j], h, 0, 0, 0))
+        else:
+            gg = min(group_size, d)
+            sspec = pl.BlockSpec((1, 1, r, d // gg, 1),
+                                 lambda b_, h, j, pt, nv: (pt[b_, j], h, 0, 0, 0))
+        return cspec, sspec, sspec
+
+    kc_spec, ks_spec, kz_spec = seg_specs(k_bits, k_mode)
+    vc_spec, vs_spec, vz_spec = seg_specs(v_bits, v_mode)
+
+    kernel = functools.partial(
+        _qdecode_paged_kernel, k_bits=k_bits, v_bits=v_bits, k_mode=k_mode,
+        v_mode=v_mode, group_size=group_size, num_pages=n_pages, d=d)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # (page_table, n_valid)
+        grid=(b, hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, h, j, pt, nv: (b_, h, 0, 0)),
+            kc_spec, ks_spec, kz_spec, vc_spec, vs_spec, vz_spec,
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, h, j, pt, nv: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, g), lambda b_, h, j, pt, nv: (b_, h, 0)),
+            pl.BlockSpec((1, 1, g), lambda b_, h, j, pt, nv: (b_, h, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+    )
+
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g), jnp.float32),
+        ],
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), n_valid.astype(jnp.int32),
+      q, k_codes, k_scale, k_zero, v_codes, v_scale, v_zero)
     return o, m, l

@@ -1,0 +1,18 @@
+"""Backend-aware kernel execution defaults, shared by every Pallas entry
+point in this package (kvquant, qdecode, qdecode_paged).
+
+``interpret=None`` everywhere means "decide from the backend": on TPU the
+kernels compile natively; anywhere else (CPU CI containers) the kernel body
+runs in Pallas interpret mode for validation.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    return default_interpret() if interpret is None else interpret

@@ -163,7 +163,10 @@ def _sp_decode_main(qg, cache: LayerKVCache, rules):
     qg [B, Hkv, G, D] (replicated over the seq axes). Returns (o, m, l)
     un-normalized partials, replicated, ready to merge with the residual.
     """
-    from jax import shard_map
+    try:
+        from jax import shard_map
+    except ImportError:  # jax < 0.5
+        from jax.experimental.shard_map import shard_map
 
     mesh = rules.mesh
     b, hkv, g, d = qg.shape
@@ -231,8 +234,12 @@ def _sp_decode_main(qg, cache: LayerKVCache, rules):
         o_g = jax.lax.psum(o_l * corr[..., None], seq_axes_t)
         return o_g, m_g, l_g
 
-    f = shard_map(local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                  check_vma=False)
+    try:
+        f = shard_map(local, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_vma=False)
+    except TypeError:  # jax < 0.5 spells it check_rep
+        f = shard_map(local, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=False)
     return f(qg, cache.k_codes, cache.k_scale, cache.k_zero, cache.v_codes,
              cache.v_scale, cache.v_zero, cache.length)
 
@@ -268,21 +275,11 @@ def _sp_feasible(cfg, cache: LayerKVCache) -> bool:
 
 
 def _deq_segment(codes, scale, zero, bits, mode, group_size, d):
-    """Pure-function clone of LayerKVCache._deq for shard_map bodies."""
-    from repro.core.precision import MODE_PER_CHANNEL
+    """Segment dequant for shard_map bodies — delegates to the shared codec."""
+    from repro.cache.codec import SegmentCodec
 
-    if bits >= 16:
-        return codes.astype(jnp.float32)
-    b, h, s, _ = codes.shape
-    raw = quant.unpack_codes(codes, bits).astype(jnp.float32)
-    if mode == MODE_PER_CHANNEL:
-        rg = raw.reshape(b, h, s // group_size, group_size, d)
-        out = rg * scale + zero
-    else:
-        g = min(group_size, d)
-        rg = raw.reshape(b, h, s, d // g, g)
-        out = rg * scale + zero
-    return out.reshape(b, h, s, d)
+    return SegmentCodec(bits, mode, group_size, d).decode(
+        codes, scale, zero, jnp.float32)
 
 
 # -------------------------------------------------------------------- decode
@@ -312,19 +309,11 @@ def decode_attention(params, cfg, x, cache: LayerKVCache, pos, kind: str,
         qg = q.reshape(b, cfg.num_kv_heads, cfg.q_per_kv, hd)
         o_m, m_m, l_m = _sp_decode_main(qg, new_cache, rules)
         # residual window: tiny, replicated, plain partial softmax
+        from repro.kernels.ops import _residual_partial
         r = new_cache.group_size
         n_res = new_cache.length - new_cache.length // r * r
-        k_res = new_cache.k_res.astype(jnp.float32)
-        v_res = new_cache.v_res.astype(jnp.float32)
-        sc = jnp.einsum("bhgd,bhsd->bhgs", qg.astype(jnp.float32), k_res) \
-            / jnp.sqrt(float(hd))
-        valid = (jnp.arange(new_cache.residual_len) < n_res)[None, None, None]
-        sc = jnp.where(valid, sc, NEG_INF)
-        m_r = jnp.max(sc, axis=-1)
-        p = jnp.where(valid, jnp.exp(sc - m_r[..., None]), 0.0)
-        l_r = jnp.sum(p, axis=-1)
-        o_r = jnp.einsum("bhgs,bhsd->bhgd", p, v_res)
-        out = kref.softmax_merge([(o_m, m_m, l_m), (o_r, m_r, l_r)])
+        res = _residual_partial(qg, new_cache.k_res, new_cache.v_res, n_res)
+        out = kref.softmax_merge([(o_m, m_m, l_m), res])
         out = out.reshape(b, 1, cfg.num_heads, hd).astype(x.dtype)
     else:
         k_all, v_all, valid = new_cache.dequant(dtype=x.dtype)  # [B,Hkv,S',D]
@@ -340,6 +329,53 @@ def decode_attention(params, cfg, x, cache: LayerKVCache, pos, kind: str,
 
     y = out.reshape(b, 1, cfg.num_heads * hd) @ params["wo"]
     return y, new_cache
+
+
+# ------------------------------------------------------------- paged decode
+def paged_decode_attention(params, cfg, x, pool, page_table, lengths, alive,
+                           theta: float, use_pallas: bool = False):
+    """One-token decode over the shared paged pool for every serving slot.
+
+    x [max_slots, 1, D]; ``pool`` is this layer's ``PagedKVPool``;
+    page_table [max_slots, P]; lengths [max_slots] i32 (pre-append);
+    alive [max_slots] bool — dead/empty slots are fully masked and produce
+    finite garbage that the engine ignores.
+
+    Returns (attn_out [max_slots, 1, D], new_pool). Slots advance
+    independently; the append/flush is batched with no per-slot control flow,
+    so ONE jitted decode step serves any mix of request lengths — the
+    continuous-batching property.
+    """
+    b = x.shape[0]
+    hd = cfg.head_dim
+    positions = lengths[:, None]
+    q, k_new, v_new = qkv(params, cfg, x, positions, theta)
+    new_pool = pool.append(k_new.transpose(0, 2, 1, 3),
+                           v_new.transpose(0, 2, 1, 3),
+                           lengths, alive, page_table)
+    eff_len = lengths + alive.astype(jnp.int32)
+
+    if use_pallas:
+        from repro.kernels import ops as kops
+        out = kops.qdecode_paged_attention(q, new_pool, page_table, eff_len)
+    else:
+        r = new_pool.group_size
+        k_all, v_all = new_pool.gather_dequant(page_table, x.dtype)
+        k_full = jnp.concatenate([k_all, new_pool.k_res.astype(x.dtype)], axis=2)
+        v_full = jnp.concatenate([v_all, new_pool.v_res.astype(x.dtype)], axis=2)
+        s_main = k_all.shape[2]
+        n_main = eff_len // r * r
+        idx = jnp.arange(s_main + r)
+        valid = jnp.where(idx[None, :] < s_main,
+                          idx[None, :] < n_main[:, None],
+                          (idx[None, :] - s_main) < (eff_len - n_main)[:, None])
+        bias = jnp.where(valid, 0.0, NEG_INF)[:, None, None, :]  # [B,1,1,S']
+        s = _scores(q, k_full.transpose(0, 2, 1, 3), cfg) + bias
+        p = jax.nn.softmax(s, axis=-1)
+        out = _weighted_v(p, v_full.transpose(0, 2, 1, 3), cfg).astype(x.dtype)
+
+    y = out.reshape(b, 1, cfg.num_heads * hd) @ params["wo"]
+    return y, new_pool
 
 
 # ----------------------------------------------------------------- training

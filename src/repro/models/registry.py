@@ -35,6 +35,19 @@ class ModelApi:
     def init_decode_state(self, schedule, batch, capacity, **kw):
         return tfm.init_decode_state(self.cfg, schedule, batch, capacity, **kw)
 
+    # ------------------------------------------------- paged / continuous
+    def init_paged_state(self, schedule, max_slots, num_blocks, max_pages):
+        return tfm.init_paged_state(self.cfg, schedule, max_slots, num_blocks,
+                                    max_pages)
+
+    def paged_adopt(self, state, caches, slot, pages, prompt_len):
+        return tfm.paged_adopt(self.cfg, state, caches, slot, pages,
+                               prompt_len)
+
+    def paged_decode_step(self, params, state, token, alive, **kw):
+        return tfm.paged_decode_step(params, self.cfg, state, token, alive,
+                                     **kw)
+
     # ------------------------------------------------------------ dry-run
     def input_specs(self, cell: ShapeCell) -> dict:
         """ShapeDtypeStruct stand-ins for every model input of this cell.

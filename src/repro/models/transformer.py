@@ -541,6 +541,86 @@ def decode_step(params, cfg: ModelConfig, state: DecodeState, token,
                                pos=state.pos + 1)
 
 
+# ====================================================== paged decode (serving)
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PagedDecodeState:
+    """Decode state for continuous batching over the shared paged KV pool.
+
+    Unlike ``DecodeState`` (one private cache per request wave), every slot of
+    a fixed ``max_slots`` batch shares the per-layer block pools; per-slot
+    progress lives in ``lengths`` and the physical block mapping in
+    ``page_table`` (shared by all layers). Admitting/finishing a request
+    never changes any array shape, so one jitted step serves the whole run.
+    """
+
+    pools: list          # per layer: PagedKVPool | None
+    page_table: jax.Array  # [max_slots, max_pages] i32 physical block ids
+    lengths: jax.Array     # [max_slots] i32 tokens cached per slot
+
+
+def init_paged_state(cfg: ModelConfig, schedule, max_slots: int,
+                     num_blocks: int, max_pages: int) -> PagedDecodeState:
+    from repro.cache.paged import init_model_pools
+
+    for kind in cfg.layer_kinds():
+        if kind in (MAMBA, MLSTM, SLSTM):
+            raise NotImplementedError(
+                "continuous paged decoding supports attention-only stacks; "
+                f"layer kind {kind!r} needs per-slot recurrent-state resets")
+    pools = init_model_pools(cfg, schedule, max_slots, num_blocks)
+    return PagedDecodeState(
+        pools=pools,
+        page_table=jnp.zeros((max_slots, max_pages), jnp.int32),
+        lengths=jnp.zeros((max_slots,), jnp.int32))
+
+
+def paged_adopt(cfg: ModelConfig, state: PagedDecodeState, caches: list,
+                slot, pages, prompt_len) -> PagedDecodeState:
+    """Move a batch-1 prefill (dense per-layer caches) into pool blocks
+    ``pages`` at ``slot``. The page-table row itself is updated host-side by
+    the engine (it owns the allocator); here we only place KV bytes."""
+    pools = list(state.pools)
+    for i, cache in enumerate(caches):
+        if cache is not None:
+            pools[i] = pools[i].adopt_prefill(cache, slot, pages)
+    lengths = state.lengths.at[slot].set(jnp.asarray(prompt_len, jnp.int32))
+    return dataclasses.replace(state, pools=pools, lengths=lengths)
+
+
+def paged_decode_step(params, cfg: ModelConfig, state: PagedDecodeState,
+                      token, alive, use_pallas: bool = False):
+    """One continuous-batching decode step over all serving slots.
+
+    token [max_slots, 1] i32 (dead slots feed any id); alive [max_slots]
+    bool. Returns (logits [max_slots, vocab], new state). Dead slots produce
+    finite garbage logits that the engine discards; their lengths do not
+    advance and their flushes land in the scratch block.
+    """
+    x = params["embed"][token]  # [B,1,D]
+    x = shard_hint(x, "batch", "seq", "d_model")
+    kinds = cfg.layer_kinds()
+    new_pools = list(state.pools)
+
+    for i, kind in enumerate(kinds):
+        p = layer_params_at(params, cfg, i)
+        if kind not in (ATTN_GLOBAL, ATTN_LOCAL):
+            raise NotImplementedError(f"paged decode: layer kind {kind!r}")
+        h = common.rms_norm(x, p["ln1"], cfg.norm_eps)
+        y, new_pools[i] = attention.paged_decode_attention(
+            p["attn"], cfg, h, state.pools[i], state.page_table,
+            state.lengths, alive, _rope_theta(cfg, kind),
+            use_pallas=use_pallas)
+        x = x + y
+        x, _ = _ffn_sublayer(p, cfg, x, i)
+
+    logits = unembed(params, cfg, x)[:, 0]
+    new_state = dataclasses.replace(
+        state, pools=new_pools,
+        lengths=state.lengths + alive.astype(jnp.int32))
+    return logits, new_state
+
+
 def init_decode_state(cfg: ModelConfig, schedule, batch: int, capacity: int,
                       extra_groups: int = 4, filled_to: int | None = None):
     """Fresh (or pretend-prefilled, for dry-runs) decode state."""

@@ -1,0 +1,89 @@
+"""LayerKVCache windowed-ring semantics.
+
+Locks in the ring arithmetic (before/after the codec extraction): a
+``fill(S > window)`` followed by ``append`` flushes must keep the physical
+main-segment contents in agreement with ``token_positions()`` — every live
+slot holds exactly the token whose absolute position the ring math reports.
+
+Keys/values are tagged with their absolute position so the check is direct:
+``dequant()[slot] == token_positions()[slot]``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cache.kvcache import LayerKVCache
+from repro.core.precision import MODE_PER_TOKEN, PrecisionPair
+
+jax.config.update("jax_platform_name", "cpu")
+
+R = 8
+D = 4
+WINDOW = 32  # 4 ring groups
+
+
+def _tagged(s0, s1):
+    """[1, 1, s1-s0, D] keys whose every element equals the token position."""
+    vals = jnp.arange(s0, s1, dtype=jnp.float32)
+    return jnp.broadcast_to(vals[None, None, :, None],
+                            (1, 1, s1 - s0, D)).astype(jnp.float32)
+
+
+def _check_ring(cache: LayerKVCache):
+    """Every flushed main slot and every live residual slot must hold the
+    token its token_positions() entry claims."""
+    k_all, _, valid = cache.dequant(jnp.float32)
+    pos = np.asarray(cache.token_positions())
+    vals = np.asarray(k_all[0, 0, :, 0])
+    vmask = np.asarray(valid)
+    length = int(cache.length)
+    total_flushed = length // R * R
+
+    for i in range(cache.s_cap):
+        if pos[i] < total_flushed:  # this slot's occupant group has flushed
+            assert vals[i] == pytest.approx(pos[i]), \
+                f"main slot {i}: holds {vals[i]}, ring says {pos[i]}"
+            # ring property: live slots only ever hold trailing-window tokens
+            assert pos[i] >= total_flushed - cache.s_cap
+    n_res = length - total_flushed
+    for j in range(n_res):
+        i = cache.s_cap + j
+        assert vmask[i]
+        assert pos[i] == total_flushed + j
+        assert vals[i] == pytest.approx(pos[i]), \
+            f"residual slot {j}: holds {vals[i]}, expected {pos[i]}"
+
+
+@pytest.mark.parametrize("pair", [(16, 16), (8, 8)])
+@pytest.mark.parametrize("fill_len", [52, 56, 37])
+def test_windowed_fill_then_append_agrees_with_token_positions(pair, fill_len):
+    cache = LayerKVCache.init(1, 1, D, 64, PrecisionPair(*pair),
+                              MODE_PER_TOKEN, R, dtype=jnp.float32,
+                              window=WINDOW)
+    assert cache.s_cap == WINDOW  # capacity clamps to the window
+    k = _tagged(0, fill_len)
+    cache = cache.fill(k, k)
+    assert int(cache.length) == fill_len
+    _check_ring(cache)
+
+    # decode appends across ≥ 2 flush boundaries, checking after every token
+    for t in range(fill_len, fill_len + 2 * R + 3):
+        tok = jnp.full((1, 1, 1, D), float(t), jnp.float32)
+        cache = cache.append(tok, tok)
+        assert int(cache.length) == t + 1
+        _check_ring(cache)
+
+
+def test_unwindowed_fill_append_positions_are_linear():
+    """Control: without a window the ring must degenerate to the identity."""
+    cache = LayerKVCache.init(1, 1, D, 40, PrecisionPair(16, 16),
+                              MODE_PER_TOKEN, R, dtype=jnp.float32)
+    cache = cache.fill(_tagged(0, 21), _tagged(0, 21))
+    pos = np.asarray(cache.token_positions())
+    np.testing.assert_array_equal(pos[:cache.s_cap], np.arange(cache.s_cap))
+    _check_ring(cache)
+    for t in range(21, 21 + R + 2):
+        tok = jnp.full((1, 1, 1, D), float(t), jnp.float32)
+        cache = cache.append(tok, tok)
+        _check_ring(cache)

@@ -20,7 +20,7 @@ jax.config.update("jax_platform_name", "cpu")
 
 
 def abstract_mesh(shape=(16, 16), axes=("data", "model")):
-    return AbstractMesh(shape, axes)
+    return AbstractMesh(tuple(zip(axes, shape)))
 
 
 # ----------------------------------------------------------------- rules
@@ -129,8 +129,7 @@ _PARITY_SCRIPT = textwrap.dedent("""
     ref_loss = float(ref_metrics["loss"])
 
     # sharded execution on a 2x4 mesh
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
     rules = make_rules(mesh, {"seq": ("model",)})
     b = SpecBuilder(rules, fsdp_threshold=10**12)
     st_sh = b.named(b.train_state(jax.eval_shape(lambda: state)))

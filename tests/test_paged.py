@@ -1,0 +1,311 @@
+"""Paged KV pool + continuous-batching engine tests.
+
+Covers the paged-pool refactor end-to-end: codec extraction, block
+adopt/append/gather parity with the dense ``LayerKVCache``, the
+scalar-prefetch Pallas kernel, and the continuous engine's scheduling
+behavior (mixed prompt lengths, mid-stream admission after an early EOS,
+per-request equivalence with the single-request path, single decode compile).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cache.codec import KVCodec
+from repro.cache.kvcache import LayerKVCache
+from repro.cache.paged import SCRATCH_BLOCK, BlockAllocator, PagedKVPool
+from repro.configs.base import ModelConfig
+from repro.core import quant
+from repro.core.precision import (MODE_KIVI, MODE_PER_TOKEN, KVTunerSchedule,
+                                  PrecisionPair)
+from repro.models.registry import build_model
+from repro.serving.engine import ContinuousEngine, Request, ServeEngine
+
+jax.config.update("jax_platform_name", "cpu")
+
+R = 8  # small quant group → frequent flushes in few decode steps
+
+
+def _rand(shape, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def tiny_api():
+    cfg = ModelConfig(name="paged-tiny", family="dense", num_layers=2,
+                      d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+                      vocab_size=61, q_chunk=16, kv_group_size=R)
+    return build_model(cfg)
+
+
+@pytest.fixture(scope="module")
+def tiny_params(tiny_api):
+    return tiny_api.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def sched():
+    return KVTunerSchedule.uniform(2, PrecisionPair(8, 4))
+
+
+def _requests(prompts, max_new=6, eos_id=None, arrivals=None):
+    return [Request(uid=i, prompt=np.asarray(p), max_new_tokens=max_new,
+                    eos_id=eos_id,
+                    arrival_step=0 if arrivals is None else arrivals[i])
+            for i, p in enumerate(prompts)]
+
+
+def _run(engine, reqs):
+    for r in reqs:
+        engine.submit(r)
+    return sorted(engine.run(), key=lambda r: r.uid)
+
+
+# ===================================================================== codec
+def test_codec_roundtrip_matches_fake_quant():
+    codec = KVCodec.make(PrecisionPair(4, 2), MODE_KIVI, R, 32)
+    x = _rand((3, 2, 4 * R, 32), seed=1)
+    for seg, bits, mode in ((codec.k, 4, codec.k.mode),
+                            (codec.v, 2, codec.v.mode)):
+        c, s, z = seg.encode(x)
+        deq = seg.decode(c, s, z, jnp.float32)
+        fq = quant.fake_quant(x, bits, mode, R)
+        np.testing.assert_allclose(np.asarray(deq), np.asarray(fq),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ================================================================= allocator
+def test_block_allocator():
+    a = BlockAllocator(8)  # blocks 1..7 usable
+    assert a.free_blocks == 7
+    x = a.alloc(3)
+    y = a.alloc(4)
+    assert len(x) == 3 and len(y) == 4 and not (set(x) & set(y))
+    assert SCRATCH_BLOCK not in x + y
+    assert a.alloc(1) is None  # exhausted, not an exception
+    a.release(x)
+    assert a.free_blocks == 3
+    assert a.alloc(3) is not None
+    with pytest.raises(ValueError):
+        a.release([0])  # the scratch block is never allocatable
+
+
+# ============================================================ pool vs dense
+@pytest.mark.parametrize("pair,mode", [((8, 8), MODE_PER_TOKEN),
+                                       ((4, 2), MODE_KIVI),
+                                       ((16, 16), MODE_PER_TOKEN)])
+def test_adopt_and_append_match_dense(pair, mode):
+    """Two slots at different lengths: prefill-adopt + batched appends must
+    reproduce each slot's dense per-request cache bit-for-bit."""
+    hkv, d = 2, 16
+    pp = PrecisionPair(*pair)
+    pool = PagedKVPool.init(9, 2, hkv, d, pp, mode, R, dtype=jnp.float32)
+    pages = [[1, 2, 3], [4, 5, 6]]
+    pt = np.zeros((2, 4), np.int32)
+    for s_, pg in enumerate(pages):
+        pt[s_, :len(pg)] = pg
+    pt = jnp.asarray(pt)
+
+    lens = [13, 7]
+    dense = []
+    for s_, ln in enumerate(lens):
+        k = _rand((1, hkv, ln, d), seed=10 + s_)
+        v = _rand((1, hkv, ln, d), seed=20 + s_)
+        c = LayerKVCache.init(1, hkv, d, 32, pp, mode, R,
+                              dtype=jnp.float32).fill(k, v)
+        dense.append(c)
+        n_groups = ln // R
+        pool = pool.adopt_prefill(c, jnp.int32(s_),
+                                  jnp.asarray(pages[s_][:n_groups], jnp.int32))
+
+    lengths = jnp.asarray(lens, jnp.int32)
+    alive = jnp.ones((2,), bool)
+    for step in range(10):
+        k_new = _rand((2, hkv, 1, d), seed=100 + step)
+        v_new = _rand((2, hkv, 1, d), seed=200 + step)
+        pool = pool.append(k_new, v_new, lengths, alive, pt)
+        dense = [c.append(k_new[s_:s_ + 1], v_new[s_:s_ + 1])
+                 for s_, c in enumerate(dense)]
+        lengths = lengths + 1
+
+    kg, vg = pool.gather_dequant(pt, jnp.float32)   # [2, hkv, 4R, d]
+    for s_, c in enumerate(dense):
+        k_all, v_all, valid = c.dequant(jnp.float32)
+        ln = int(lengths[s_])
+        n_main = ln // R * R
+        n_res = ln - n_main
+        np.testing.assert_allclose(np.asarray(kg[s_, :, :n_main]),
+                                   np.asarray(k_all[0, :, :n_main]),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(vg[s_, :, :n_main]),
+                                   np.asarray(v_all[0, :, :n_main]),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(pool.k_res[s_, :, :n_res]),
+            np.asarray(c.k_res[0, :, :n_res]), rtol=1e-6, atol=1e-6)
+
+
+def test_dead_slot_flush_lands_in_scratch_block():
+    """A dead slot's (masked) flush must not touch any real block."""
+    hkv, d = 2, 16
+    pool = PagedKVPool.init(4, 2, hkv, d, PrecisionPair(8, 8), MODE_PER_TOKEN,
+                            R, dtype=jnp.float32)
+    pt = jnp.asarray([[1, 2], [3, 0]], jnp.int32)
+    before = np.asarray(pool.k_codes[1:])
+    # slot 0 dead at a would-be flush boundary; slot 1 alive mid-group
+    lengths = jnp.asarray([R - 1, 2], jnp.int32)
+    alive = jnp.asarray([False, True])
+    pool = pool.append(_rand((2, hkv, 1, d)), _rand((2, hkv, 1, d), 1),
+                       lengths, alive, pt)
+    after = np.asarray(pool.k_codes[1:])
+    np.testing.assert_array_equal(before, after)
+
+
+# ============================================================== paged kernel
+@pytest.mark.parametrize("pair,mode", [((8, 8), MODE_PER_TOKEN),
+                                       ((4, 2), MODE_KIVI),
+                                       ((16, 8), MODE_KIVI)])
+def test_qdecode_paged_matches_gather(pair, mode):
+    from repro.cache.codec import kv_modes
+    from repro.kernels.qdecode import qdecode_paged
+
+    b, hkv, g, d, r, n_blocks, p = 2, 2, 4, 64, 32, 7, 3
+    pp = PrecisionPair(*pair)
+    pool = PagedKVPool.init(n_blocks, b, hkv, d, pp, mode, r,
+                            dtype=jnp.float32)
+    c = pool.codec
+    k = _rand((n_blocks, hkv, r, d), seed=0)
+    v = _rand((n_blocks, hkv, r, d), seed=1)
+    kc, ks, kz = c.k.encode(k)
+    vc, vs, vz = c.v.encode(v)
+    pool = dataclasses.replace(pool, k_codes=kc, k_scale=ks, k_zero=kz,
+                               v_codes=vc, v_scale=vs, v_zero=vz)
+    pt = jnp.asarray([[1, 4, 2], [5, 3, 6]], jnp.int32)
+    n_valid = jnp.asarray([3 * r, 2 * r], jnp.int32)
+    q = _rand((b, hkv, g, d), seed=2)
+    k_mode, v_mode = kv_modes(mode)
+    o, m, l = qdecode_paged(q, kc, ks, kz, vc, vs, vz, pt, n_valid,
+                            k_bits=pp.k_bits, v_bits=pp.v_bits, k_mode=k_mode,
+                            v_mode=v_mode, group_size=r, interpret=True)
+    kk, vv = pool.gather_dequant(pt, jnp.float32)
+    scores = jnp.einsum("bhgd,bhsd->bhgs", q, kk) / jnp.sqrt(d)
+    mask = (jnp.arange(p * r)[None, :] < n_valid[:, None])[:, None, None, :]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, -1)
+    ref = jnp.einsum("bhgs,bhsd->bhgd", probs, vv)
+    out = np.asarray(o / np.maximum(np.asarray(l)[..., None], 1e-20))
+    np.testing.assert_allclose(out, np.asarray(ref), rtol=3e-5, atol=3e-5)
+
+
+# ============================================================== engine tests
+def test_engine_mixed_prompt_lengths_match_wave(tiny_api, tiny_params, sched):
+    """Mixed prompt lengths in ONE continuous batch: greedy outputs must be
+    token-identical to the wave engine (which buckets by exact length)."""
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 61, n) for n in (12, 7, 19, 12, 25)]
+    wave = _run(ServeEngine(tiny_api, tiny_params, sched, max_batch=3),
+                _requests(prompts))
+    eng = ContinuousEngine(tiny_api, tiny_params, sched, max_batch=3,
+                           max_seq=40)
+    cont = _run(eng, _requests(prompts))
+    assert [r.output for r in cont] == [r.output for r in wave]
+    assert eng.decode_compilations == 1
+    assert eng.stats.admitted == 5
+    # all blocks recycled once the queue drains
+    assert eng.alloc.free_blocks == eng.num_blocks - 1
+
+
+def test_engine_matches_single_request_path(tiny_api, tiny_params, sched):
+    """Per-request output equivalence: each request decoded alone (batch=1)
+    must equal its output from the shared continuous batch."""
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, 61, n) for n in (9, 17, 13)]
+    eng = ContinuousEngine(tiny_api, tiny_params, sched, max_batch=3,
+                           max_seq=32)
+    batched = _run(eng, _requests(prompts, max_new=5))
+    for i, p in enumerate(prompts):
+        solo_eng = ContinuousEngine(tiny_api, tiny_params, sched, max_batch=1,
+                                    max_seq=32)
+        solo = _run(solo_eng, [Request(uid=0, prompt=np.asarray(p),
+                                       max_new_tokens=5)])
+        assert solo[0].output == batched[i].output, f"request {i} diverged"
+
+
+def test_mid_stream_admission_after_early_eos(tiny_api, tiny_params, sched):
+    """A request hitting EOS early frees its slot mid-decode; the queued
+    request is admitted into it and still decodes correctly."""
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, 61, 11) for _ in range(4)]
+    # dry run (no EOS) to learn outputs, then pick request 0's 2nd token as
+    # the EOS id → request 0 finishes after 2 tokens, freeing its slot while
+    # others are mid-decode.
+    dry = _run(ContinuousEngine(tiny_api, tiny_params, sched, max_batch=2,
+                                max_seq=32), _requests(prompts, max_new=8))
+    eos = dry[0].output[1]
+
+    def truncate(out):
+        return out[:out.index(eos) + 1] if eos in out else out
+
+    eng = ContinuousEngine(tiny_api, tiny_params, sched, max_batch=2,
+                           max_seq=32)
+    done = _run(eng, _requests(prompts, max_new=8, eos_id=eos))
+    assert len(done) == 4 and all(r.done for r in done)
+    assert done[0].output == truncate(dry[0].output)
+    assert len(done[0].output) == 2
+    for i in range(1, 4):
+        assert done[i].output == truncate(dry[i].output), f"request {i}"
+    # with max_batch=2 and 4 requests, at least two admissions were mid-run
+    assert eng.stats.admitted == 4
+    assert eng.decode_compilations == 1
+    assert eng.alloc.free_blocks == eng.num_blocks - 1
+
+
+def test_poisson_arrivals_respected(tiny_api, tiny_params, sched):
+    """arrival_step delays visibility: a request arriving at step k must not
+    shorten earlier requests' outputs, and all requests still complete."""
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, 61, n) for n in (8, 8, 16)]
+    eng = ContinuousEngine(tiny_api, tiny_params, sched, max_batch=2,
+                           max_seq=32)
+    done = _run(eng, _requests(prompts, max_new=4, arrivals=[0, 3, 6]))
+    assert len(done) == 3 and all(len(r.output) == 4 for r in done)
+    ref = _run(ContinuousEngine(tiny_api, tiny_params, sched, max_batch=2,
+                                max_seq=32), _requests(prompts, max_new=4))
+    assert [r.output for r in done] == [r.output for r in ref]
+
+
+def test_engine_pool_pressure_queues_requests(tiny_api, tiny_params, sched):
+    """With a pool too small for all requests at once, admission stalls until
+    blocks free up — and every request still completes correctly."""
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, 61, 16) for _ in range(4)]
+    # each request needs (16+4)//8 + 1 = 3 blocks; pool of 7 fits 2 at a time
+    eng = ContinuousEngine(tiny_api, tiny_params, sched, max_batch=4,
+                           max_seq=24, num_blocks=7)
+    done = _run(eng, _requests(prompts, max_new=4))
+    ref = _run(ContinuousEngine(tiny_api, tiny_params, sched, max_batch=4,
+                                max_seq=24), _requests(prompts, max_new=4))
+    assert [r.output for r in done] == [r.output for r in ref]
+    assert eng.alloc.free_blocks == 6
+
+
+def test_engine_rejects_oversized_request(tiny_api, tiny_params, sched):
+    eng = ContinuousEngine(tiny_api, tiny_params, sched, max_batch=2,
+                           max_seq=16)
+    with pytest.raises(ValueError):
+        eng.submit(Request(uid=0, prompt=np.zeros(64, np.int64),
+                           max_new_tokens=4))
+
+
+def test_engine_pallas_path_matches_xla(tiny_api, tiny_params):
+    sched = KVTunerSchedule.uniform(2, PrecisionPair(4, 2), mode=MODE_KIVI)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, 61, n) for n in (12, 7, 19)]
+    outs = {}
+    for up in (False, True):
+        eng = ContinuousEngine(tiny_api, tiny_params, sched, max_batch=3,
+                               max_seq=32, use_pallas=up)
+        outs[up] = [r.output for r in _run(eng, _requests(prompts, max_new=4))]
+    assert outs[False] == outs[True]
