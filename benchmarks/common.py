@@ -22,7 +22,7 @@ from repro.data import synthetic
 from repro.data.pipeline import SyntheticSource
 from repro.models.registry import ModelApi, build_model
 from repro.training.optimizer import AdamW, cosine_schedule
-from repro.training.trainer import Trainer, TrainState
+from repro.training.trainer import Trainer
 
 ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                        "artifacts", "bench_model")

@@ -7,10 +7,9 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import quant
-from repro.core.precision import MODE_PER_TOKEN, PrecisionPair
+from repro.core.precision import MODE_PER_TOKEN
 from repro.kernels.qdecode import qdecode
 from repro.kernels.kvquant import kvquant
 

@@ -28,7 +28,8 @@ def main() -> None:
     from benchmarks import (common, kernels_micro, table2_ppl,
                             table3_output_error, table4_pruning,
                             table5_accuracy, table8_throughput,
-                            table9_error, table10_clustering)
+                            table9_error, table10_clustering,
+                            table11_prefix)
 
     print("# KVTuner reproduction benchmarks (paper tables)", flush=True)
     ctx = common.get_bench_model(log=lambda *a: print(*a, flush=True))
@@ -47,6 +48,9 @@ def main() -> None:
         "t8_engines": lambda: table8_throughput.run_engines(
             ctx, n_requests=6 if args.fast else 10,
             max_new=6 if args.fast else 8),
+        "t11_prefix": lambda: table11_prefix.run(
+            ctx, per_template=2 if args.fast else 4,
+            max_new=4 if args.fast else 8),
         "kernels_micro": lambda: kernels_micro.run(ctx),
     }
     checkers = {
@@ -58,6 +62,7 @@ def main() -> None:
         "t5_accuracy": table5_accuracy.check_paper_claims,
         "t8_throughput": table8_throughput.check_paper_claims,
         "t8_engines": table8_throughput.check_engine_claims,
+        "t11_prefix": table11_prefix.check_paper_claims,
         "kernels_micro": kernels_micro.check_paper_claims,
     }
     wanted = set(tables) if args.tables == "all" else \

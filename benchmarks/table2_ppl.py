@@ -2,7 +2,6 @@
 (held-out synthetic corpus standing in for wikitext)."""
 from __future__ import annotations
 
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import ppl_from_nll

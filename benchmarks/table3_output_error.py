@@ -7,7 +7,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import sensitivity
-from repro.core.precision import CANDIDATE_PAIRS, MODE_PER_TOKEN
+from repro.core.precision import MODE_PER_TOKEN
 
 
 def run(ctx) -> dict:

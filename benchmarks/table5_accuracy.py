@@ -11,8 +11,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.precision import (CANDIDATE_PAIRS, MODE_PER_TOKEN,
-                                  KVTunerSchedule)
+from repro.core.precision import CANDIDATE_PAIRS, MODE_PER_TOKEN
 from repro.core.tuner import KVTuner
 from repro.data import synthetic
 

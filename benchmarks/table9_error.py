@@ -3,10 +3,9 @@ precision, averaged over layers — on the trained bench model's captured
 calibration activations."""
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import sensitivity
-from repro.core.precision import (MODE_KIVI, MODE_PER_CHANNEL, MODE_PER_TOKEN,
+from repro.core.precision import (MODE_PER_CHANNEL, MODE_PER_TOKEN,
                                   PrecisionPair)
 
 

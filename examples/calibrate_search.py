@@ -8,7 +8,6 @@ import argparse
 import os
 import sys
 
-import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 

@@ -12,7 +12,6 @@ Run: PYTHONPATH=src python examples/train_100m.py [--steps 300] [--full]
 import argparse
 import os
 
-import jax
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs.base import ModelConfig

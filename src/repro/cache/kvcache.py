@@ -21,13 +21,12 @@ prefill length with a static shape.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.cache.codec import KVCodec, SegmentCodec, kv_modes
-from repro.core.precision import (MODE_KIVI, MODE_PER_CHANNEL, MODE_PER_TOKEN,
+from repro.core.precision import (MODE_PER_CHANNEL, MODE_PER_TOKEN,
                                   PrecisionPair)
 from repro.core import quant
 
@@ -132,7 +131,6 @@ class LayerKVCache:
 
     def _fill_main(self, k, v, roll_groups: int = 0) -> "LayerKVCache":
         s = k.shape[2]
-        ng = s // self.group_size
         k_mode, v_mode = _kv_modes(self.mode)
         r = self.group_size
 

@@ -39,6 +39,18 @@ from repro.core.precision import MODE_PER_CHANNEL, MODE_PER_TOKEN, PrecisionPair
 SCRATCH_BLOCK = 0
 
 
+def _encode_scatter(codes_p, scale_p, zero_p, bids, blk, seg):
+    """Quantize ``blk [n, Hkv, R, D]`` token groups with ``seg`` and scatter
+    them to physical blocks ``bids [n]`` — the single place that knows the
+    packed block layout for every pool write path."""
+    bc, bs, bz = seg.encode(blk)
+    codes_p = codes_p.at[bids].set(bc.astype(codes_p.dtype))
+    if seg.quantized:
+        scale_p = scale_p.at[bids].set(bs)
+        zero_p = zero_p.at[bids].set(bz)
+    return codes_p, scale_p, zero_p
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class PagedKVPool:
@@ -143,6 +155,43 @@ class PagedKVPool:
                                    v_codes=vc, v_scale=vs, v_zero=vz,
                                    k_res=k_res, v_res=v_res)
 
+    def write_prefill_groups(self, k: jax.Array, v: jax.Array,
+                             bids: jax.Array) -> "PagedKVPool":
+        """Quantize full groups of post-rope chunk KV straight into pool
+        blocks — the chunked in-pool prefill write (no dense ``LayerKVCache``
+        intermediate).
+
+        ``k/v [1, Hkv, n·R, D]`` (group-aligned chunk slice);
+        ``bids [n]`` i32 physical block ids (may be traced). Group boundaries
+        are the quantization boundaries, so the written blocks are bitwise
+        what a dense prefill + :meth:`adopt_prefill` would have produced.
+        """
+        r = self.group_size
+        hkv = self.k_res.shape[1]
+        n = k.shape[2] // r   # static
+        c = self.codec
+
+        def groups(x):
+            return x[0].reshape(hkv, n, r, -1).transpose(1, 0, 2, 3)
+
+        kc, ks, kz = _encode_scatter(self.k_codes, self.k_scale, self.k_zero,
+                                     bids, groups(k), c.k)
+        vc, vs, vz = _encode_scatter(self.v_codes, self.v_scale, self.v_zero,
+                                     bids, groups(v), c.v)
+        return dataclasses.replace(self, k_codes=kc, k_scale=ks, k_zero=kz,
+                                   v_codes=vc, v_scale=vs, v_zero=vz)
+
+    def write_residual(self, slot: jax.Array, k_tail: jax.Array,
+                       v_tail: jax.Array) -> "PagedKVPool":
+        """Seed a slot's residual window with the prompt's trailing partial
+        group. ``k_tail/v_tail [1, Hkv, rem, D]``, ``rem < R`` static."""
+        rem = k_tail.shape[2]
+        k_res = self.k_res.at[slot, :, :rem].set(
+            k_tail[0].astype(self.k_res.dtype))
+        v_res = self.v_res.at[slot, :, :rem].set(
+            v_tail[0].astype(self.v_res.dtype))
+        return dataclasses.replace(self, k_res=k_res, v_res=v_res)
+
     # -------------------------------------------------------------- append
     def append(self, k_new: jax.Array, v_new: jax.Array, lengths: jax.Array,
                alive: jax.Array, page_table: jax.Array) -> "PagedKVPool":
@@ -174,17 +223,10 @@ class PagedKVPool:
             SCRATCH_BLOCK)
 
         c = self.codec
-
-        def side(codes_p, scale_p, zero_p, res, seg):
-            bc, bs, bz = seg.encode(res)   # [max_slots, Hkv, R, ...]
-            codes_p = codes_p.at[bids].set(bc)
-            if seg.quantized:
-                scale_p = scale_p.at[bids].set(bs)
-                zero_p = zero_p.at[bids].set(bz)
-            return codes_p, scale_p, zero_p
-
-        kc, ks, kz = side(self.k_codes, self.k_scale, self.k_zero, k_res, c.k)
-        vc, vs, vz = side(self.v_codes, self.v_scale, self.v_zero, v_res, c.v)
+        kc, ks, kz = _encode_scatter(self.k_codes, self.k_scale, self.k_zero,
+                                     bids, k_res, c.k)
+        vc, vs, vz = _encode_scatter(self.v_codes, self.v_scale, self.v_zero,
+                                     bids, v_res, c.v)
         return dataclasses.replace(self, k_codes=kc, k_scale=ks, k_zero=kz,
                                    v_codes=vc, v_scale=vs, v_zero=vz,
                                    k_res=k_res, v_res=v_res)
@@ -263,30 +305,61 @@ def init_model_pools(cfg, schedule, max_slots: int, num_blocks: int) -> list:
 
 
 class BlockAllocator:
-    """Host-side free-list allocator over physical block ids ``1..N-1``
-    (block 0 is the scratch block). Purely python — allocation happens
-    between jitted steps, never inside them."""
+    """Host-side refcounting free-list allocator over physical block ids
+    ``1..N-1`` (block 0 is the scratch block). Purely python — allocation
+    happens between jitted steps, never inside them.
+
+    Blocks are reference-counted so the prefix cache can share one physical
+    block between a cached prefix and any number of live requests (COW
+    semantics: shared blocks are only ever read; a request forks by
+    allocating fresh blocks past its divergence point). ``alloc`` hands out
+    blocks at refcount 1; ``ref`` pins shared blocks; ``release`` decrements
+    and returns a block to the free list only when the last reference drops.
+    Releasing an unallocated block raises instead of silently corrupting the
+    free list (double-free hardening)."""
 
     def __init__(self, num_blocks: int):
         self.num_blocks = num_blocks
         self._free = list(range(num_blocks - 1, 0, -1))
+        self._refs = [0] * num_blocks
 
     @property
     def free_blocks(self) -> int:
         return len(self._free)
 
+    def refcount(self, block: int) -> int:
+        return self._refs[block]
+
     def alloc(self, n: int) -> list[int] | None:
-        """n block ids, or None if the pool can't satisfy the request."""
+        """n block ids at refcount 1, or None if the pool can't satisfy."""
         if n > len(self._free):
             return None
         if n == 0:
             return []
         taken = self._free[-n:][::-1]
         del self._free[len(self._free) - n:]
+        for b in taken:
+            self._refs[b] = 1
         return taken
 
-    def release(self, blocks) -> None:
+    def ref(self, blocks) -> None:
+        """Add one reference to each (already-allocated) block."""
         for b in blocks:
-            if not 0 < b < self.num_blocks:
-                raise ValueError(f"bad block id {b}")
-            self._free.append(b)
+            self._check(b)
+            if self._refs[b] == 0:
+                raise ValueError(f"ref of unallocated block {b}")
+            self._refs[b] += 1
+
+    def release(self, blocks) -> None:
+        """Drop one reference per block; free those that reach zero."""
+        for b in blocks:
+            self._check(b)
+            if self._refs[b] == 0:
+                raise ValueError(f"double free of block {b}")
+            self._refs[b] -= 1
+            if self._refs[b] == 0:
+                self._free.append(b)
+
+    def _check(self, b: int) -> None:
+        if not 0 < b < self.num_blocks:
+            raise ValueError(f"bad block id {b}")

@@ -1,0 +1,164 @@
+"""Radix-tree prefix index over the paged quantized KV pool.
+
+Serving workloads repeat prompt prefixes constantly (system prompts, few-shot
+templates); because pool blocks are immutable packed quant groups of exactly
+``R`` tokens, a finished request's prompt blocks can be re-used verbatim by
+any later request whose prompt starts with the same tokens — no requantization
+and no prefill compute for the shared part.
+
+The index is a radix tree over **group chains**: each node is one full
+R-token group, keyed by its token ids, holding the physical block id that
+stores that group's quantized KV (for every layer — block ``i`` of each
+layer's pool belongs to the same request, so one id suffices). A path from
+the root spells out a prompt prefix in R-token steps.
+
+Sharing is copy-on-write at block granularity: cached blocks are only ever
+*read* (prefill writes start past the shared prefix, and decode flushes
+target a request's own freshly allocated blocks), so "copying" degenerates
+to forking the chain — a request whose prompt diverges at group ``g``
+allocates fresh blocks from ``g`` on and inserts them as sibling nodes.
+
+Lifetime is reference-counted through :class:`~repro.cache.paged.
+BlockAllocator`: the tree holds one reference on every indexed block, each
+live request holds one more on the blocks it pinned. When the allocator runs
+dry, :meth:`PrefixCache.evict_lru` drops the least-recently-used *leaf*
+whose block no live request references — trimming cold prefixes suffix-first
+so a chain is never broken in the middle.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.cache.paged import BlockAllocator
+
+
+@dataclasses.dataclass(eq=False)
+class PrefixNode:
+    """One cached R-token group: ``key`` = its token ids, ``block`` = the
+    physical pool block holding its quantized KV."""
+
+    key: tuple[int, ...]
+    block: int
+    parent: "PrefixNode | None"
+    children: dict[tuple[int, ...], "PrefixNode"] = \
+        dataclasses.field(default_factory=dict)
+    last_used: int = 0
+
+
+class PrefixCache:
+    """Host-side longest-prefix index; all bookkeeping happens between
+    jitted steps (device code only ever reads page tables)."""
+
+    def __init__(self, allocator: BlockAllocator, group_size: int):
+        self.alloc = allocator
+        self.group_size = group_size
+        self.root = PrefixNode(key=(), block=-1, parent=None)
+        self._clock = 0
+        self._nodes = 0
+
+    def __len__(self) -> int:
+        """Number of cached groups (= pool blocks the tree references)."""
+        return self._nodes
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def _groups(self, tokens) -> list[tuple[int, ...]]:
+        r = self.group_size
+        return [tuple(int(t) for t in tokens[g * r:(g + 1) * r])
+                for g in range(len(tokens) // r)]
+
+    # -------------------------------------------------------------- lookup
+    def match(self, tokens) -> list[int]:
+        """Longest cached chain of full groups prefixing ``tokens``; returns
+        the physical block ids (group ``g`` of the prompt → ``blocks[g]``).
+
+        A pure lookup: LRU stamps refresh only on :meth:`insert` (a
+        successful admission), so a speculative match — truncated by the
+        engine's chunk alignment, or followed by a failed allocation — does
+        not promote never-used suffix nodes over genuinely warm chains.
+        Between a match and its admission the engine pins the blocks, so
+        unstamped matched nodes cannot be evicted underneath it."""
+        node, blocks = self.root, []
+        for key in self._groups(tokens):
+            child = node.children.get(key)
+            if child is None:
+                break
+            blocks.append(child.block)
+            node = child
+        return blocks
+
+    # -------------------------------------------------------------- insert
+    def insert(self, tokens, blocks: list[int]) -> int:
+        """Index a prefilled prompt's full-group chain: ``blocks[g]`` holds
+        group ``g``. Newly adopted blocks gain one tree reference (so they
+        outlive the request); already-cached groups just refresh their LRU
+        stamp. Returns the number of groups newly adopted."""
+        t = self._tick()
+        node, adopted = self.root, 0
+        for g, key in enumerate(self._groups(tokens)):
+            child = node.children.get(key)
+            if child is None:
+                child = PrefixNode(key=key, block=blocks[g], parent=node,
+                                   last_used=t)
+                node.children[key] = child
+                self.alloc.ref([blocks[g]])
+                self._nodes += 1
+                adopted += 1
+            else:
+                child.last_used = t
+            node = child
+        return adopted
+
+    # ------------------------------------------------------------ eviction
+    def _evictable(self):
+        """One post-order pass: nodes whose whole subtree is unpinned (no
+        live request holds any block in it), in LRU order — deeper first on
+        ties so a chain always trims suffix-before-parent. Iterative (cached
+        chains can be thousands of groups deep)."""
+        cands = []
+        ok: dict[int, bool] = {}
+        stack = [(c, 1, False) for c in self.root.children.values()]
+        while stack:
+            node, depth, visited = stack.pop()
+            if not visited:
+                stack.append((node, depth, True))
+                stack.extend((c, depth + 1, False)
+                             for c in node.children.values())
+                continue
+            sub_ok = all(ok[id(c)] for c in node.children.values())
+            e = sub_ok and self.alloc.refcount(node.block) == 1
+            ok[id(node)] = e
+            if e:
+                cands.append((node.last_used, -depth, id(node), node))
+        cands.sort()
+        return [c[-1] for c in cands]
+
+    def evict(self, need: int, partial: bool = False) -> int:
+        """Free up to ``need`` blocks, least-recently-used first, in ONE tree
+        scan. When fewer than ``need`` blocks are evictable the call refuses
+        (returns 0) unless ``partial`` — a doomed allocation attempt must not
+        destroy cached templates it cannot help anyway."""
+        if need <= 0:
+            return 0
+        cands = self._evictable()
+        if len(cands) < need and not partial:
+            return 0
+        freed = 0
+        for node in cands:
+            if freed >= need:
+                break
+            del node.parent.children[node.key]
+            self._nodes -= 1
+            self.alloc.release([node.block])
+            freed += 1
+        return freed
+
+    def evict_lru(self) -> int:
+        """Drop the least-recently-used evictable leaf; 1 if freed, else 0."""
+        return self.evict(1)
+
+    def clear(self) -> int:
+        """Drop every evictable cached prefix; returns blocks freed."""
+        return self.evict(self._nodes, partial=True)

@@ -20,7 +20,6 @@ Design points for the 1000-node posture:
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import shutil

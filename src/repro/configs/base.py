@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 # Layer kinds used by heterogeneous stacks (gemma3, jamba, xlstm).
 ATTN_LOCAL = "attn_local"

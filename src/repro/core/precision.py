@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Iterable, Mapping, Sequence
+from typing import Iterable, Sequence
 
 SUPPORTED_BITS = (2, 4, 8, 16)
 

@@ -25,7 +25,6 @@ axes are batch/heads.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -55,8 +55,6 @@ def make_sim_evaluator(api, params, batches: Sequence[dict],
     ``metric(logits, batch) -> scalar loss`` defaults to next-token NLL.
     Returns fn(bits_array [L_attn, 2]) -> float loss (lower = better).
     """
-    cfg = api.cfg
-
     def default_metric(logits, batch):
         from repro.models import common
         mask = batch.get("loss_mask")

@@ -16,7 +16,6 @@ Policy (DESIGN.md §4):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import numpy as np

@@ -5,7 +5,6 @@ for validation); on a TPU backend the compiled kernels run natively.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.precision import MODE_PER_CHANNEL, MODE_PER_TOKEN
+from repro.core.precision import MODE_PER_CHANNEL
 from repro.kernels.runtime import resolve_interpret
 
 DEFAULT_BLOCK_S = 128

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quant
-from repro.core.precision import MODE_PER_CHANNEL, MODE_PER_TOKEN
+from repro.core.precision import MODE_PER_CHANNEL
 
 
 def kvquant_ref(x: jax.Array, bits: int, mode: str, group_size: int = 32):

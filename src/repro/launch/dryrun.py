@@ -19,7 +19,6 @@ import json
 import time
 import traceback
 
-import jax
 
 from repro.configs import ARCH_CONFIGS
 from repro.configs.base import SHAPES_BY_NAME, supported_shapes

@@ -12,14 +12,13 @@ layers high, bulk K4V2 — the structure KVTuner's search recovers, §6.5).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.configs.base import ModelConfig, ShapeCell
-from repro.core.precision import (MODE_KIVI, MODE_PER_TOKEN, KVTunerSchedule,
+from repro.core.precision import (MODE_KIVI, KVTunerSchedule,
                                   PrecisionPair)
 from repro.distributed.sharding import ShardingRules, make_rules, use_rules
 from repro.distributed.specs import SpecBuilder

@@ -15,7 +15,6 @@ if __name__ == "__main__" and "--real" not in os.sys.argv:
 
 import argparse
 
-import jax
 
 from repro.configs import ARCH_CONFIGS
 from repro.configs.base import SHAPES_BY_NAME

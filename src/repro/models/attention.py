@@ -8,14 +8,13 @@ decode path consumes a ``LayerKVCache`` (packed mixed-precision segments).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.cache.kvcache import LayerKVCache
 from repro.core import quant
-from repro.core.precision import MODE_KIVI, MODE_PER_CHANNEL, MODE_PER_TOKEN
+from repro.core.precision import MODE_PER_TOKEN
 from repro.models import common
 
 NEG_INF = -2.0 ** 30  # large-negative in f32; avoids NaN from (-inf) - (-inf)
@@ -192,7 +191,6 @@ def _sp_decode_main(qg, cache: LayerKVCache, rules):
             return jax.sharding.PartitionSpec()
         return jax.sharding.PartitionSpec(batch_spec, None, seq_axes, None, None)
 
-    from repro.core.precision import MODE_PER_CHANNEL
     k_mode, v_mode = _kv_modes_for(cache)
     P = jax.sharding.PartitionSpec
     in_specs = (
@@ -375,6 +373,60 @@ def paged_decode_attention(params, cfg, x, pool, page_table, lengths, alive,
         out = _weighted_v(p, v_full.transpose(0, 2, 1, 3), cfg).astype(x.dtype)
 
     y = out.reshape(b, 1, cfg.num_heads * hd) @ params["wo"]
+    return y, new_pool
+
+
+# ------------------------------------------------------------ paged prefill
+def paged_prefill_attention(params, cfg, x, pool, pt_row, slot, ctx_len: int,
+                            positions, theta: float):
+    """One chunk of in-pool prefill for one request (batch-1).
+
+    x [1, C, D] — a group-aligned prompt chunk starting at absolute position
+    ``ctx_len`` (a **static** multiple of R: everything before the chunk
+    already lives in pool blocks — shared prefix groups plus groups written
+    by earlier chunks of this same prefill). The chunk attends over exactly
+    the ``ctx_len // R`` live context blocks (dequantized — never the whole
+    page-table row) plus full-precision causal intra-chunk keys, then writes
+    its own full groups straight into the blocks named by ``pt_row`` [P] and
+    any trailing partial group (< R tokens, last chunk only) into the slot's
+    residual window — no dense batch-1 ``LayerKVCache`` and no adopt copy.
+
+    Returns (attn_out [1, C, D], new_pool).
+    """
+    b, c_len, _ = x.shape
+    hd = cfg.head_dim
+    r = pool.group_size
+    n_ctx = ctx_len // r
+    q, k_new, v_new = qkv(params, cfg, x, positions, theta)
+    k_t = k_new.transpose(0, 2, 1, 3)   # [1, Hkv, C, D]
+    v_t = v_new.transpose(0, 2, 1, 3)
+
+    # attention: live pool context [ctx_len] + causal fp intra-chunk [C]
+    k_cat, v_cat = k_t.astype(x.dtype), v_t.astype(x.dtype)
+    if n_ctx:
+        k_ctx, v_ctx = pool.gather_dequant(pt_row[None, :n_ctx], x.dtype)
+        k_cat = jnp.concatenate([k_ctx, k_cat], axis=2)
+        v_cat = jnp.concatenate([v_ctx, v_cat], axis=2)
+    i = jnp.arange(c_len)
+    allowed = jnp.concatenate(
+        [jnp.ones((c_len, ctx_len), bool),           # context: fully live
+         i[None, :] <= i[:, None]], axis=1)          # intra-chunk: causal
+    bias = jnp.where(allowed, 0.0, NEG_INF)[None, None]     # [1,1,C,S']
+    s = _scores(q, k_cat.transpose(0, 2, 1, 3), cfg) + bias
+    p = jax.nn.softmax(s, axis=-1)
+    out = _weighted_v(p, v_cat.transpose(0, 2, 1, 3), cfg).astype(x.dtype)
+    y = out.reshape(b, c_len, cfg.num_heads * hd) @ params["wo"]
+
+    # writes: full groups → pool blocks, trailing partial group → residual
+    n_full = c_len // r * r
+    new_pool = pool
+    if n_full:
+        bids = pt_row[n_ctx:n_ctx + n_full // r]
+        new_pool = new_pool.write_prefill_groups(
+            k_t[:, :, :n_full], v_t[:, :, :n_full], bids)
+    if c_len - n_full:
+        new_pool = new_pool.write_residual(
+            slot, k_t[:, :, n_full:], v_t[:, :, n_full:])
     return y, new_pool
 
 

@@ -79,7 +79,6 @@ def _scan_chunked(dt, xc, bmat, cmat, a, init_state, chunk: int, remat: bool):
     them over the full sequence is O(B·S·di·N) and was the dominant memory
     term at train_4k (caught by the dry-run memory analysis)."""
     b, s, di = dt.shape
-    n = a.shape[1]
     c = min(chunk, s)
     while s % c:
         c -= 1

@@ -44,6 +44,10 @@ class ModelApi:
         return tfm.paged_adopt(self.cfg, state, caches, slot, pages,
                                prompt_len)
 
+    def prefill_paged(self, params, state, tokens, slot, start, *, chunk):
+        return tfm.prefill_paged(params, self.cfg, state, tokens, slot,
+                                 start, chunk=chunk)
+
     def paged_decode_step(self, params, state, token, alive, **kw):
         return tfm.paged_decode_step(params, self.cfg, state, token, alive,
                                      **kw)

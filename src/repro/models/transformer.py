@@ -8,12 +8,11 @@ wraps them into a `ModelApi`.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from repro.cache.kvcache import LayerKVCache, init_model_cache
+from repro.cache.kvcache import init_model_cache
 from repro.configs.base import (ATTN_GLOBAL, ATTN_LOCAL, MAMBA, MLSTM, SLSTM,
                                 ModelConfig)
 from repro.core.precision import MODE_PER_TOKEN, KVTunerSchedule
@@ -501,7 +500,6 @@ def decode_step(params, cfg: ModelConfig, state: DecodeState, token,
     Python loop over layers: per-layer caches are heterogeneous under a mixed
     schedule (different packed widths), which is un-scannable by construction.
     """
-    b = token.shape[0]
     x = params["embed"][token]  # [B,1,D]
     x = shard_hint(x, "batch", "seq", "d_model")
     positions = state.pos[:, None]
@@ -586,6 +584,61 @@ def paged_adopt(cfg: ModelConfig, state: PagedDecodeState, caches: list,
             pools[i] = pools[i].adopt_prefill(cache, slot, pages)
     lengths = state.lengths.at[slot].set(jnp.asarray(prompt_len, jnp.int32))
     return dataclasses.replace(state, pools=pools, lengths=lengths)
+
+
+def prefill_paged(params, cfg: ModelConfig, state: PagedDecodeState, tokens,
+                  slot, start: int, *, chunk: int):
+    """Chunked in-pool prefill: run the non-cached prompt suffix through the
+    model in fixed-size chunks, writing each layer's quantized KV groups
+    straight into the slot's pool blocks (page-table row must already be
+    set) — no transient dense cache and no adopt copy.
+
+    tokens [1, S_suf] i32 — the prompt suffix; ``start`` (static, a multiple
+    of both R and ``chunk``) counts prompt tokens already in the pool via a
+    shared cached prefix. ``chunk`` must be a multiple of the quant group R
+    so every chunk boundary is a group boundary: a chunk attends to
+    *quantized* pool blocks for everything before it and full-precision keys
+    within itself, so the computation is identical whether the earlier
+    groups were just written by this prefill or pinned from the prefix
+    cache — the property that keeps prefix-cached serving token-identical
+    to cache-off serving. Static ``start`` also lets each chunk gather only
+    its live context blocks instead of the whole ``max_pages`` row.
+
+    Returns (last-token logits [1, vocab], new state). Retraces once per
+    distinct (suffix length, start) pair — admission cost, like any
+    prefill; the decode step is untouched.
+    """
+    s_suf = tokens.shape[1]
+    if not s_suf:
+        raise ValueError("paged prefill needs >= 1 suffix token; cap prefix "
+                         "matches below the full prompt")
+    if chunk % cfg.kv_group_size or start % chunk:
+        raise ValueError(
+            f"paged prefill alignment: chunk ({chunk}) must be a multiple "
+            f"of R ({cfg.kv_group_size}) and start ({start}) of chunk")
+    kinds = cfg.layer_kinds()
+    pools = list(state.pools)
+    pt_row = state.page_table[slot]
+    x = None
+    for c0 in range(0, s_suf, chunk):
+        c1 = min(c0 + chunk, s_suf)
+        positions = (start + c0 + jnp.arange(c1 - c0))[None]
+        x = params["embed"][tokens[:, c0:c1]]
+        x = shard_hint(x, "batch", "seq", "d_model")
+        for i, kind in enumerate(kinds):
+            p = layer_params_at(params, cfg, i)
+            if kind not in (ATTN_GLOBAL, ATTN_LOCAL):
+                raise NotImplementedError(f"paged prefill: layer kind {kind!r}")
+            h = common.rms_norm(x, p["ln1"], cfg.norm_eps)
+            y, pools[i] = attention.paged_prefill_attention(
+                p["attn"], cfg, h, pools[i], pt_row, slot, start + c0,
+                positions, _rope_theta(cfg, kind))
+            x = x + y
+            x, _ = _ffn_sublayer(p, cfg, x, i)
+    logits = unembed(params, cfg, x)[:, -1]
+    lengths = state.lengths.at[slot].set(
+        jnp.asarray(start + s_suf, jnp.int32))
+    return logits, dataclasses.replace(state, pools=pools, lengths=lengths)
 
 
 def paged_decode_step(params, cfg: ModelConfig, state: PagedDecodeState,

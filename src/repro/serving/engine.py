@@ -7,7 +7,10 @@ Two schedulers over the same model API:
   decodes in lock-step through ONE jitted step; a request that finishes frees
   its blocks and its slot admits the next queued request mid-decode. No
   (batch, capacity)-shaped recompiles: the decode step compiles once for the
-  whole run regardless of the request mix.
+  whole run regardless of the request mix. Optional **prefix caching**
+  (``prefix_cache=True``) shares quantized prompt blocks between requests
+  through a radix tree (``repro.cache.prefix``) and prefills only the
+  non-cached suffix, chunked straight into pool blocks.
 
 * ``ServeEngine`` (wave baseline) — buckets requests by exact prompt length
   into lock-step waves; each (batch, capacity) pair jits its own decode step
@@ -54,6 +57,11 @@ class EngineStats:
     waves: int = 0
     decode_steps: int = 0
     admitted: int = 0
+    # prefix-cache accounting (continuous engine with prefix_cache=True)
+    prefix_hits: int = 0
+    prefix_misses: int = 0
+    prefix_hit_tokens: int = 0      # prompt tokens served from cached blocks
+    prefix_evicted_blocks: int = 0
 
     @property
     def throughput(self) -> float:
@@ -167,6 +175,22 @@ class ContinuousEngine:
     * ``arrival_step`` on a request simulates an online arrival process
       deterministically: the request only becomes visible once that many
       decode steps have executed (benchmarks drive this with Poisson draws).
+    * ``prefill_paged`` switches admission from dense prefill + block
+      adoption to **chunked in-pool prefill**: the prompt runs through the
+      model in ``prefill_chunk``-token chunks that attend to already-written
+      (quantized) pool blocks and write their own quantized groups straight
+      into allocated blocks — no transient full-precision cache.
+      ``prefill_chunk`` trades admission compile cost against sharing
+      granularity: each trace unrolls ``suffix/chunk`` chunk passes, while
+      prefixes are shared only in chunk multiples. The default (one quant
+      group, R tokens) maximizes sharing; raise it (any multiple of R) for
+      long-prompt workloads where prefill trace time dominates.
+    * ``prefix_cache`` (implies ``prefill_paged``) additionally indexes every
+      prefilled prompt's block chain in a radix tree (``repro.cache.prefix``)
+      and admits later requests by pinning the longest cached prefix and
+      prefilling only the suffix. Cached blocks are shared copy-on-write
+      (read-only; refcounted) and evicted LRU under pool pressure. Greedy
+      outputs are token-identical with the cache on or off.
 
     Restrictions (v1): attention-only stacks with global (non-windowed)
     attention; see ``repro.cache.paged``.
@@ -175,7 +199,9 @@ class ContinuousEngine:
     def __init__(self, api, params, schedule: KVTunerSchedule | None,
                  max_batch: int = 4, max_seq: int = 512,
                  num_blocks: int | None = None, greedy: bool = True,
-                 use_pallas: bool = False, seed: int = 0):
+                 use_pallas: bool = False, seed: int = 0,
+                 prefill_paged: bool = False, prefix_cache: bool = False,
+                 prefill_chunk: int | None = None):
         cfg = api.cfg
         self.api = api
         self.params = params
@@ -190,12 +216,24 @@ class ContinuousEngine:
         self.use_pallas = use_pallas
         self.rng = jax.random.PRNGKey(seed)
         self.stats = EngineStats()
+        self.prefill_paged = prefill_paged or prefix_cache
+        # default chunk = one quant group: finest sharing granularity (any
+        # cached prefix of >= R tokens is usable), more chunks per prefill
+        self.prefill_chunk = prefill_chunk if prefill_chunk is not None \
+            else self.group_size
+        if self.prefill_chunk <= 0 or self.prefill_chunk % self.group_size:
+            raise ValueError(
+                f"prefill_chunk ({self.prefill_chunk}) must be a positive "
+                f"multiple of the quant group size ({self.group_size})")
 
         from repro.cache.paged import BlockAllocator
+        from repro.cache.prefix import PrefixCache
 
         self.state = api.init_paged_state(
             schedule, max_batch, self.num_blocks, self.max_pages)
         self.alloc = BlockAllocator(self.num_blocks)
+        self.prefix = PrefixCache(self.alloc, self.group_size) \
+            if prefix_cache else None
         self._pt = np.zeros((max_batch, self.max_pages), np.int32)
         self._slots: list[Request | None] = [None] * max_batch
         self._slot_pages: list[list[int]] = [[] for _ in range(max_batch)]
@@ -212,6 +250,12 @@ class ContinuousEngine:
         # count — that is admission cost, paid once per request; the decode
         # step above stays single-compile for the whole run.
         self._adopt = jax.jit(api.paged_adopt, donate_argnums=(0,))
+        # chunked in-pool prefill: retraces once per distinct
+        # (suffix length, shared-prefix length) pair — `start` is static so
+        # each chunk attends only the live context blocks, not max_pages
+        self._prefill = jax.jit(
+            partial(api.prefill_paged, chunk=self.prefill_chunk),
+            static_argnums=(4,), donate_argnums=(1,))
 
     # ------------------------------------------------------------- intake
     def submit(self, req: Request) -> None:
@@ -247,35 +291,92 @@ class ContinuousEngine:
         return None
 
     def _try_admit(self) -> None:
-        """FIFO admission: fill free slots while the pool has blocks."""
+        """FIFO admission: fill free slots while the pool has blocks. With
+        the prefix cache on, each admission first pins the longest cached
+        prefix so only the suffix needs fresh blocks (and prefill)."""
         while self._ready:
             slot = self._free_slot()
             if slot is None:
                 return
             req = self._ready[0]
-            pages = self.alloc.alloc(self._pages_needed(req))
+            shared = self._match_prefix(req) if self.prefix is not None \
+                else []
+            if shared:
+                self.alloc.ref(shared)  # pin before eviction can reap them
+            pages = self._alloc_with_eviction(
+                self._pages_needed(req) - len(shared))
             if pages is None:
+                if shared:
+                    self.alloc.release(shared)  # unpin; retry next tick
                 return  # head-of-line waits for blocks to free up
+            if self.prefix is not None:
+                if shared:
+                    self.stats.prefix_hits += 1
+                    self.stats.prefix_hit_tokens += \
+                        len(shared) * self.group_size
+                else:
+                    self.stats.prefix_misses += 1
             self._ready.pop(0)
-            self._admit(req, slot, pages)
+            self._admit(req, slot, shared + pages, n_shared=len(shared))
 
-    def _admit(self, req: Request, slot: int, pages: list[int]) -> None:
+    def _match_prefix(self, req: Request) -> list[int]:
+        """Longest usable cached prefix of this prompt, as block ids.
+
+        The match is capped below the full prompt (at least one suffix token
+        must run so admission has logits to sample from) and truncated to a
+        multiple of the prefill chunk: chunk boundaries are quantization
+        context boundaries, so only chunk-aligned sharing reproduces the
+        cache-off computation bit-for-bit.
+        """
+        blocks = self.prefix.match(req.prompt)
+        r = self.group_size
+        per_chunk = self.prefill_chunk // r
+        n = min(len(blocks), (len(req.prompt) - 1) // r)
+        return blocks[:n // per_chunk * per_chunk]
+
+    def _alloc_with_eviction(self, n: int) -> list[int] | None:
+        """Allocate n blocks, evicting LRU cached prefixes under pressure.
+        Eviction is one tree pass for exactly the deficit, and refuses when
+        it cannot reach it — a doomed attempt leaves the cache intact."""
+        pages = self.alloc.alloc(n)
+        if pages is None and self.prefix is not None:
+            freed = self.prefix.evict(n - self.alloc.free_blocks)
+            if freed:
+                self.stats.prefix_evicted_blocks += freed
+                pages = self.alloc.alloc(n)
+        return pages
+
+    def _admit(self, req: Request, slot: int, pages: list[int],
+               n_shared: int = 0) -> None:
         plen = len(req.prompt)
-        toks = jnp.asarray(np.asarray(req.prompt)[None], jnp.int32)
-        last_logits, dense = self.api.prefill(
-            self.params, {"tokens": toks}, self.schedule, capacity=plen,
-            extra_groups=0)
-        self.stats.prefill_tokens += plen
-        self.stats.admitted += 1
-
-        n_groups = plen // self.group_size
-        self.state = self._adopt(
-            self.state, dense.caches, jnp.int32(slot),
-            jnp.asarray(pages[:n_groups], jnp.int32), jnp.int32(plen))
         self._pt[slot, :] = 0
         self._pt[slot, :len(pages)] = pages
         self.state = dataclasses.replace(
             self.state, page_table=jnp.asarray(self._pt))
+
+        if self.prefill_paged:
+            # chunked in-pool prefill of the non-cached suffix only
+            start = n_shared * self.group_size
+            toks = jnp.asarray(np.asarray(req.prompt)[None, start:],
+                               jnp.int32)
+            last_logits, self.state = self._prefill(
+                self.params, self.state, toks, jnp.int32(slot), start)
+            self.stats.prefill_tokens += plen - start
+            if self.prefix is not None:
+                # index the full-group chain (shared nodes just touch LRU)
+                self.prefix.insert(req.prompt, pages)
+        else:
+            toks = jnp.asarray(np.asarray(req.prompt)[None], jnp.int32)
+            last_logits, dense = self.api.prefill(
+                self.params, {"tokens": toks}, self.schedule, capacity=plen,
+                extra_groups=0)
+            self.stats.prefill_tokens += plen
+            n_groups = plen // self.group_size
+            self.state = self._adopt(
+                self.state, dense.caches, jnp.int32(slot),
+                jnp.asarray(pages[:n_groups], jnp.int32), jnp.int32(plen))
+
+        self.stats.admitted += 1
         self._slots[slot] = req
         self._slot_pages[slot] = pages
 
@@ -314,8 +415,17 @@ class ContinuousEngine:
             if not live:
                 if not self._pending and not self._ready:
                     break
-                # nothing decodable yet (future arrivals): idle tick
-                self._step_count += 1
+                if self._ready:
+                    # cannot happen: with no live slots every slot is free
+                    # and (post-eviction) every pool block too, and submit()
+                    # rejects requests larger than the pool
+                    raise RuntimeError(
+                        "admission stalled with no live slots")
+                # nothing decodable yet: fast-forward straight to the next
+                # simulated arrival instead of ticking one step at a time
+                self._step_count = max(
+                    self._step_count,
+                    min(r.arrival_step for r in self._pending))
                 continue
 
             tokens = np.zeros((self.max_batch, 1), np.int32)

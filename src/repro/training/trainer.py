@@ -13,7 +13,6 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.training import grad_compress

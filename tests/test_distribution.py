@@ -8,9 +8,8 @@ import sys
 import textwrap
 
 import jax
-import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import AbstractMesh
 
 from repro.configs import ARCH_CONFIGS
 from repro.distributed.sharding import make_rules

@@ -1,0 +1,324 @@
+"""Prefix-cached paged serving tests.
+
+Covers the prefix-sharing refactor end-to-end: the refcount-aware block
+allocator (double-free / still-referenced-free hardening), the radix-tree
+prefix index (match / insert / COW fork / LRU eviction), chunked in-pool
+prefill parity, and the engine-level guarantees — token-identical greedy
+outputs with the cache on or off, shared-prefix admissions skipping prefill,
+eviction under pool pressure, pool-exhaustion backpressure, and idle-tick
+fast-forwarding to the next simulated arrival.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cache.paged import BlockAllocator
+from repro.cache.prefix import PrefixCache
+from repro.configs.base import ModelConfig
+from repro.core.precision import KVTunerSchedule, PrecisionPair
+from repro.models.registry import build_model
+from repro.serving.engine import ContinuousEngine, Request
+
+jax.config.update("jax_platform_name", "cpu")
+
+R = 8        # tiny quant group → groups/flushes within a few tokens
+CHUNK = 16   # prefill chunk (2 groups) → fine-grained prefix sharing
+
+
+@pytest.fixture(scope="module")
+def tiny_api():
+    cfg = ModelConfig(name="prefix-tiny", family="dense", num_layers=2,
+                      d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+                      vocab_size=61, q_chunk=16, kv_group_size=R)
+    return build_model(cfg)
+
+
+@pytest.fixture(scope="module")
+def tiny_params(tiny_api):
+    return tiny_api.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def sched():
+    return KVTunerSchedule.uniform(2, PrecisionPair(8, 4))
+
+
+def _engine(api, params, sched, **kw):
+    kw.setdefault("prefill_chunk", CHUNK)
+    return ContinuousEngine(api, params, sched, **kw)
+
+
+def _requests(prompts, max_new=5, eos_id=None, arrivals=None):
+    return [Request(uid=i, prompt=np.asarray(p), max_new_tokens=max_new,
+                    eos_id=eos_id,
+                    arrival_step=0 if arrivals is None else arrivals[i])
+            for i, p in enumerate(prompts)]
+
+
+def _run(engine, reqs):
+    for r in reqs:
+        engine.submit(r)
+    return sorted(engine.run(), key=lambda r: r.uid)
+
+
+def _templated_prompts(n_templates=2, per_template=3, template_len=2 * CHUNK,
+                       suffix_lens=(5, 9, 7), seed=0):
+    rng = np.random.default_rng(seed)
+    templates = [rng.integers(0, 61, template_len)
+                 for _ in range(n_templates)]
+    return [np.concatenate([t, rng.integers(0, 61, suffix_lens[j])])
+            for t in templates for j in range(per_template)]
+
+
+# ================================================== allocator refcounting
+def test_allocator_double_free_raises():
+    a = BlockAllocator(8)
+    x = a.alloc(3)
+    a.release(x)
+    assert a.free_blocks == 7
+    with pytest.raises(ValueError, match="double free"):
+        a.release([x[0]])
+    assert a.free_blocks == 7  # free list not corrupted by the bad call
+
+
+def test_allocator_release_respects_refcounts():
+    a = BlockAllocator(8)
+    x = a.alloc(2)
+    a.ref(x)                      # second owner (e.g. the prefix tree)
+    a.release(x)                  # first owner drops out
+    assert a.free_blocks == 5     # still referenced → still allocated
+    assert all(a.refcount(b) == 1 for b in x)
+    a.release(x)                  # last reference
+    assert a.free_blocks == 7
+    with pytest.raises(ValueError, match="unallocated"):
+        a.ref([x[0]])             # pinning a free block is a bug
+
+
+def test_allocator_rejects_bad_ids():
+    a = BlockAllocator(4)
+    with pytest.raises(ValueError):
+        a.release([0])   # scratch block is never allocatable
+    with pytest.raises(ValueError):
+        a.release([4])   # out of range
+    assert a.alloc(4) is None and a.alloc(3) is not None
+
+
+# ===================================================== radix prefix index
+def test_prefix_match_insert_and_fork():
+    a = BlockAllocator(16)
+    cache = PrefixCache(a, group_size=4)
+    toks_a = np.arange(12)            # 3 groups
+    blocks_a = a.alloc(3)
+    assert cache.match(toks_a) == []
+    cache.insert(toks_a, blocks_a)
+    assert len(cache) == 3
+    assert cache.match(toks_a) == blocks_a
+    # prefix-only prompt matches its leading chain
+    assert cache.match(toks_a[:8]) == blocks_a[:2]
+    # COW fork: same first 2 groups, divergent third → sibling node
+    toks_b = np.concatenate([toks_a[:8], [99, 98, 97, 96]])
+    assert cache.match(toks_b) == blocks_a[:2]
+    blocks_b = a.alloc(1)
+    cache.insert(toks_b, blocks_a[:2] + blocks_b)
+    assert len(cache) == 4
+    assert cache.match(toks_b) == blocks_a[:2] + blocks_b
+    assert cache.match(toks_a) == blocks_a  # original chain intact
+
+
+def test_prefix_lru_eviction_leaf_first_and_pinning():
+    a = BlockAllocator(16)
+    cache = PrefixCache(a, group_size=4)
+    old = np.arange(8)                # 2 groups, inserted first (colder)
+    new = np.arange(8) + 20
+    b_old, b_new = a.alloc(2), a.alloc(2)
+    cache.insert(old, b_old)
+    cache.insert(new, b_new)
+    a.release(b_old)                  # requests finished: tree is sole owner
+    a.release(b_new)
+    cache.insert(old, b_old)          # re-use refresh → 'new' is now LRU
+    assert cache.evict_lru() == 1
+    assert cache.match(new) == b_new[:1]   # leaf of 'new' evicted first
+    assert cache.match(old) == b_old       # refreshed chain untouched
+    # a pinned chain (live request holds a ref) is never evicted
+    a.ref(b_old)
+    cache.match(new)                  # 'new' is fresher, but 'old' is pinned
+    assert cache.evict_lru() == 1          # so 'new' drains instead
+    assert cache.evict_lru() == 0          # only the pinned chain remains
+    assert cache.match(old) == b_old
+    a.release(b_old)
+    assert cache.clear() == 2
+    assert a.free_blocks == 15
+
+
+def test_evict_refuses_doomed_requests_and_batches():
+    """evict(need) frees exactly the deficit in one pass, and refuses when
+    fewer blocks are evictable — a doomed allocation must not wipe the
+    cache. Pinned subtrees block their whole chain."""
+    a = BlockAllocator(16)
+    cache = PrefixCache(a, group_size=4)
+    chain = np.arange(12)             # 3 groups
+    blocks = a.alloc(3)
+    cache.insert(chain, blocks)
+    a.release(blocks)                 # tree is sole owner
+    assert cache.evict(5) == 0        # only 3 evictable → refuse, keep cache
+    assert len(cache) == 3
+    assert cache.evict(2) == 2        # partial chain trim, suffix-first
+    assert cache.match(chain) == blocks[:1]
+    # a pinned leaf makes every ancestor non-evictable
+    tail = a.alloc(1)
+    cache.insert(chain[:8], blocks[:1] + tail)
+    a.ref(tail)                       # live request pins the leaf
+    a.release(tail)
+    assert cache.evict(1) == 0
+    a.release(tail)                   # unpin
+    assert cache.evict(2) == 2
+    assert a.free_blocks == 15
+
+
+# ============================================= engine: prefix-cached serving
+def test_prefix_cache_outputs_identical_and_skips_prefill(tiny_api,
+                                                          tiny_params, sched):
+    """The acceptance property: greedy outputs token-identical with the
+    cache on or off; admissions sharing a cached prefix skip prefill for the
+    shared groups (hits > 0, fewer prefill tokens)."""
+    prompts = _templated_prompts()
+    outs = {}
+    engines = {}
+    for on in (False, True):
+        eng = _engine(tiny_api, tiny_params, sched, max_batch=2, max_seq=48,
+                      prefill_paged=True, prefix_cache=on)
+        outs[on] = [r.output for r in _run(eng, _requests(prompts))]
+        engines[on] = eng
+    assert outs[True] == outs[False]
+    on, off = engines[True].stats, engines[False].stats
+    assert on.prefix_hits > 0
+    assert on.prefix_hit_tokens > 0
+    assert on.prefill_tokens < off.prefill_tokens
+    assert on.prefill_tokens + on.prefix_hit_tokens == off.prefill_tokens
+    assert on.generated_tokens == off.generated_tokens
+    assert engines[True].decode_compilations == 1
+    # finished requests release their refs; only the tree keeps blocks
+    cached = len(engines[True].prefix)
+    assert engines[True].alloc.free_blocks == \
+        engines[True].num_blocks - 1 - cached
+
+
+def test_identical_prompt_full_hit(tiny_api, tiny_params, sched):
+    """Resubmitting an identical prompt prefills only the tail (the match is
+    capped below the full prompt) and reproduces the same output."""
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, 61, 2 * CHUNK + 3)
+    eng = _engine(tiny_api, tiny_params, sched, max_batch=1, max_seq=48,
+                  prefix_cache=True)
+    first = _run(eng, _requests([prompt], max_new=6))[0].output
+    again = Request(uid=1, prompt=prompt, max_new_tokens=6)
+    eng.submit(again)
+    eng.run()
+    assert again.output == first
+    assert eng.stats.prefix_hits == 1
+    # second admission prefilled only the 3-token tail past the shared chunks
+    assert eng.stats.prefill_tokens == 2 * (2 * CHUNK + 3) - 2 * CHUNK
+
+
+def test_eviction_under_pool_pressure(tiny_api, tiny_params, sched):
+    """A pool too small to keep every template cached: LRU prefixes are
+    evicted to admit new requests, and outputs stay correct."""
+    prompts = _templated_prompts(n_templates=3, per_template=2,
+                                 suffix_lens=(5, 9), seed=7)
+    ref_eng = _engine(tiny_api, tiny_params, sched, max_batch=2, max_seq=48,
+                      prefill_paged=True)
+    ref = [r.output for r in _run(ref_eng, _requests(prompts))]
+    # each request needs (37..41 + 5)//8 + 1 ≤ 6 blocks; 13 usable blocks
+    # hold two live requests + barely one cached template (4 blocks)
+    eng = _engine(tiny_api, tiny_params, sched, max_batch=2, max_seq=48,
+                  num_blocks=14, prefix_cache=True)
+    done = [r.output for r in _run(eng, _requests(prompts))]
+    assert done == ref
+    assert eng.stats.prefix_evicted_blocks > 0
+    assert eng.alloc.free_blocks == \
+        eng.num_blocks - 1 - len(eng.prefix)
+
+
+def test_pool_exhaustion_backpressure(tiny_api, tiny_params, sched):
+    """More concurrent demand than the pool holds: admission stalls, queued
+    requests complete with correct outputs once blocks free (satellite:
+    backpressure coverage, with staggered arrivals and prefix cache on)."""
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, 61, 16) for _ in range(6)]
+    ref = [r.output for r in
+           _run(_engine(tiny_api, tiny_params, sched, max_batch=6,
+                        max_seq=24, prefill_paged=True),
+                _requests(prompts, max_new=4))]
+    for kw in ({"prefill_paged": True}, {"prefix_cache": True}):
+        # each request needs (16+4)//8 + 1 = 3 blocks; 7 blocks fit 2 live
+        eng = _engine(tiny_api, tiny_params, sched, max_batch=6, max_seq=24,
+                      num_blocks=8, **kw)
+        done = _run(eng, _requests(prompts, max_new=4,
+                                   arrivals=[0, 0, 0, 2, 2, 5]))
+        assert len(done) == 6 and all(r.done for r in done)
+        assert [r.output for r in done] == ref, kw
+        freeable = eng.num_blocks - 1 - \
+            (len(eng.prefix) if eng.prefix is not None else 0)
+        assert eng.alloc.free_blocks == freeable, kw
+
+
+def test_engine_rejects_bad_prefill_chunk(tiny_api, tiny_params, sched):
+    for bad in (0, 12):   # zero and non-multiple-of-R both refused loudly
+        with pytest.raises(ValueError, match="prefill_chunk"):
+            ContinuousEngine(tiny_api, tiny_params, sched, prefill_chunk=bad)
+
+
+def test_idle_fast_forward_to_next_arrival(tiny_api, tiny_params, sched):
+    """With no live slot, the engine jumps _step_count straight to the next
+    pending arrival instead of ticking once per loop iteration."""
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, 61, 12) for _ in range(2)]
+    eng = _engine(tiny_api, tiny_params, sched, max_batch=2, max_seq=32,
+                  prefill_paged=True)
+    done = _run(eng, _requests(prompts, max_new=3, arrivals=[10_000, 20_000]))
+    assert all(len(r.output) == 3 for r in done)
+    assert eng._step_count >= 20_000
+    # only real decode work ran: 2 admissions × ≤2 decode steps each
+    assert eng.stats.decode_steps <= 4
+    ref = _run(_engine(tiny_api, tiny_params, sched, max_batch=2, max_seq=32,
+                       prefill_paged=True), _requests(prompts, max_new=3))
+    assert [r.output for r in done] == [r.output for r in ref]
+
+
+def test_write_prefill_groups_matches_adopt_bitwise():
+    """Given the same post-rope K/V, the direct in-pool group write produces
+    bitwise the blocks that dense fill + adopt_prefill would have — group
+    boundaries are quantization boundaries in both layouts."""
+    from repro.cache.kvcache import LayerKVCache
+    from repro.cache.paged import PagedKVPool
+    from repro.core.precision import MODE_KIVI
+
+    hkv, d, ln = 2, 16, 21          # 2 full groups + 5-token tail
+    pp = PrecisionPair(4, 2)
+    key = jax.random.PRNGKey(42)
+    k = jax.random.normal(key, (1, hkv, ln, d), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 1), (1, hkv, ln, d),
+                          jnp.float32)
+    pages = jnp.asarray([3, 1], jnp.int32)
+    n_full = ln // R * R
+
+    dense = LayerKVCache.init(1, hkv, d, 24, pp, MODE_KIVI, R,
+                              dtype=jnp.float32).fill(k, v)
+    adopted = PagedKVPool.init(5, 1, hkv, d, pp, MODE_KIVI, R,
+                               dtype=jnp.float32) \
+        .adopt_prefill(dense, jnp.int32(0), pages)
+    written = PagedKVPool.init(5, 1, hkv, d, pp, MODE_KIVI, R,
+                               dtype=jnp.float32) \
+        .write_prefill_groups(k[:, :, :n_full], v[:, :, :n_full], pages) \
+        .write_residual(jnp.int32(0), k[:, :, n_full:], v[:, :, n_full:])
+    for name in ("k_codes", "k_scale", "k_zero", "v_codes", "v_scale",
+                 "v_zero"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(adopted, name)),
+            np.asarray(getattr(written, name)), err_msg=name)
+    rem = ln - n_full
+    np.testing.assert_array_equal(np.asarray(adopted.k_res[0, :, :rem]),
+                                  np.asarray(written.k_res[0, :, :rem]))
+    np.testing.assert_array_equal(np.asarray(adopted.v_res[0, :, :rem]),
+                                  np.asarray(written.v_res[0, :, :rem]))

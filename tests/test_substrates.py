@@ -1,7 +1,6 @@
 """Substrate tests: optimizer, data pipeline, checkpointing (incl. crash
 safety + reshard-on-load), fault-tolerant trainer, gradient compression,
 serving engine, HLO analyzer."""
-import json
 import os
 
 import jax
@@ -19,7 +18,7 @@ from repro.models.registry import build_model
 from repro.serving.engine import Request, ServeEngine, generate
 from repro.training import grad_compress
 from repro.training.optimizer import AdamW, cosine_schedule
-from repro.training.trainer import Trainer, TrainState, make_train_step
+from repro.training.trainer import Trainer
 from repro.utils import hlo
 
 jax.config.update("jax_platform_name", "cpu")
