@@ -52,6 +52,7 @@ def main() -> None:
             ctx, per_template=2 if args.fast else 4,
             max_new=4 if args.fast else 8),
         "kernels_micro": lambda: kernels_micro.run(ctx),
+        "kernels_paged": lambda: kernels_micro.run_paged(ctx),
     }
     checkers = {
         "t9_error": table9_error.check_paper_claims,
@@ -64,6 +65,7 @@ def main() -> None:
         "t8_engines": table8_throughput.check_engine_claims,
         "t11_prefix": table11_prefix.check_paper_claims,
         "kernels_micro": kernels_micro.check_paper_claims,
+        "kernels_paged": kernels_micro.check_paged_claims,
     }
     wanted = set(tables) if args.tables == "all" else \
         set(args.tables.split(","))

@@ -78,9 +78,15 @@ def run(ctx, n_templates: int = 3, per_template: int = 4,
                      "max_new": max_new, "arrival_steps": arrivals},
         "prefix_off": {"prefill_tokens": off.prefill_tokens,
                        "tokens_per_s": off.throughput,
+                       "decode_tokens_per_s": off.decode_tokens_per_s,
+                       "decode_p50_ms": off.decode_p50_ms,
+                       "decode_p95_ms": off.decode_p95_ms,
                        "decode_steps": off.decode_steps},
         "prefix_on": {"prefill_tokens": on.prefill_tokens,
                       "tokens_per_s": on.throughput,
+                      "decode_tokens_per_s": on.decode_tokens_per_s,
+                      "decode_p50_ms": on.decode_p50_ms,
+                      "decode_p95_ms": on.decode_p95_ms,
                       "decode_steps": on.decode_steps,
                       "hits": on.prefix_hits, "misses": on.prefix_misses,
                       "hit_tokens": on.prefix_hit_tokens,

@@ -115,11 +115,17 @@ def run_engines(ctx, n_requests: int = 10, max_new: int = 8,
                      "prompt_lens": plens.tolist(),
                      "arrival_steps": arrivals.tolist()},
         "wave": {"tokens_per_s": wave.stats.throughput,
+                 "decode_tokens_per_s": wave.stats.decode_tokens_per_s,
                  "decode_steps": wave.stats.decode_steps,
+                 "decode_p50_ms": wave.stats.decode_p50_ms,
+                 "decode_p95_ms": wave.stats.decode_p95_ms,
                  "decode_compilations": wave.decode_compilations,
                  "waves": wave.stats.waves},
         "continuous": {"tokens_per_s": cont.stats.throughput,
+                       "decode_tokens_per_s": cont.stats.decode_tokens_per_s,
                        "decode_steps": cont.stats.decode_steps,
+                       "decode_p50_ms": cont.stats.decode_p50_ms,
+                       "decode_p95_ms": cont.stats.decode_p95_ms,
                        "decode_compilations": cont.decode_compilations},
         "outputs_identical": all(
             w.output == c.output for w, c in zip(wave_done, cont_done)),

@@ -273,6 +273,24 @@ class PagedKVPool:
             total += int(np.prod(arr.shape)) * arr.dtype.itemsize
         return total
 
+    def decode_stream_bytes(self, lengths) -> int:
+        """Analytic HBM bytes ONE length-aware fused decode launch streams
+        for per-slot token counts ``lengths`` (host ints/array): live packed
+        blocks (out-of-range grid steps alias an already-resident block and
+        DMA nothing, but a fully dead slot still fetches one aliased block
+        on its first grid step) plus every slot's residual window. The work-
+        proportionality metric reported by ``benchmarks/kernels_micro``."""
+        import numpy as np
+
+        lens = np.asarray(lengths)
+        r = self.group_size
+        # lengths floor to full groups (the kernel never streams a partial
+        # group — the tail lives in the residual window)
+        fetched = int(np.sum(np.maximum(lens // r, 1)))
+        res_bytes = int(np.prod(self.k_res.shape[1:])) * \
+            self.k_res.dtype.itemsize
+        return fetched * self.block_bytes() + 2 * len(lens) * res_bytes
+
 
 def init_model_pools(cfg, schedule, max_slots: int, num_blocks: int) -> list:
     """Per-attention-layer paged pools following a KVTunerSchedule (mirrors

@@ -106,9 +106,12 @@ def qdecode_paged_attention(q: jax.Array, pool, page_table: jax.Array,
 
     q [B, 1, H, hd] (one new token per slot, post-rope); ``pool`` is a
     ``repro.cache.paged.PagedKVPool``; page_table [B, P] physical block ids;
-    lengths [B] effective per-slot token counts (post-append). The paged main
-    segment goes through the scalar-prefetch Pallas kernel; each slot's bf16
-    residual window is attended in XLA and flash-merged. Returns [B, 1, H, hd].
+    lengths [B] effective per-slot token counts (post-append; pass 0 for
+    dead slots so they stream nothing). ONE Pallas launch per layer: the
+    length-aware kernel streams each slot's live blocks only and folds the
+    bf16 residual window in as its final online-softmax block — no separate
+    residual/merge launches, no (o, m, l) HBM round-trip.
+    Returns [B, 1, H, hd].
     """
     from repro.cache.paged import PagedKVPool  # noqa: F401 (doc/type only)
 
@@ -121,13 +124,10 @@ def qdecode_paged_attention(q: jax.Array, pool, page_table: jax.Array,
     r = pool.group_size
     n_main = (lengths // r * r).astype(jnp.int32)
 
-    o_main, m_main, l_main = qdecode_kernel.qdecode_paged(
+    out = qdecode_kernel.qdecode_paged(
         qg, pool.k_codes, pool.k_scale, pool.k_zero,
         pool.v_codes, pool.v_scale, pool.v_zero,
-        page_table, n_main,
+        pool.k_res, pool.v_res, page_table, n_main, lengths - n_main,
         k_bits=pool.k_bits, v_bits=pool.v_bits, k_mode=k_mode, v_mode=v_mode,
         group_size=r, interpret=interpret)
-
-    res = _residual_partial(qg, pool.k_res, pool.v_res, lengths - n_main)
-    out = ref.softmax_merge([(o_main, m_main, l_main), res])
     return out.reshape(b, 1, h, d).astype(q.dtype)

@@ -30,6 +30,23 @@ DEFAULT_BLOCK_S = 128
 NEG = -1e30
 
 
+def pick_block_s(s: int, requested: int, group_size: int) -> int:
+    """Largest group-aligned divisor of ``s`` that is <= ``requested``.
+
+    The dense kernel tiles the main segment in ``block_s`` rows; the tile must
+    divide ``s`` (the grid has no partial steps) and stay group-aligned (so a
+    tile never straddles a quantization group). ``min(requested, s)`` alone
+    breaks for valid lengths like s=192 with the default 128-row tile.
+    """
+    if s % group_size:
+        raise ValueError(f"segment length {s} not a multiple of the quant "
+                         f"group size {group_size}")
+    bs = max(min(requested, s) // group_size * group_size, group_size)
+    while s % bs:
+        bs -= group_size
+    return bs
+
+
 def _unpack_lanes(packed: jax.Array, bits: int, d: int) -> jax.Array:
     if bits == 8:
         return packed.astype(jnp.uint8)
@@ -115,8 +132,7 @@ def qdecode(q, k_codes, k_scale, k_zero, v_codes, v_scale, v_zero, n_valid, *,
     interpret = resolve_interpret(interpret)
     b, hkv, g, d = q.shape
     s = k_codes.shape[2]
-    block_s = min(block_s, s)
-    assert s % block_s == 0 and block_s % group_size == 0
+    block_s = pick_block_s(s, block_s, group_size)
     ns = s // block_s
 
     def seg_specs(bits, mode):
@@ -172,12 +188,14 @@ def qdecode(q, k_codes, k_scale, k_zero, v_codes, v_scale, v_zero, n_valid, *,
 
 
 # ===================================================================== paged
-def _qdecode_paged_kernel(pt_ref, nv_ref, q_ref, kc_ref, ks_ref, kz_ref,
-                          vc_ref, vs_ref, vz_ref, o_ref, m_ref, l_ref,
-                          acc_sc, m_sc, l_sc, *, k_bits, v_bits, k_mode,
-                          v_mode, group_size, num_pages, d):
+def _qdecode_paged_kernel(pt_ref, nv_ref, nr_ref, q_ref, kc_ref, ks_ref,
+                          kz_ref, vc_ref, vs_ref, vz_ref, kr_ref, vr_ref,
+                          o_ref, acc_sc, m_sc, l_sc, *, k_bits, v_bits,
+                          k_mode, v_mode, group_size, d):
     b_idx = pl.program_id(0)
     j = pl.program_id(2)
+    r = group_size
+    live = (nv_ref[b_idx] + r - 1) // r  # this slot's live page count
 
     @pl.when(j == 0)
     def _init():
@@ -186,90 +204,143 @@ def _qdecode_paged_kernel(pt_ref, nv_ref, q_ref, kc_ref, ks_ref, kz_ref,
         l_sc[...] = jnp.zeros_like(l_sc)
 
     q = q_ref[0, 0].astype(jnp.float32)  # [G, D]
-    k = _dequant_block(kc_ref, ks_ref, kz_ref, k_bits, k_mode, group_size, d)
-    scores = (q @ k.T) / jnp.sqrt(float(d))  # [G, R]
 
-    r = k.shape[0]
-    pos = j * r + jax.lax.broadcasted_iota(jnp.int32, (1, r), 1)
-    valid = pos < nv_ref[b_idx]
-    scores = jnp.where(valid, scores, NEG)
+    @pl.when(j < live)
+    def _main_block():
+        # only in-range steps score a block: out-of-range steps' index maps
+        # alias the slot's last live block (no fresh DMA) and skip compute
+        k = _dequant_block(kc_ref, ks_ref, kz_ref, k_bits, k_mode,
+                           group_size, d)
+        scores = (q @ k.T) / jnp.sqrt(float(d))  # [G, R]
+        pos = j * r + jax.lax.broadcasted_iota(jnp.int32, (1, r), 1)
+        valid = pos < nv_ref[b_idx]
+        scores = jnp.where(valid, scores, NEG)
 
-    m_prev, l_prev = m_sc[...], l_sc[...]
-    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
-    alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(scores - m_new) * valid.astype(jnp.float32)
+        m_prev, l_prev = m_sc[...], l_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new) * valid.astype(jnp.float32)
 
-    v = _dequant_block(vc_ref, vs_ref, vz_ref, v_bits, v_mode, group_size, d)
-    acc_sc[...] = acc_sc[...] * alpha + p @ v
-    l_sc[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
-    m_sc[...] = m_new
+        v = _dequant_block(vc_ref, vs_ref, vz_ref, v_bits, v_mode,
+                           group_size, d)
+        acc_sc[...] = acc_sc[...] * alpha + p @ v
+        l_sc[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        m_sc[...] = m_new
 
-    @pl.when(j == num_pages - 1)
-    def _done():
-        o_ref[0, 0] = acc_sc[...]
-        m_ref[0, 0] = m_sc[...][:, 0]
-        l_ref[0, 0] = l_sc[...][:, 0]
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _merge_residual_and_store():
+        # final grid step for this (slot, head): fold the bf16 residual
+        # window in as one more online-softmax block, normalize, store —
+        # no (o, m, l) round-trip through HBM, no separate merge launch.
+        kr = kr_ref[0, 0].astype(jnp.float32)  # [R, D]
+        scores = (q @ kr.T) / jnp.sqrt(float(d))  # [G, R]
+        valid = jax.lax.broadcasted_iota(jnp.int32, (1, r), 1) < nr_ref[b_idx]
+        scores = jnp.where(valid, scores, NEG)
+
+        m_prev, l_prev = m_sc[...], l_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new) * valid.astype(jnp.float32)
+
+        vr = vr_ref[0, 0].astype(jnp.float32)
+        acc = acc_sc[...] * alpha + p @ vr
+        l_tot = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        o_ref[0, 0] = acc / jnp.maximum(l_tot, 1e-20)
 
 
 @functools.partial(jax.jit, static_argnames=(
     "k_bits", "v_bits", "k_mode", "v_mode", "group_size", "interpret"))
 def qdecode_paged(q, k_codes, k_scale, k_zero, v_codes, v_scale, v_zero,
-                  page_table, n_valid, *, k_bits: int, v_bits: int,
-                  k_mode: str, v_mode: str, group_size: int = 32,
+                  k_res, v_res, page_table, n_valid, n_res, *, k_bits: int,
+                  v_bits: int, k_mode: str, v_mode: str, group_size: int = 32,
                   interpret: bool | None = None):
-    """Fused dequant+attention over the shared paged block pool.
+    """Fused dequant + decode attention over the shared paged block pool,
+    residual window included — ONE Pallas launch, normalized output.
 
-    The page table is a **scalar-prefetch** argument: BlockSpec index maps
+    **Length-aware**: the page axis of the grid runs only to the batch's max
+    live page count (``max(ceil(n_valid / R))``, a traced dimension — Mosaic
+    supports dynamic grid bounds), not ``page_table.shape[1]``; a pool sized
+    for long contexts costs nothing extra for short requests. Per slot, grid
+    steps past its own live count alias the slot's last live block in every
+    BlockSpec index map — the pipeline sees an unchanged block index and
+    issues **no fresh DMA** — and skip their compute under ``pl.when``, so
+    both bytes streamed and FLOPs are proportional to live tokens. Dead
+    slots (``n_valid = n_res = 0``) stream nothing and produce zeros. The
+    batch and head axes are marked ``parallel`` (``dimension_semantics``) so
+    Mosaic may split them across TensorCores; only the page axis carries the
+    online-softmax recurrence.
+
+    The page table / lengths are **scalar-prefetch** arguments: index maps
     read ``page_table[b, j]`` to pick the physical block DMA'd for logical
-    group ``j`` of slot ``b`` — the kernel streams only live blocks, in
-    logical order, straight out of the global pool.
+    group ``j`` of slot ``b``, streaming live blocks in logical order
+    straight out of the global pool.
 
     q [B, Hkv, G, D]; pool codes [N, Hkv, R, D·bits/8] (raw dtype when
-    bits=16); page_table [B, P] i32 physical block ids; n_valid [B] i32
-    tokens in the main (paged) segment per slot. Returns un-normalized
-    (o, m, l) partials for softmax-merging with the per-slot residual.
+    bits=16); k_res/v_res [B, Hkv, R, D] per-slot residual windows;
+    page_table [B, P] i32 physical block ids; n_valid [B] i32 tokens in the
+    main (paged) segment; n_res [B] i32 tokens in the residual window.
+    Returns normalized attention output [B, Hkv, G, D] f32.
     """
     interpret = resolve_interpret(interpret)
     b, hkv, g, d = q.shape
-    n_pages = page_table.shape[1]
     r = group_size
     assert k_codes.shape[2] == r, (k_codes.shape, r)
+    assert k_res.shape == (b, hkv, r, d), (k_res.shape, (b, hkv, r, d))
+
+    n_valid = n_valid.astype(jnp.int32)
+    n_res = n_res.astype(jnp.int32)
+    live_pages = (n_valid + r - 1) // r
+    # >= 1 so every slot reaches its final step (where the residual merges)
+    max_live = jnp.maximum(jnp.max(live_pages), 1)
+
+    def block_at(pt, nv, b_, j):
+        """Physical block for grid step j of slot b_, clamped to the live
+        range: out-of-range steps re-name the last live block, which the
+        pipeline recognizes as already resident (no DMA)."""
+        live = (nv[b_] + r - 1) // r
+        return pt[b_, jnp.minimum(j, jnp.maximum(live - 1, 0))]
 
     def seg_specs(bits, mode):
         cd = d if bits >= 16 else d * bits // 8
-        cspec = pl.BlockSpec((1, 1, r, cd),
-                             lambda b_, h, j, pt, nv: (pt[b_, j], h, 0, 0))
+        cspec = pl.BlockSpec(
+            (1, 1, r, cd),
+            lambda b_, h, j, pt, nv, nr: (block_at(pt, nv, b_, j), h, 0, 0))
         if bits >= 16:
-            dummy = pl.BlockSpec((1,), lambda b_, h, j, pt, nv: (0,))
+            dummy = pl.BlockSpec((1,), lambda b_, h, j, pt, nv, nr: (0,))
             return cspec, dummy, dummy
         if mode == MODE_PER_CHANNEL:
-            sspec = pl.BlockSpec((1, 1, 1, 1, d),
-                                 lambda b_, h, j, pt, nv: (pt[b_, j], h, 0, 0, 0))
+            sspec = pl.BlockSpec(
+                (1, 1, 1, 1, d),
+                lambda b_, h, j, pt, nv, nr:
+                    (block_at(pt, nv, b_, j), h, 0, 0, 0))
         else:
             gg = min(group_size, d)
-            sspec = pl.BlockSpec((1, 1, r, d // gg, 1),
-                                 lambda b_, h, j, pt, nv: (pt[b_, j], h, 0, 0, 0))
+            sspec = pl.BlockSpec(
+                (1, 1, r, d // gg, 1),
+                lambda b_, h, j, pt, nv, nr:
+                    (block_at(pt, nv, b_, j), h, 0, 0, 0))
         return cspec, sspec, sspec
 
     kc_spec, ks_spec, kz_spec = seg_specs(k_bits, k_mode)
     vc_spec, vs_spec, vz_spec = seg_specs(v_bits, v_mode)
+    res_spec = pl.BlockSpec((1, 1, r, d),
+                            lambda b_, h, j, pt, nv, nr: (b_, h, 0, 0))
 
     kernel = functools.partial(
         _qdecode_paged_kernel, k_bits=k_bits, v_bits=v_bits, k_mode=k_mode,
-        v_mode=v_mode, group_size=group_size, num_pages=n_pages, d=d)
+        v_mode=v_mode, group_size=group_size, d=d)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,  # (page_table, n_valid)
-        grid=(b, hkv, n_pages),
+        num_scalar_prefetch=3,  # (page_table, n_valid, n_res)
+        grid=(b, hkv, max_live),
         in_specs=[
-            pl.BlockSpec((1, 1, g, d), lambda b_, h, j, pt, nv: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, g, d),
+                         lambda b_, h, j, pt, nv, nr: (b_, h, 0, 0)),
             kc_spec, ks_spec, kz_spec, vc_spec, vs_spec, vz_spec,
+            res_spec, res_spec,
         ],
-        out_specs=[
-            pl.BlockSpec((1, 1, g, d), lambda b_, h, j, pt, nv: (b_, h, 0, 0)),
-            pl.BlockSpec((1, 1, g), lambda b_, h, j, pt, nv: (b_, h, 0)),
-            pl.BlockSpec((1, 1, g), lambda b_, h, j, pt, nv: (b_, h, 0)),
-        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda b_, h, j, pt, nv, nr: (b_, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((g, d), jnp.float32),
             pltpu.VMEM((g, 1), jnp.float32),
@@ -277,15 +348,12 @@ def qdecode_paged(q, k_codes, k_scale, k_zero, v_codes, v_scale, v_zero,
         ],
     )
 
-    o, m, l = pl.pallas_call(
+    return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((b, hkv, g, d), jnp.float32),
-            jax.ShapeDtypeStruct((b, hkv, g), jnp.float32),
-            jax.ShapeDtypeStruct((b, hkv, g), jnp.float32),
-        ],
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), jnp.float32),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(page_table.astype(jnp.int32), n_valid.astype(jnp.int32),
-      q, k_codes, k_scale, k_zero, v_codes, v_scale, v_zero)
-    return o, m, l
+    )(page_table.astype(jnp.int32), n_valid, n_res,
+      q, k_codes, k_scale, k_zero, v_codes, v_scale, v_zero, k_res, v_res)

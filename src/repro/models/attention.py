@@ -355,7 +355,10 @@ def paged_decode_attention(params, cfg, x, pool, page_table, lengths, alive,
 
     if use_pallas:
         from repro.kernels import ops as kops
-        out = kops.qdecode_paged_attention(q, new_pool, page_table, eff_len)
+        # dead slots get zero live length: the length-aware kernel then
+        # streams no blocks for them at all, instead of scoring stale pages
+        live_len = jnp.where(alive, eff_len, 0)
+        out = kops.qdecode_paged_attention(q, new_pool, page_table, live_len)
     else:
         r = new_pool.group_size
         k_all, v_all = new_pool.gather_dequant(page_table, x.dtype)

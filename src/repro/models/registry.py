@@ -52,6 +52,11 @@ class ModelApi:
         return tfm.paged_decode_step(params, self.cfg, state, token, alive,
                                      **kw)
 
+    def paged_decode_loop(self, params, state, token, alive, remaining,
+                          eos_ids, rng, **kw):
+        return tfm.paged_decode_loop(params, self.cfg, state, token, alive,
+                                     remaining, eos_ids, rng, **kw)
+
     # ------------------------------------------------------------ dry-run
     def input_specs(self, cell: ShapeCell) -> dict:
         """ShapeDtypeStruct stand-ins for every model input of this cell.

@@ -674,6 +674,51 @@ def paged_decode_step(params, cfg: ModelConfig, state: PagedDecodeState,
     return logits, new_state
 
 
+def paged_decode_loop(params, cfg: ModelConfig, state: PagedDecodeState,
+                      token, alive, remaining, eos_ids, rng, *, horizon: int,
+                      use_pallas: bool = False, greedy: bool = True):
+    """``horizon`` decode steps as ONE device-side ``lax.scan`` — sampling
+    and EOS/budget liveness masking run on device, so the host syncs once
+    per horizon instead of once per token (the per-token
+    ``np.asarray(sample(logits))`` round-trip is the continuous engine's
+    dominant non-compute cost at small batch).
+
+    token [max_slots] i32 (each slot's current token); alive [max_slots]
+    bool; remaining [max_slots] i32 tokens each slot may still emit;
+    eos_ids [max_slots] i32 per-slot EOS (-1 = none); rng is consumed only
+    when ``greedy=False`` (one split per step — a different stream than the
+    host-side sampler, so only greedy outputs are horizon-invariant).
+
+    A slot that hits EOS or exhausts its budget at inner step t stops
+    appending KV and emitting from step t+1; the freed slot is only
+    re-admitted at the next host sync — the horizon trades admission
+    latency (and tail decode steps that run with some slots dead) for
+    H× fewer host round-trips.
+
+    Returns (new_state, tokens [H, max_slots], emitted [H, max_slots] bool,
+    new_rng). ``tokens[t]`` is meaningful where ``emitted[t]``.
+    """
+    def body(carry, _):
+        st, tok, alv, rem, key = carry
+        logits, st = paged_decode_step(params, cfg, st, tok[:, None], alv,
+                                       use_pallas=use_pallas)
+        if greedy:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(sub, logits).astype(jnp.int32)
+        emitted = alv
+        rem = rem - emitted.astype(jnp.int32)
+        alv = alv & jnp.not_equal(nxt, eos_ids) & (rem > 0)
+        tok = jnp.where(emitted, nxt, tok)
+        return (st, tok, alv, rem, key), (nxt, emitted)
+
+    (state, _, _, _, rng), (toks, emitted) = jax.lax.scan(
+        body, (state, token.astype(jnp.int32), alive,
+               remaining.astype(jnp.int32), rng), None, length=horizon)
+    return state, toks, emitted, rng
+
+
 def init_decode_state(cfg: ModelConfig, schedule, batch: int, capacity: int,
                       extra_groups: int = 4, filled_to: int | None = None):
     """Fresh (or pretend-prefilled, for dry-runs) decode state."""

@@ -52,7 +52,8 @@ class Request:
 @dataclasses.dataclass
 class EngineStats:
     generated_tokens: int = 0
-    prefill_tokens: int = 0
+    decode_tokens: int = 0       # subset emitted by decode steps (the first
+    prefill_tokens: int = 0      # token per request samples prefill logits)
     wall_s: float = 0.0
     waves: int = 0
     decode_steps: int = 0
@@ -62,10 +63,39 @@ class EngineStats:
     prefix_misses: int = 0
     prefix_hit_tokens: int = 0      # prompt tokens served from cached blocks
     prefix_evicted_blocks: int = 0
+    # per-decode-step wall clock (seconds); multi-step horizons contribute
+    # their per-step average so percentiles stay per-token-step
+    step_wall_times: list = dataclasses.field(default_factory=list,
+                                              repr=False)
 
     @property
     def throughput(self) -> float:
         return self.generated_tokens / max(self.wall_s, 1e-9)
+
+    def record_step_wall(self, seconds: float, steps: int = 1) -> None:
+        self.step_wall_times.extend([seconds / steps] * steps)
+
+    def _step_percentile(self, q: float) -> float:
+        if not self.step_wall_times:
+            return 0.0
+        return float(np.percentile(np.asarray(self.step_wall_times), q) * 1e3)
+
+    @property
+    def decode_p50_ms(self) -> float:
+        return self._step_percentile(50)
+
+    @property
+    def decode_p95_ms(self) -> float:
+        return self._step_percentile(95)
+
+    @property
+    def decode_tokens_per_s(self) -> float:
+        """Aggregate decode-emitted tokens/s over decode-step wall time only
+        (prefill-sampled admission tokens and host scheduling excluded — the
+        kernel-facing throughput number)."""
+        if not self.step_wall_times:
+            return 0.0
+        return self.decode_tokens / max(sum(self.step_wall_times), 1e-9)
 
 
 # ==================================================================== wave
@@ -139,13 +169,18 @@ class ServeEngine:
                     tok = int(current[bi])
                     r.output.append(tok)
                     self.stats.generated_tokens += 1
+                    if step:  # the step-0 token sampled prefill logits
+                        self.stats.decode_tokens += 1
                     if (r.eos_id is not None and tok == r.eos_id) or \
                             len(r.output) >= r.max_new_tokens:
                         alive[bi] = False
             if not alive.any() or step == max_new - 1:
                 break
+            ts = time.time()
             logits, state = decode(self.params, state, current[:, None])
             current = self._sample(logits)
+            np.asarray(current)  # sync so the step wall time is real
+            self.stats.record_step_wall(time.time() - ts)
             self.stats.decode_steps += 1
         for r in wave:
             r.done = True
@@ -201,7 +236,7 @@ class ContinuousEngine:
                  num_blocks: int | None = None, greedy: bool = True,
                  use_pallas: bool = False, seed: int = 0,
                  prefill_paged: bool = False, prefix_cache: bool = False,
-                 prefill_chunk: int | None = None):
+                 prefill_chunk: int | None = None, decode_horizon: int = 1):
         cfg = api.cfg
         self.api = api
         self.params = params
@@ -241,10 +276,23 @@ class ContinuousEngine:
         self._pending: list[Request] = []   # submitted, not yet arrived
         self._ready: list[Request] = []     # arrived, waiting for slot/blocks
         self._step_count = 0
+        # decode horizon: H decode steps per device dispatch (lax.scan with
+        # in-device sampling + EOS/budget masking); the host syncs for
+        # admissions/finishes only every H steps. H=1 keeps the classic
+        # step-sync loop. Greedy outputs are identical for any H; sampled
+        # decoding uses a device-side rng stream, so only H=1 reproduces the
+        # host sampler's draws.
+        if decode_horizon < 1:
+            raise ValueError(f"decode_horizon ({decode_horizon}) must be >= 1")
+        self.decode_horizon = decode_horizon
         # donate the state: the pool is sized to fill HBM, so the step must
         # update it in place rather than hold old+new copies (no-op on CPU)
         self._step = jax.jit(
             partial(api.paged_decode_step, use_pallas=use_pallas),
+            donate_argnums=(1,))
+        self._loop = jax.jit(
+            partial(api.paged_decode_loop, horizon=decode_horizon,
+                    use_pallas=use_pallas, greedy=greedy),
             donate_argnums=(1,))
         # NOTE: adoption (like any prefill) traces per distinct prompt-group
         # count — that is admission cost, paid once per request; the decode
@@ -428,21 +476,54 @@ class ContinuousEngine:
                     min(r.arrival_step for r in self._pending))
                 continue
 
-            tokens = np.zeros((self.max_batch, 1), np.int32)
+            tokens = np.zeros(self.max_batch, np.int32)
             alive = np.zeros(self.max_batch, bool)
             for i in live:
-                tokens[i, 0] = self._current[i]
+                tokens[i] = self._current[i]
                 alive[i] = True
-            logits, self.state = self._step(
-                self.params, self.state, jnp.asarray(tokens),
-                jnp.asarray(alive))
-            self._step_count += 1
-            self.stats.decode_steps += 1
-            nxt = np.asarray(self._sample(logits))
-            for i in live:
-                self._emit(i, self._slots[i], int(nxt[i]))
+            if self.decode_horizon == 1:
+                ts = time.time()
+                logits, self.state = self._step(
+                    self.params, self.state, jnp.asarray(tokens[:, None]),
+                    jnp.asarray(alive))
+                nxt = np.asarray(self._sample(logits))
+                self.stats.record_step_wall(time.time() - ts)
+                self._step_count += 1
+                self.stats.decode_steps += 1
+                self.stats.decode_tokens += len(live)
+                for i in live:
+                    self._emit(i, self._slots[i], int(nxt[i]))
+            else:
+                self._run_horizon(live, tokens, alive)
         self.stats.wall_s += time.time() - t0
         return self._done
+
+    def _run_horizon(self, live, tokens, alive) -> None:
+        """One device dispatch of ``decode_horizon`` steps; the host then
+        replays the emitted-token log (finishing slots exactly where the
+        device's liveness mask stopped them)."""
+        h = self.decode_horizon
+        remaining = np.zeros(self.max_batch, np.int32)
+        eos = np.full(self.max_batch, -1, np.int32)
+        for i in live:
+            req = self._slots[i]
+            remaining[i] = req.max_new_tokens - len(req.output)
+            if req.eos_id is not None:
+                eos[i] = req.eos_id
+        ts = time.time()
+        self.state, toks, emitted, self.rng = self._loop(
+            self.params, self.state, jnp.asarray(tokens), jnp.asarray(alive),
+            jnp.asarray(remaining), jnp.asarray(eos), self.rng)
+        toks = np.asarray(toks)          # [H, max_batch]
+        emitted = np.asarray(emitted)
+        self.stats.record_step_wall(time.time() - ts, h)
+        self._step_count += h
+        self.stats.decode_steps += h
+        self.stats.decode_tokens += int(emitted.sum())
+        for t in range(h):
+            for i in live:
+                if emitted[t, i]:
+                    self._emit(i, self._slots[i], int(toks[t, i]))
 
     def _sample(self, logits: jax.Array) -> jax.Array:
         if self.greedy:

@@ -86,6 +86,37 @@ def test_qdecode_matches_ref(pair, mode):
     np.testing.assert_allclose(out, rout, rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.parametrize("s", [192, 96, 320])
+def test_qdecode_non_power_of_two_lengths(s):
+    """Regression: lengths whose largest aligned tile does not divide them
+    (192 with the default 128-row tile) must auto-select a working tile
+    instead of tripping the divisibility assert."""
+    b, hkv, g, d = 1, 2, 4, 64
+    q = _rand((b, hkv, g, d), seed=13)
+    _, segs, (km, vm) = _mk_segments(b, hkv, s, d, 4, 4, MODE_PER_TOKEN,
+                                     seed=17)
+    n_valid = jnp.asarray([s - 32], jnp.int32)
+    o, m, l = qdecode(q, *segs, n_valid, k_bits=4, v_bits=4, k_mode=km,
+                      v_mode=vm, interpret=True)
+    ro, rm, rl = ref.qdecode_ref(q, *segs, n_valid, k_bits=4, v_bits=4,
+                                 k_mode=km, v_mode=vm)
+    out = np.asarray(o / np.maximum(np.asarray(l)[..., None], 1e-20))
+    rout = np.asarray(ro / np.maximum(np.asarray(rl)[..., None], 1e-20))
+    np.testing.assert_allclose(out, rout, rtol=2e-5, atol=2e-5)
+
+
+def test_pick_block_s():
+    from repro.kernels.qdecode import pick_block_s
+
+    assert pick_block_s(192, 128, 32) == 96
+    assert pick_block_s(256, 128, 32) == 128
+    assert pick_block_s(64, 128, 32) == 64
+    assert pick_block_s(32, 128, 32) == 32
+    assert pick_block_s(160, 128, 32) == 32
+    with pytest.raises(ValueError):
+        pick_block_s(100, 128, 32)
+
+
 @pytest.mark.parametrize("shape", [(1, 1, 2, 32, 128), (2, 4, 8, 128, 384)])
 def test_qdecode_shape_sweep(shape):
     b, hkv, g, d, s = shape

@@ -1,0 +1,260 @@
+"""Length-aware fused paged decode: parity + engine-identity suite.
+
+Covers the single-launch decode kernel (main paged segment + in-kernel
+residual merge, work proportional to live pages) against the XLA
+gather-dequant reference across ragged slot lengths, dead slots, and empty
+residual windows; the fused output against the legacy two-launch
+partial+merge path; and the device-side multi-step decode horizon against
+the per-step engine on greedy decode (token identity).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cache.codec import kv_modes
+from repro.cache.paged import PagedKVPool
+from repro.configs.base import ModelConfig
+from repro.core.precision import (MODE_KIVI, MODE_PER_TOKEN, KVTunerSchedule,
+                                  PrecisionPair)
+from repro.kernels.qdecode import qdecode_paged
+from repro.models.registry import build_model
+from repro.serving.engine import ContinuousEngine, Request
+
+jax.config.update("jax_platform_name", "cpu")
+
+R = 8
+
+
+def _rand(shape, seed=0, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype)
+
+
+def _mk_pool(pair, mode, b, hkv, d, r, n_blocks, seed=0):
+    pp = PrecisionPair(*pair)
+    pool = PagedKVPool.init(n_blocks, b, hkv, d, pp, mode, r,
+                            dtype=jnp.float32)
+    c = pool.codec
+    kc, ks, kz = c.k.encode(_rand((n_blocks, hkv, r, d), seed))
+    vc, vs, vz = c.v.encode(_rand((n_blocks, hkv, r, d), seed + 1))
+    return dataclasses.replace(
+        pool, k_codes=kc, k_scale=ks, k_zero=kz, v_codes=vc, v_scale=vs,
+        v_zero=vz, k_res=_rand((b, hkv, r, d), seed + 2),
+        v_res=_rand((b, hkv, r, d), seed + 3))
+
+
+def _reference(q, pool, pt, n_valid, n_res):
+    """Masked softmax over [gathered main ; residual] — the XLA oracle."""
+    d = q.shape[-1]
+    r = pool.group_size
+    s_main = pt.shape[1] * r
+    kk, vv = pool.gather_dequant(pt, jnp.float32)
+    kk = jnp.concatenate([kk, pool.k_res], axis=2)
+    vv = jnp.concatenate([vv, pool.v_res], axis=2)
+    idx = jnp.arange(s_main + r)
+    valid = jnp.where(idx[None, :] < s_main,
+                      idx[None, :] < n_valid[:, None],
+                      (idx[None, :] - s_main) < n_res[:, None])
+    scores = jnp.einsum("bhgd,bhsd->bhgs", q, kk) / jnp.sqrt(d)
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    probs = jnp.where(valid[:, None, None, :],
+                      jax.nn.softmax(scores, -1), 0.0)
+    return jnp.einsum("bhgs,bhsd->bhgd", probs, vv)
+
+
+def _run_kernel(q, pool, pt, n_valid, n_res):
+    k_mode, v_mode = kv_modes(pool.mode)
+    return qdecode_paged(
+        q, pool.k_codes, pool.k_scale, pool.k_zero, pool.v_codes,
+        pool.v_scale, pool.v_zero, pool.k_res, pool.v_res, pt, n_valid,
+        n_res, k_bits=pool.k_bits, v_bits=pool.v_bits, k_mode=k_mode,
+        v_mode=v_mode, group_size=pool.group_size, interpret=True)
+
+
+# ============================================================ kernel parity
+@pytest.mark.parametrize("pair,mode", [((8, 8), MODE_PER_TOKEN),
+                                       ((4, 2), MODE_KIVI),
+                                       ((16, 16), MODE_PER_TOKEN)])
+def test_fused_ragged_lengths_match_reference(pair, mode):
+    """Mixed live lengths — full table, partial, single page, dead slot —
+    with mixed residual occupancy, one launch, vs the gather oracle."""
+    b, hkv, g, d, r, p = 4, 2, 4, 64, 32, 4
+    pool = _mk_pool(pair, mode, b, hkv, d, r, 1 + b * p, seed=7)
+    pt = jnp.arange(1, 1 + b * p, dtype=jnp.int32).reshape(b, p)
+    n_valid = jnp.asarray([4 * r, 2 * r, 1 * r, 0], jnp.int32)
+    n_res = jnp.asarray([r // 2, 0, r, 0], jnp.int32)
+    q = _rand((b, hkv, g, d), seed=11)
+
+    o = _run_kernel(q, pool, pt, n_valid, n_res)
+    ref = _reference(q, pool, pt, n_valid, n_res)
+    np.testing.assert_allclose(np.asarray(o[:3]), np.asarray(ref[:3]),
+                               rtol=3e-5, atol=3e-5)
+    # dead slot: nothing streamed, exact zeros out
+    np.testing.assert_array_equal(np.asarray(o[3]), 0.0)
+
+
+def test_fused_empty_residual_matches_reference():
+    b, hkv, g, d, r, p = 2, 2, 2, 64, 32, 3
+    pool = _mk_pool((4, 4), MODE_PER_TOKEN, b, hkv, d, r, 1 + b * p, seed=3)
+    pt = jnp.arange(1, 1 + b * p, dtype=jnp.int32).reshape(b, p)
+    n_valid = jnp.asarray([3 * r, 2 * r], jnp.int32)
+    n_res = jnp.zeros((b,), jnp.int32)
+    q = _rand((b, hkv, g, d), seed=5)
+    o = _run_kernel(q, pool, pt, n_valid, n_res)
+    ref = _reference(q, pool, pt, n_valid, n_res)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_fused_residual_only_slot():
+    """A freshly admitted slot (prompt shorter than one group): zero live
+    pages, all context in the residual window."""
+    b, hkv, g, d, r, p = 2, 2, 2, 64, 32, 2
+    pool = _mk_pool((8, 4), MODE_KIVI, b, hkv, d, r, 1 + b * p, seed=9)
+    pt = jnp.arange(1, 1 + b * p, dtype=jnp.int32).reshape(b, p)
+    n_valid = jnp.zeros((b,), jnp.int32)
+    n_res = jnp.asarray([5, r], jnp.int32)
+    q = _rand((b, hkv, g, d), seed=13)
+    o = _run_kernel(q, pool, pt, n_valid, n_res)
+    ref = _reference(q, pool, pt, n_valid, n_res)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_fusion_matches_two_launch_merge():
+    """The in-kernel residual merge reproduces the legacy pipeline —
+    separate main partials + XLA residual partial + softmax_merge."""
+    from repro.kernels import ref as kref
+    from repro.kernels.ops import _residual_partial
+
+    b, hkv, g, d, r, p = 3, 2, 4, 64, 32, 3
+    pool = _mk_pool((4, 2), MODE_KIVI, b, hkv, d, r, 1 + b * p, seed=21)
+    pt = jnp.arange(1, 1 + b * p, dtype=jnp.int32).reshape(b, p)
+    n_valid = jnp.asarray([3 * r, r, 2 * r], jnp.int32)
+    n_res = jnp.asarray([3, r, 0], jnp.int32)
+    q = _rand((b, hkv, g, d), seed=23)
+
+    fused = _run_kernel(q, pool, pt, n_valid, n_res)
+
+    # legacy two-launch path, from the dequantized main segment
+    kk, vv = pool.gather_dequant(pt, jnp.float32)
+    s_main = p * r
+    scores = jnp.einsum("bhgd,bhsd->bhgs", q, kk) / jnp.sqrt(d)
+    mask = (jnp.arange(s_main)[None, :] < n_valid[:, None])[:, None, None, :]
+    scores = jnp.where(mask, scores, -1e30)
+    m_main = jnp.max(scores, axis=-1)
+    pm = jnp.exp(scores - m_main[..., None]) * mask
+    l_main = jnp.sum(pm, axis=-1)
+    o_main = jnp.einsum("bhgs,bhsd->bhgd", pm, vv)
+    res = _residual_partial(q, pool.k_res, pool.v_res, n_res)
+    merged = kref.softmax_merge([(o_main, m_main, l_main), res])
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(merged),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_fused_ignores_garbage_past_live_pages():
+    """Work-proportionality safety: entries of the page table past a slot's
+    live range must not affect its output (those grid steps alias the last
+    live block and are compute-skipped)."""
+    b, hkv, g, d, r, p = 2, 2, 2, 64, 32, 4
+    pool = _mk_pool((4, 4), MODE_PER_TOKEN, b, hkv, d, r, 1 + b * p, seed=31)
+    n_valid = jnp.asarray([2 * r, r], jnp.int32)
+    n_res = jnp.asarray([4, 2], jnp.int32)
+    q = _rand((b, hkv, g, d), seed=33)
+    pt_a = jnp.asarray([[1, 2, 3, 4], [5, 6, 7, 8]], jnp.int32)
+    pt_b = jnp.asarray([[1, 2, 8, 7], [5, 1, 2, 3]], jnp.int32)  # junk tail
+    o_a = _run_kernel(q, pool, pt_a, n_valid, n_res)
+    o_b = _run_kernel(q, pool, pt_b, n_valid, n_res)
+    np.testing.assert_array_equal(np.asarray(o_a), np.asarray(o_b))
+
+
+# ========================================================= engine identity
+@pytest.fixture(scope="module")
+def tiny_api():
+    cfg = ModelConfig(name="fused-tiny", family="dense", num_layers=2,
+                      d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+                      vocab_size=61, q_chunk=16, kv_group_size=R)
+    return build_model(cfg)
+
+
+@pytest.fixture(scope="module")
+def tiny_params(tiny_api):
+    return tiny_api.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def sched():
+    return KVTunerSchedule.uniform(2, PrecisionPair(8, 4))
+
+
+def _engine_outputs(api, params, sched, prompts, max_new=6, eos_id=None,
+                    arrivals=None, **kw):
+    eng = ContinuousEngine(api, params, sched, max_batch=2, max_seq=40, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=np.asarray(p), max_new_tokens=max_new,
+                           eos_id=eos_id,
+                           arrival_step=0 if arrivals is None else arrivals[i]))
+    done = sorted(eng.run(), key=lambda r: r.uid)
+    return [r.output for r in done], eng
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_horizon_token_identity(tiny_api, tiny_params, sched, use_pallas):
+    """Greedy outputs must be identical for H=1 and H>1, pallas on/off."""
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, 61, n) for n in (12, 7, 19)]
+    base, _ = _engine_outputs(tiny_api, tiny_params, sched, prompts)
+    for h in (2, 4):
+        out, eng = _engine_outputs(tiny_api, tiny_params, sched, prompts,
+                                   use_pallas=use_pallas, decode_horizon=h)
+        assert out == base, f"h={h} use_pallas={use_pallas}"
+        assert eng.alloc.free_blocks == eng.num_blocks - 1
+
+
+def test_horizon_eos_mid_chunk(tiny_api, tiny_params, sched):
+    """EOS inside a horizon chunk: the device liveness mask must stop the
+    slot exactly where the per-step engine would."""
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, 61, 11) for _ in range(3)]
+    dry, _ = _engine_outputs(tiny_api, tiny_params, sched, prompts, max_new=8)
+    eos = dry[0][1]  # request 0 finishes after 2 tokens
+
+    ref, _ = _engine_outputs(tiny_api, tiny_params, sched, prompts,
+                             max_new=8, eos_id=eos)
+    out, eng = _engine_outputs(tiny_api, tiny_params, sched, prompts,
+                               max_new=8, eos_id=eos, decode_horizon=3,
+                               use_pallas=True)
+    assert out == ref
+    assert eng.alloc.free_blocks == eng.num_blocks - 1
+
+
+def test_horizon_with_arrivals(tiny_api, tiny_params, sched):
+    """Requests arriving mid-horizon are admitted at the next host sync;
+    outputs stay identical to the per-step engine."""
+    rng = np.random.default_rng(8)
+    prompts = [rng.integers(0, 61, n) for n in (8, 8, 16)]
+    ref, _ = _engine_outputs(tiny_api, tiny_params, sched, prompts,
+                             max_new=4)
+    out, eng = _engine_outputs(tiny_api, tiny_params, sched, prompts,
+                               max_new=4, arrivals=[0, 3, 6],
+                               decode_horizon=4)
+    assert out == ref
+    assert eng.stats.decode_steps % 4 == 0
+
+
+def test_horizon_stats_populated(tiny_api, tiny_params, sched):
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, 61, 10) for _ in range(2)]
+    _, eng = _engine_outputs(tiny_api, tiny_params, sched, prompts,
+                             max_new=5, decode_horizon=2)
+    st = eng.stats
+    assert len(st.step_wall_times) == st.decode_steps > 0
+    assert st.decode_p95_ms >= st.decode_p50_ms > 0.0
+    assert st.decode_tokens_per_s > 0.0
+
+
+def test_invalid_horizon_rejected(tiny_api, tiny_params, sched):
+    with pytest.raises(ValueError):
+        ContinuousEngine(tiny_api, tiny_params, sched, decode_horizon=0)
