@@ -7,6 +7,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import quant
 from repro.core.precision import MODE_PER_TOKEN
@@ -21,6 +22,18 @@ def _time(fn, *args, reps=3, **kw):
         out = fn(*args, **kw)
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) / reps * 1e6  # µs
+
+
+def _time_min(fn, *args, reps=5, **kw):
+    """Best-of-reps µs/call: the minimum filters scheduler noise, which
+    CI-gating wall-clock ratio claims need on shared runners."""
+    jax.block_until_ready(fn(*args, **kw))  # compile/warm, off the clock
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
 
 
 def run(ctx=None) -> dict:
@@ -154,18 +167,173 @@ def check_paged_claims(result: dict) -> dict[str, bool]:
     }
 
 
+# ================================================================== prefill
+def run_prefill(ctx=None, max_slots: int = 4, max_pages: int = 32,
+                hkv: int = 2, g: int = 4, d: int = 64, r: int = 32,
+                bits: int = 4, chunk: int = 32, reps: int = 5) -> dict:
+    """Work-proportionality + batched-admission sweep for the fused paged
+    prefill kernel.
+
+    Part 1 times ``qprefill_paged`` at 25/50/100% context fill (one chunk
+    wave over a pool sized for ``max_pages`` pages per slot) — µs/call and
+    the analytic ``PagedKVPool.prefill_stream_bytes`` must track **live**
+    context, not the pool capacity the page table was sized for. Part 2
+    drives a 4-request burst through a tiny ``ContinuousEngine`` with
+    batched admission on/off × prefill kernel on/off: batched admission
+    must cost fewer device dispatches, with greedy outputs token-identical
+    across all four modes."""
+    import dataclasses
+
+    from repro.cache.codec import kv_modes
+    from repro.cache.paged import PagedKVPool
+    from repro.core.precision import PrecisionPair
+    from repro.kernels.qprefill import (DEFAULT_BLOCK_Q, pick_block_q,
+                                        qprefill_paged)
+
+    num_blocks = 1 + max_slots * max_pages
+    pp = PrecisionPair(bits, bits)
+    pool = PagedKVPool.init(num_blocks, max_slots, hkv, d, pp,
+                            MODE_PER_TOKEN, r, dtype=jnp.bfloat16)
+    key = jax.random.PRNGKey(0)
+    ks_ = jax.random.split(key, 5)
+    c = pool.codec
+    kc, ksc, kz = c.k.encode(jax.random.normal(ks_[0], (num_blocks, hkv, r, d)))
+    vc, vsc, vz = c.v.encode(jax.random.normal(ks_[1], (num_blocks, hkv, r, d)))
+    pool = dataclasses.replace(
+        pool, k_codes=kc, k_scale=ksc, k_zero=kz, v_codes=vc, v_scale=vsc,
+        v_zero=vz)
+    q = jax.random.normal(ks_[2], (max_slots, hkv, chunk * g, d))
+    k_ch = jax.random.normal(ks_[3], (max_slots, hkv, chunk, d))
+    v_ch = jax.random.normal(ks_[4], (max_slots, hkv, chunk, d))
+    pt = jnp.asarray(
+        [[1 + s * max_pages + j for j in range(max_pages)]
+         for s in range(max_slots)], jnp.int32)
+    k_mode, v_mode = kv_modes(MODE_PER_TOKEN)
+
+    def call(n_ctx, n_chunk):
+        return qprefill_paged(
+            q, pool.k_codes, pool.k_scale, pool.k_zero, pool.v_codes,
+            pool.v_scale, pool.v_zero, k_ch, v_ch, pt, n_ctx, n_chunk,
+            k_bits=bits, v_bits=bits, k_mode=k_mode, v_mode=v_mode,
+            group_size=r, interpret=True)
+
+    # each q tile re-streams the context (index maps are q-tile-independent)
+    n_q_tiles = (chunk * g) // pick_block_q(chunk * g, DEFAULT_BLOCK_Q, g)
+    rows = []
+    for fill in (0.25, 0.50, 1.00):
+        ctx_pages = max(int(max_pages * fill), 1)
+        lens = [ctx_pages * r] * max_slots
+        n_ctx = jnp.asarray(lens, jnp.int32)
+        n_chunk = jnp.full((max_slots,), chunk, jnp.int32)
+        us = _time_min(call, n_ctx, n_chunk, reps=reps)
+        rows.append({
+            "kernel": "qprefill_paged", "fill": fill,
+            "live_ctx_pages": ctx_pages * max_slots,
+            "max_pages_total": max_slots * max_pages,
+            "us_per_call_interpret": us,
+            "hbm_bytes_streamed": pool.prefill_stream_bytes(
+                lens, chunk, q_tiles=n_q_tiles),
+        })
+
+    return {"rows": rows, "admission": _admission_burst(),
+            "geometry": {"max_slots": max_slots, "max_pages": max_pages,
+                         "hkv": hkv, "g": g, "d": d, "r": r, "bits": bits,
+                         "chunk": chunk, "block_bytes": pool.block_bytes()}}
+
+
+def _admission_burst(n_requests: int = 4, prompt_len: int = 12,
+                     max_new: int = 4) -> dict:
+    """4-request burst through a tiny engine: batched vs serial admission
+    × prefill kernel on/off. Prompts fit one prefill chunk, so the batched
+    path admits the whole burst in ONE wave dispatch where the serial path
+    pays one dispatch per request."""
+    import jax as _jax
+
+    from repro.configs.base import ModelConfig
+    from repro.core.precision import KVTunerSchedule, PrecisionPair
+    from repro.models.registry import build_model
+    from repro.serving.engine import ContinuousEngine, Request
+
+    r = 8
+    cfg = ModelConfig(name="prefill-burst-tiny", family="dense",
+                      num_layers=2, d_model=32, num_heads=2, num_kv_heads=2,
+                      d_ff=64, vocab_size=61, q_chunk=16, kv_group_size=r)
+    api = build_model(cfg)
+    params = api.init(_jax.random.PRNGKey(0))
+    sched = KVTunerSchedule.uniform(2, PrecisionPair(8, 4))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, prompt_len)
+               for _ in range(n_requests)]
+
+    results = {}
+    for batched in (False, True):
+        for pallas in (False, True):
+            eng = ContinuousEngine(
+                api, params, sched, max_batch=n_requests,
+                max_seq=prompt_len + max_new + r, prefill_paged=True,
+                prefill_chunk=2 * r, batched_admission=batched,
+                use_pallas=pallas)
+            for i, p in enumerate(prompts):
+                eng.submit(Request(uid=i, prompt=np.asarray(p),
+                                   max_new_tokens=max_new))
+            done = sorted(eng.run(), key=lambda q_: q_.uid)
+            results[(batched, pallas)] = (
+                [q_.output for q_ in done], eng.stats.prefill_dispatches)
+
+    base = results[(False, False)][0]
+    return {
+        "n_requests": n_requests, "prompt_len": prompt_len,
+        "serial_dispatches": results[(False, False)][1],
+        "batched_dispatches": results[(True, False)][1],
+        "serial_pallas_dispatches": results[(False, True)][1],
+        "batched_pallas_dispatches": results[(True, True)][1],
+        "outputs_identical": all(out == base
+                                 for out, _ in results.values()),
+    }
+
+
+def check_prefill_claims(result: dict) -> dict[str, bool]:
+    by_fill = {r["fill"]: r for r in result["rows"]}
+    full, quarter = by_fill[1.0], by_fill[0.25]
+    adm = result["admission"]
+    return {
+        "us/call scales with live ctx (25% fill >= 2x faster than 100%)":
+            full["us_per_call_interpret"]
+            >= 2.0 * quarter["us_per_call_interpret"],
+        "prefill bytes streamed track live ctx, not pool capacity":
+            quarter["hbm_bytes_streamed"] < by_fill[0.5]["hbm_bytes_streamed"]
+            < full["hbm_bytes_streamed"]
+            and quarter["hbm_bytes_streamed"]
+            < 0.5 * full["hbm_bytes_streamed"],
+        "batched admission >= 2x fewer dispatches for a 4-request burst":
+            adm["serial_dispatches"] >= 2 * adm["batched_dispatches"]
+            and adm["serial_pallas_dispatches"]
+            >= 2 * adm["batched_pallas_dispatches"],
+        "greedy outputs identical across kernel x batched admission":
+            adm["outputs_identical"],
+    }
+
+
 def main() -> None:
     import argparse
     import json
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--paged", action="store_true",
-                    help="paged work-proportionality sweep only (CI smoke)")
+                    help="paged decode work-proportionality sweep (CI smoke)")
+    ap.add_argument("--prefill", action="store_true",
+                    help="fused prefill + batched admission sweep (CI smoke)")
     args = ap.parse_args()
 
-    result = run_paged() if args.paged else run()
-    claims = check_paged_claims(result) if args.paged else \
-        check_paper_claims(result)
+    if args.prefill:
+        result = run_prefill()
+        claims = check_prefill_claims(result)
+    elif args.paged:
+        result = run_paged()
+        claims = check_paged_claims(result)
+    else:
+        result = run()
+        claims = check_paper_claims(result)
     print(json.dumps(result, indent=2, default=str))
     for claim, passed in claims.items():
         print(f"# [{'PASS' if passed else 'FAIL'}] {claim}", flush=True)

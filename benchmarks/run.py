@@ -53,6 +53,7 @@ def main() -> None:
             max_new=4 if args.fast else 8),
         "kernels_micro": lambda: kernels_micro.run(ctx),
         "kernels_paged": lambda: kernels_micro.run_paged(ctx),
+        "kernels_prefill": lambda: kernels_micro.run_prefill(ctx),
     }
     checkers = {
         "t9_error": table9_error.check_paper_claims,
@@ -66,6 +67,7 @@ def main() -> None:
         "t11_prefix": table11_prefix.check_paper_claims,
         "kernels_micro": kernels_micro.check_paper_claims,
         "kernels_paged": kernels_micro.check_paged_claims,
+        "kernels_prefill": kernels_micro.check_prefill_claims,
     }
     wanted = set(tables) if args.tables == "all" else \
         set(args.tables.split(","))

@@ -81,12 +81,22 @@ def run(ctx, n_templates: int = 3, per_template: int = 4,
                        "decode_tokens_per_s": off.decode_tokens_per_s,
                        "decode_p50_ms": off.decode_p50_ms,
                        "decode_p95_ms": off.decode_p95_ms,
+                       "prefill_p50_ms": off.prefill_p50_ms,
+                       "prefill_p95_ms": off.prefill_p95_ms,
+                       "admit_p50_ms": off.admit_p50_ms,
+                       "admit_p95_ms": off.admit_p95_ms,
+                       "prefill_dispatches": off.prefill_dispatches,
                        "decode_steps": off.decode_steps},
         "prefix_on": {"prefill_tokens": on.prefill_tokens,
                       "tokens_per_s": on.throughput,
                       "decode_tokens_per_s": on.decode_tokens_per_s,
                       "decode_p50_ms": on.decode_p50_ms,
                       "decode_p95_ms": on.decode_p95_ms,
+                      "prefill_p50_ms": on.prefill_p50_ms,
+                      "prefill_p95_ms": on.prefill_p95_ms,
+                      "admit_p50_ms": on.admit_p50_ms,
+                      "admit_p95_ms": on.admit_p95_ms,
+                      "prefill_dispatches": on.prefill_dispatches,
                       "decode_steps": on.decode_steps,
                       "hits": on.prefix_hits, "misses": on.prefix_misses,
                       "hit_tokens": on.prefix_hit_tokens,

@@ -119,6 +119,11 @@ def run_engines(ctx, n_requests: int = 10, max_new: int = 8,
                  "decode_steps": wave.stats.decode_steps,
                  "decode_p50_ms": wave.stats.decode_p50_ms,
                  "decode_p95_ms": wave.stats.decode_p95_ms,
+                 "prefill_p50_ms": wave.stats.prefill_p50_ms,
+                 "prefill_p95_ms": wave.stats.prefill_p95_ms,
+                 "admit_p50_ms": wave.stats.admit_p50_ms,
+                 "admit_p95_ms": wave.stats.admit_p95_ms,
+                 "prefill_dispatches": wave.stats.prefill_dispatches,
                  "decode_compilations": wave.decode_compilations,
                  "waves": wave.stats.waves},
         "continuous": {"tokens_per_s": cont.stats.throughput,
@@ -126,6 +131,11 @@ def run_engines(ctx, n_requests: int = 10, max_new: int = 8,
                        "decode_steps": cont.stats.decode_steps,
                        "decode_p50_ms": cont.stats.decode_p50_ms,
                        "decode_p95_ms": cont.stats.decode_p95_ms,
+                       "prefill_p50_ms": cont.stats.prefill_p50_ms,
+                       "prefill_p95_ms": cont.stats.prefill_p95_ms,
+                       "admit_p50_ms": cont.stats.admit_p50_ms,
+                       "admit_p95_ms": cont.stats.admit_p95_ms,
+                       "prefill_dispatches": cont.stats.prefill_dispatches,
                        "decode_compilations": cont.decode_compilations},
         "outputs_identical": all(
             w.output == c.output for w, c in zip(wave_done, cont_done)),

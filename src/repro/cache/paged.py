@@ -181,6 +181,72 @@ class PagedKVPool:
         return dataclasses.replace(self, k_codes=kc, k_scale=ks, k_zero=kz,
                                    v_codes=vc, v_scale=vs, v_zero=vz)
 
+    def write_wave(self, k: jax.Array, v: jax.Array, page_table: jax.Array,
+                   ctx_lens: jax.Array, chunk_lens: jax.Array) \
+            -> "PagedKVPool":
+        """Masked batched write of ONE prefill chunk wave for every slot —
+        the batched-admission twin of :meth:`write_prefill_groups` +
+        :meth:`write_residual`, with **traced** per-slot lengths and no
+        per-slot control flow:
+
+        * each of the chunk's ``C // R`` groups scatters to the page-table
+          block at logical group ``ctx_lens // R + i`` when ``i`` is below
+          the slot's own full-group count, else to :data:`SCRATCH_BLOCK`
+          (dead lanes — slots mid-decode or out of chunks — scatter
+          everything to scratch and are untouched);
+        * the trailing partial group (``chunk_lens % R`` tokens, last wave
+          of a request only) lands in the slot's residual window via a
+          masked positional write.
+
+        ``k/v [max_slots, Hkv, C, D]`` post-rope chunk KV (C a multiple of
+        R — waves are padded to the engine's chunk size); ``page_table
+        [max_slots, P]``; ``ctx_lens/chunk_lens [max_slots]`` i32 (ctx a
+        multiple of R). Written blocks are bitwise what the serial
+        unbatched prefill produces for the same inputs (group boundaries
+        are the quantization boundaries either way).
+        """
+        r = self.group_size
+        s, hkv, c_len, _ = k.shape
+        if c_len % r:
+            raise ValueError(f"wave chunk width {c_len} not a multiple of "
+                             f"the quant group size {r}")
+        if s != self.max_slots:
+            raise ValueError(f"wave batch {s} != max_slots {self.max_slots}")
+        n_g = c_len // r
+        ctx_lens = ctx_lens.astype(jnp.int32)
+        chunk_lens = chunk_lens.astype(jnp.int32)
+        full = jnp.minimum(chunk_lens // r, n_g)          # [S]
+        gi = jnp.broadcast_to(jnp.arange(n_g)[None, :], (s, n_g))
+        logical = jnp.clip(ctx_lens[:, None] // r + gi, 0,
+                           page_table.shape[1] - 1)
+        real = jnp.take_along_axis(page_table.astype(jnp.int32), logical,
+                                   axis=1)
+        bids = jnp.where(gi < full[:, None], real,
+                         SCRATCH_BLOCK).reshape(-1)       # [S·n_g]
+        c = self.codec
+
+        def groups(x):
+            return x.reshape(s, hkv, n_g, r, -1).transpose(0, 2, 1, 3, 4) \
+                .reshape(s * n_g, hkv, r, -1)
+
+        kc, ks, kz = _encode_scatter(self.k_codes, self.k_scale, self.k_zero,
+                                     bids, groups(k), c.k)
+        vc, vs, vz = _encode_scatter(self.v_codes, self.v_scale, self.v_zero,
+                                     bids, groups(v), c.v)
+
+        # trailing partial group → residual window positions [0, rem)
+        rem = chunk_lens - full * r                        # [S], 0..R-1
+        pos = jnp.broadcast_to(jnp.arange(r)[None, :], (s, r))
+        src = jnp.clip(full[:, None] * r + pos, 0, c_len - 1)
+        k_tail = jnp.take_along_axis(k, src[:, None, :, None], axis=2)
+        v_tail = jnp.take_along_axis(v, src[:, None, :, None], axis=2)
+        wmask = (pos < rem[:, None])[:, None, :, None]
+        k_res = jnp.where(wmask, k_tail.astype(self.k_res.dtype), self.k_res)
+        v_res = jnp.where(wmask, v_tail.astype(self.v_res.dtype), self.v_res)
+        return dataclasses.replace(self, k_codes=kc, k_scale=ks, k_zero=kz,
+                                   v_codes=vc, v_scale=vs, v_zero=vz,
+                                   k_res=k_res, v_res=v_res)
+
     def write_residual(self, slot: jax.Array, k_tail: jax.Array,
                        v_tail: jax.Array) -> "PagedKVPool":
         """Seed a slot's residual window with the prompt's trailing partial
@@ -290,6 +356,33 @@ class PagedKVPool:
         res_bytes = int(np.prod(self.k_res.shape[1:])) * \
             self.k_res.dtype.itemsize
         return fetched * self.block_bytes() + 2 * len(lens) * res_bytes
+
+    def prefill_stream_bytes(self, ctx_lens, chunk: int,
+                             q_tiles: int = 1) -> int:
+        """Analytic HBM bytes ONE fused prefill wave streams for per-slot
+        context token counts ``ctx_lens`` (host ints/array) and a
+        ``chunk``-token wave: live packed context blocks (out-of-range grid
+        steps alias an already-resident block and DMA nothing, but a
+        zero-context slot still fetches one aliased block on its first
+        step) plus every slot's full-precision chunk K/V tile. The mirror
+        of :meth:`decode_stream_bytes` for the prefill path, reported by
+        ``benchmarks/kernels_micro.run_prefill``.
+
+        ``q_tiles``: the kernel's q-tile count (``C·G / block_q`` — see
+        ``repro.kernels.qprefill.pick_block_q``). The context/chunk index
+        maps do not depend on the q-tile grid axis, so every q tile
+        re-streams the full context and chunk tile; pass the tile count
+        whenever the flattened query axis exceeds ``block_q`` (it is 1 for
+        ``C·G <= block_q``, the common serving geometry)."""
+        import numpy as np
+
+        lens = np.asarray(ctx_lens)
+        r = self.group_size
+        fetched = int(np.sum(np.maximum(lens // r, 1)))
+        hkv = self.k_res.shape[1]
+        tile = hkv * chunk * self.head_dim * self.k_res.dtype.itemsize
+        return q_tiles * (fetched * self.block_bytes()
+                          + 2 * len(lens) * tile)
 
 
 def init_model_pools(cfg, schedule, max_slots: int, num_blocks: int) -> list:

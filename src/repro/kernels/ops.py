@@ -13,6 +13,7 @@ from repro.cache.kvcache import LayerKVCache, _kv_modes
 from repro.core.precision import MODE_PER_TOKEN
 from repro.kernels import kvquant as kvquant_kernel
 from repro.kernels import qdecode as qdecode_kernel
+from repro.kernels import qprefill as qprefill_kernel
 from repro.kernels import ref
 from repro.kernels.runtime import default_interpret
 
@@ -131,3 +132,40 @@ def qdecode_paged_attention(q: jax.Array, pool, page_table: jax.Array,
         k_bits=pool.k_bits, v_bits=pool.v_bits, k_mode=k_mode, v_mode=v_mode,
         group_size=r, interpret=interpret)
     return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def qprefill_paged_attention(q: jax.Array, pool, page_table: jax.Array,
+                             ctx_lens: jax.Array, k_chunk: jax.Array,
+                             v_chunk: jax.Array, chunk_lens: jax.Array,
+                             interpret: bool | None = None) -> jax.Array:
+    """Fused flash prefill attention of one chunk wave over the paged pool.
+
+    q [S, C, H, hd] (post-rope chunk queries per slot); ``pool`` is a
+    ``repro.cache.paged.PagedKVPool``; page_table [S, P] physical block ids;
+    ctx_lens [S] i32 context tokens already in pool blocks (multiples of R;
+    0 for dead lanes); k_chunk/v_chunk [S, Hkv, C, D] full-precision chunk
+    K/V; chunk_lens [S] i32 live chunk tokens (0 = dead lane). ONE Pallas
+    launch per layer: packed context blocks stream via the page table and
+    the causal intra-chunk tile folds in as the final online-softmax block —
+    no ``gather_dequant``, no materialized O(C×S') bias. Returns
+    [S, C, H, hd]; rows of dead lanes are exact zeros.
+    """
+    from repro.cache.paged import PagedKVPool  # noqa: F401 (doc/type only)
+
+    interpret = default_interpret() if interpret is None else interpret
+    s, c, h, d = q.shape
+    hkv = pool.k_res.shape[1]
+    g = h // hkv
+    # flatten (chunk_pos, q_head) chunk-position-major: row = c·G + g
+    qg = q.reshape(s, c, hkv, g, d).transpose(0, 2, 1, 3, 4) \
+        .reshape(s, hkv, c * g, d)
+    k_mode, v_mode = _kv_modes(pool.mode)
+
+    out = qprefill_kernel.qprefill_paged(
+        qg, pool.k_codes, pool.k_scale, pool.k_zero,
+        pool.v_codes, pool.v_scale, pool.v_zero,
+        k_chunk, v_chunk, page_table, ctx_lens, chunk_lens,
+        k_bits=pool.k_bits, v_bits=pool.v_bits, k_mode=k_mode, v_mode=v_mode,
+        group_size=pool.group_size, interpret=interpret)
+    return out.reshape(s, hkv, c, g, d).transpose(0, 2, 1, 3, 4) \
+        .reshape(s, c, h, d).astype(q.dtype)

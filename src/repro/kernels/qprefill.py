@@ -1,0 +1,228 @@
+"""Pallas TPU kernel: fused flash-style prefill attention over the shared
+paged pool of packed quantized KV blocks.
+
+This is the admission-side twin of ``qdecode_paged`` (repro.kernels.qdecode).
+The chunked in-pool prefill path previously materialized the whole live
+context per chunk per layer (``pool.gather_dequant`` → dense bf16 [S', D]
+in HBM, plus a dense O(C×S') mask) — exactly the memory blowup packed-group
+streaming is meant to avoid. Here the packed blocks stream straight from HBM
+through scalar-prefetch page-table index maps, dequantize per-block in VMEM
+(shared ``_dequant_block``/``_unpack_lanes`` helpers), and fold into an
+online softmax; the full-precision causal intra-chunk tile rides along as
+the final block. One launch, normalized output, nothing dequantized ever
+touches HBM.
+
+Geometry per grid step (slot, h_kv, q_tile, j):
+  q tile     [Bq, D]        Bq rows of the flattened (chunk_pos, q_head)
+                            axis (row = c·G + g, chunk-position-major)
+  ctx block  [R, D·kb/8]    one packed pool block → unpack+dequant in VMEM
+  final j    [C, D]         fp chunk K/V tile, causal-masked
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.precision import MODE_PER_CHANNEL
+from repro.kernels.qdecode import NEG, _dequant_block
+from repro.kernels.runtime import resolve_interpret
+
+DEFAULT_BLOCK_Q = 256
+
+
+def pick_block_q(rows: int, requested: int, g: int) -> int:
+    """Largest divisor of ``rows`` that is <= ``requested`` and a multiple
+    of ``g`` (so a q tile always holds whole query positions — all G query
+    heads of a chunk position land in the same tile)."""
+    if rows % g:
+        raise ValueError(f"q rows {rows} not a multiple of q-per-kv {g}")
+    bq = max(min(requested, rows) // g * g, g)
+    while rows % bq:
+        bq -= g
+    return bq
+
+
+def _qprefill_kernel(pt_ref, nctx_ref, nchunk_ref, q_ref, kc_ref, ks_ref,
+                     kz_ref, vc_ref, vs_ref, vz_ref, kch_ref, vch_ref,
+                     o_ref, acc_sc, m_sc, l_sc, *, k_bits, v_bits, k_mode,
+                     v_mode, group_size, g, block_q, chunk, d):
+    s_idx = pl.program_id(0)
+    qt = pl.program_id(2)
+    j = pl.program_id(3)
+    r = group_size
+    live = nctx_ref[s_idx] // r  # this slot's live context block count
+
+    @pl.when(j == 0)
+    def _init():
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+        m_sc[...] = jnp.full_like(m_sc, NEG)
+        l_sc[...] = jnp.zeros_like(l_sc)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # [Bq, D]
+
+    @pl.when(j < live)
+    def _ctx_block():
+        # in-range steps score one packed context block; out-of-range steps'
+        # index maps alias the slot's last live block (no fresh DMA) and
+        # skip compute entirely — work ∝ live context, not pool capacity
+        k = _dequant_block(kc_ref, ks_ref, kz_ref, k_bits, k_mode,
+                           group_size, d)
+        scores = (q @ k.T) / jnp.sqrt(float(d))  # [Bq, R]
+        pos = j * r + jax.lax.broadcasted_iota(jnp.int32, (1, r), 1)
+        valid = pos < nctx_ref[s_idx]
+        scores = jnp.where(valid, scores, NEG)
+
+        m_prev, l_prev = m_sc[...], l_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new) * valid.astype(jnp.float32)
+
+        v = _dequant_block(vc_ref, vs_ref, vz_ref, v_bits, v_mode,
+                           group_size, d)
+        acc_sc[...] = acc_sc[...] * alpha + p @ v
+        l_sc[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        m_sc[...] = m_new
+
+    @pl.when(j == pl.num_programs(3) - 1)
+    def _chunk_tile_and_store():
+        # final grid step: fold the full-precision intra-chunk K/V tile in
+        # as one more online-softmax block — causal within the chunk and
+        # ragged-masked to the slot's live chunk length — then normalize
+        # and store. Dead lanes (n_ctx = n_chunk = 0) emit exact zeros.
+        kch = kch_ref[0, 0].astype(jnp.float32)  # [C, D]
+        scores = (q @ kch.T) / jnp.sqrt(float(d))  # [Bq, C]
+        qpos = (qt * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, chunk), 0)) // g
+        kpos = jax.lax.broadcasted_iota(jnp.int32, (block_q, chunk), 1)
+        valid = (kpos <= qpos) & (kpos < nchunk_ref[s_idx])
+        scores = jnp.where(valid, scores, NEG)
+
+        m_prev, l_prev = m_sc[...], l_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new) * valid.astype(jnp.float32)
+
+        vch = vch_ref[0, 0].astype(jnp.float32)
+        acc = acc_sc[...] * alpha + p @ vch
+        l_tot = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        o_ref[0, 0] = acc / jnp.maximum(l_tot, 1e-20)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "k_bits", "v_bits", "k_mode", "v_mode", "group_size", "block_q",
+    "interpret"))
+def qprefill_paged(q, k_codes, k_scale, k_zero, v_codes, v_scale, v_zero,
+                   k_chunk, v_chunk, page_table, n_ctx, n_chunk, *,
+                   k_bits: int, v_bits: int, k_mode: str, v_mode: str,
+                   group_size: int = 32, block_q: int = DEFAULT_BLOCK_Q,
+                   interpret: bool | None = None):
+    """Fused dequant + flash prefill attention of one chunk wave over the
+    shared paged block pool — ONE Pallas launch, normalized output.
+
+    **Work-proportional and retrace-free**: the context axis of the grid
+    runs to the batch's max live context block count plus one
+    (``max(n_ctx // R) + 1``, a traced dimension) — the ``+1`` step folds
+    the full-precision intra-chunk tile. Per slot, context steps past its
+    own live count alias the slot's last live block in every BlockSpec
+    index map (the pipeline sees an unchanged block index → no fresh DMA)
+    and skip their compute under ``pl.when``. Lengths are traced, so one
+    compiled kernel serves every (context length, chunk occupancy) mix —
+    the batched-admission property. Dead lanes (``n_ctx = n_chunk = 0``)
+    stream one aliased block plus their chunk tile and emit exact zeros.
+
+    q [S, Hkv, C·G, D] — chunk queries flattened chunk-position-major
+    (row = c·G + g); pool codes [N, Hkv, R, D·bits/8] (raw dtype when
+    bits >= 16); k_chunk/v_chunk [S, Hkv, C, D] full-precision post-rope
+    chunk K/V; page_table [S, P] i32; n_ctx [S] i32 context tokens already
+    in pool blocks (each a multiple of R — prefill chunks are
+    group-aligned); n_chunk [S] i32 live tokens of this wave's chunk.
+    Returns normalized attention output [S, Hkv, C·G, D] f32.
+    """
+    interpret = resolve_interpret(interpret)
+    s, hkv, cg, d = q.shape
+    c = k_chunk.shape[2]
+    assert cg % c == 0, (cg, c)
+    g = cg // c
+    r = group_size
+    assert k_codes.shape[2] == r, (k_codes.shape, r)
+    assert k_chunk.shape == (s, hkv, c, d), (k_chunk.shape, (s, hkv, c, d))
+    block_q = pick_block_q(cg, block_q, g)
+    nq = cg // block_q
+
+    n_ctx = n_ctx.astype(jnp.int32)
+    n_chunk = n_chunk.astype(jnp.int32)
+    live_pages = n_ctx // r
+    max_live = jnp.maximum(jnp.max(live_pages), 0)
+
+    def block_at(pt, nc, s_, j):
+        """Physical block for context step j of slot s_, clamped to the live
+        range: out-of-range steps re-name the last live block, which the
+        pipeline recognizes as already resident (no DMA)."""
+        live = nc[s_] // r
+        return pt[s_, jnp.minimum(j, jnp.maximum(live - 1, 0))]
+
+    def seg_specs(bits, mode):
+        cd = d if bits >= 16 else d * bits // 8
+        cspec = pl.BlockSpec(
+            (1, 1, r, cd),
+            lambda s_, h, qt, j, pt, nc, nk: (block_at(pt, nc, s_, j), h,
+                                              0, 0))
+        if bits >= 16:
+            dummy = pl.BlockSpec((1,), lambda s_, h, qt, j, pt, nc, nk: (0,))
+            return cspec, dummy, dummy
+        if mode == MODE_PER_CHANNEL:
+            sspec = pl.BlockSpec(
+                (1, 1, 1, 1, d),
+                lambda s_, h, qt, j, pt, nc, nk:
+                    (block_at(pt, nc, s_, j), h, 0, 0, 0))
+        else:
+            gg = min(group_size, d)
+            sspec = pl.BlockSpec(
+                (1, 1, r, d // gg, 1),
+                lambda s_, h, qt, j, pt, nc, nk:
+                    (block_at(pt, nc, s_, j), h, 0, 0, 0))
+        return cspec, sspec, sspec
+
+    kc_spec, ks_spec, kz_spec = seg_specs(k_bits, k_mode)
+    vc_spec, vs_spec, vz_spec = seg_specs(v_bits, v_mode)
+    q_spec = pl.BlockSpec((1, 1, block_q, d),
+                          lambda s_, h, qt, j, pt, nc, nk: (s_, h, qt, 0))
+    chunk_spec = pl.BlockSpec((1, 1, c, d),
+                              lambda s_, h, qt, j, pt, nc, nk: (s_, h, 0, 0))
+
+    kernel = functools.partial(
+        _qprefill_kernel, k_bits=k_bits, v_bits=v_bits, k_mode=k_mode,
+        v_mode=v_mode, group_size=group_size, g=g, block_q=block_q, chunk=c,
+        d=d)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,  # (page_table, n_ctx, n_chunk)
+        grid=(s, hkv, nq, max_live + 1),
+        in_specs=[
+            q_spec,
+            kc_spec, ks_spec, kz_spec, vc_spec, vs_spec, vz_spec,
+            chunk_spec, chunk_spec,
+        ],
+        out_specs=q_spec,
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s, hkv, cg, d), jnp.float32),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), n_ctx, n_chunk,
+      q, k_codes, k_scale, k_zero, v_codes, v_scale, v_zero,
+      k_chunk, v_chunk)

@@ -330,6 +330,23 @@ def decode_attention(params, cfg, x, cache: LayerKVCache, pos, kind: str,
 
 
 # ------------------------------------------------------------- paged decode
+def _concrete_live_pages(lengths, r: int) -> int | None:
+    """Batch max live page count when ``lengths`` is concrete (eager calls,
+    benchmarks, tests) — lets reference paths gather only the live prefix of
+    the page table instead of its full pool-capacity width. Returns None
+    under tracing (jitted steps compile once for any length, so the gather
+    width must stay static there)."""
+    import numpy as np
+
+    try:
+        lens = np.asarray(lengths)
+    except Exception:  # TracerArrayConversionError and friends
+        return None
+    if lens.size == 0:
+        return 0
+    return int(lens.max() // r)
+
+
 def paged_decode_attention(params, cfg, x, pool, page_table, lengths, alive,
                            theta: float, use_pallas: bool = False):
     """One-token decode over the shared paged pool for every serving slot.
@@ -361,7 +378,11 @@ def paged_decode_attention(params, cfg, x, pool, page_table, lengths, alive,
         out = kops.qdecode_paged_attention(q, new_pool, page_table, live_len)
     else:
         r = new_pool.group_size
-        k_all, v_all = new_pool.gather_dequant(page_table, x.dtype)
+        # gather only the batch's max live page count when lengths are
+        # concrete; the full page-table width is pool capacity, not work
+        live = _concrete_live_pages(eff_len, r)
+        pt = page_table if live is None else page_table[:, :live]
+        k_all, v_all = new_pool.gather_dequant(pt, x.dtype)
         k_full = jnp.concatenate([k_all, new_pool.k_res.astype(x.dtype)], axis=2)
         v_full = jnp.concatenate([v_all, new_pool.v_res.astype(x.dtype)], axis=2)
         s_main = k_all.shape[2]
@@ -381,18 +402,22 @@ def paged_decode_attention(params, cfg, x, pool, page_table, lengths, alive,
 
 # ------------------------------------------------------------ paged prefill
 def paged_prefill_attention(params, cfg, x, pool, pt_row, slot, ctx_len: int,
-                            positions, theta: float):
+                            positions, theta: float,
+                            use_pallas: bool = False):
     """One chunk of in-pool prefill for one request (batch-1).
 
     x [1, C, D] — a group-aligned prompt chunk starting at absolute position
     ``ctx_len`` (a **static** multiple of R: everything before the chunk
     already lives in pool blocks — shared prefix groups plus groups written
     by earlier chunks of this same prefill). The chunk attends over exactly
-    the ``ctx_len // R`` live context blocks (dequantized — never the whole
-    page-table row) plus full-precision causal intra-chunk keys, then writes
-    its own full groups straight into the blocks named by ``pt_row`` [P] and
-    any trailing partial group (< R tokens, last chunk only) into the slot's
-    residual window — no dense batch-1 ``LayerKVCache`` and no adopt copy.
+    the ``ctx_len // R`` live context blocks plus full-precision causal
+    intra-chunk keys — on the ``use_pallas`` path through the fused
+    ``qprefill_paged`` kernel (packed blocks stream straight from the pool;
+    nothing dequantized touches HBM and no dense bias is built), otherwise
+    through the dense gather reference below — then writes its own full
+    groups straight into the blocks named by ``pt_row`` [P] and any trailing
+    partial group (< R tokens, last chunk only) into the slot's residual
+    window — no dense batch-1 ``LayerKVCache`` and no adopt copy.
 
     Returns (attn_out [1, C, D], new_pool).
     """
@@ -404,20 +429,26 @@ def paged_prefill_attention(params, cfg, x, pool, pt_row, slot, ctx_len: int,
     k_t = k_new.transpose(0, 2, 1, 3)   # [1, Hkv, C, D]
     v_t = v_new.transpose(0, 2, 1, 3)
 
-    # attention: live pool context [ctx_len] + causal fp intra-chunk [C]
-    k_cat, v_cat = k_t.astype(x.dtype), v_t.astype(x.dtype)
-    if n_ctx:
-        k_ctx, v_ctx = pool.gather_dequant(pt_row[None, :n_ctx], x.dtype)
-        k_cat = jnp.concatenate([k_ctx, k_cat], axis=2)
-        v_cat = jnp.concatenate([v_ctx, v_cat], axis=2)
-    i = jnp.arange(c_len)
-    allowed = jnp.concatenate(
-        [jnp.ones((c_len, ctx_len), bool),           # context: fully live
-         i[None, :] <= i[:, None]], axis=1)          # intra-chunk: causal
-    bias = jnp.where(allowed, 0.0, NEG_INF)[None, None]     # [1,1,C,S']
-    s = _scores(q, k_cat.transpose(0, 2, 1, 3), cfg) + bias
-    p = jax.nn.softmax(s, axis=-1)
-    out = _weighted_v(p, v_cat.transpose(0, 2, 1, 3), cfg).astype(x.dtype)
+    if use_pallas:
+        from repro.kernels import ops as kops
+        out = kops.qprefill_paged_attention(
+            q, pool, pt_row[None], jnp.full((1,), ctx_len, jnp.int32),
+            k_t, v_t, jnp.full((1,), c_len, jnp.int32)).astype(x.dtype)
+    else:
+        # reference: live pool context [ctx_len] + causal fp intra-chunk [C]
+        k_cat, v_cat = k_t.astype(x.dtype), v_t.astype(x.dtype)
+        if n_ctx:
+            k_ctx, v_ctx = pool.gather_dequant(pt_row[None, :n_ctx], x.dtype)
+            k_cat = jnp.concatenate([k_ctx, k_cat], axis=2)
+            v_cat = jnp.concatenate([v_ctx, v_cat], axis=2)
+        i = jnp.arange(c_len)
+        allowed = jnp.concatenate(
+            [jnp.ones((c_len, ctx_len), bool),       # context: fully live
+             i[None, :] <= i[:, None]], axis=1)      # intra-chunk: causal
+        bias = jnp.where(allowed, 0.0, NEG_INF)[None, None]     # [1,1,C,S']
+        s = _scores(q, k_cat.transpose(0, 2, 1, 3), cfg) + bias
+        p = jax.nn.softmax(s, axis=-1)
+        out = _weighted_v(p, v_cat.transpose(0, 2, 1, 3), cfg).astype(x.dtype)
     y = out.reshape(b, c_len, cfg.num_heads * hd) @ params["wo"]
 
     # writes: full groups → pool blocks, trailing partial group → residual
@@ -430,6 +461,68 @@ def paged_prefill_attention(params, cfg, x, pool, pt_row, slot, ctx_len: int,
     if c_len - n_full:
         new_pool = new_pool.write_residual(
             slot, k_t[:, :, n_full:], v_t[:, :, n_full:])
+    return y, new_pool
+
+
+def paged_prefill_wave_attention(params, cfg, x, pool, page_table, ctx_lens,
+                                 chunk_lens, positions, theta: float,
+                                 use_pallas: bool = False):
+    """One batched prefill chunk wave across ALL serving slots.
+
+    x [max_slots, C, D] — one group-aligned chunk per slot, padded to the
+    engine's chunk width; ``ctx_lens [max_slots]`` i32 tokens already in
+    pool blocks per slot (**traced**, each a multiple of R; 0 for dead
+    lanes) and ``chunk_lens [max_slots]`` i32 live chunk tokens (0 = dead
+    lane: a slot mid-decode, or a request out of chunks this wave). Unlike
+    the batch-1 :func:`paged_prefill_attention` (static lengths → one
+    retrace per distinct context length), lengths here are traced: one
+    compiled wave serves every burst composition.
+
+    The ``use_pallas`` path streams packed context blocks through the fused
+    ``qprefill_paged`` kernel (work ∝ live context); the reference path
+    gathers the page table (clamped to the batch's max live page count when
+    lengths are concrete) and builds the dense mask — the oracle the parity
+    suite checks against. Writes go through ``PagedKVPool.write_wave``
+    (masked scatter; dead lanes write only to the scratch block).
+
+    Returns (attn_out [max_slots, C, D] — dead-lane rows are garbage the
+    engine ignores — and the new pool).
+    """
+    s, c_len, _ = x.shape
+    hd = cfg.head_dim
+    r = pool.group_size
+    ctx_lens = ctx_lens.astype(jnp.int32)
+    chunk_lens = chunk_lens.astype(jnp.int32)
+    q, k_new, v_new = qkv(params, cfg, x, positions, theta)
+    k_t = k_new.transpose(0, 2, 1, 3)   # [S, Hkv, C, D]
+    v_t = v_new.transpose(0, 2, 1, 3)
+
+    if use_pallas:
+        from repro.kernels import ops as kops
+        out = kops.qprefill_paged_attention(
+            q, pool, page_table, ctx_lens, k_t, v_t,
+            chunk_lens).astype(x.dtype)
+    else:
+        live = _concrete_live_pages(ctx_lens, r)
+        pt = page_table if live is None else page_table[:, :live]
+        k_ctx, v_ctx = pool.gather_dequant(pt, x.dtype)  # [S,Hkv,P'·R,D]
+        k_cat = jnp.concatenate([k_ctx, k_t.astype(x.dtype)], axis=2)
+        v_cat = jnp.concatenate([v_ctx, v_t.astype(x.dtype)], axis=2)
+        s_ctx = k_ctx.shape[2]
+        i = jnp.arange(c_len)
+        kidx = jnp.arange(s_ctx + c_len)
+        valid = jnp.where(
+            kidx[None, None, :] < s_ctx,
+            kidx[None, None, :] < ctx_lens[:, None, None],
+            ((kidx[None, None, :] - s_ctx) <= i[None, :, None])
+            & ((kidx[None, None, :] - s_ctx) < chunk_lens[:, None, None]))
+        bias = jnp.where(valid, 0.0, NEG_INF)[:, None]          # [S,1,C,S']
+        sc = _scores(q, k_cat.transpose(0, 2, 1, 3), cfg) + bias
+        p = jax.nn.softmax(sc, axis=-1)
+        out = _weighted_v(p, v_cat.transpose(0, 2, 1, 3), cfg).astype(x.dtype)
+
+    y = out.reshape(s, c_len, cfg.num_heads * hd) @ params["wo"]
+    new_pool = pool.write_wave(k_t, v_t, page_table, ctx_lens, chunk_lens)
     return y, new_pool
 
 

@@ -44,9 +44,16 @@ class ModelApi:
         return tfm.paged_adopt(self.cfg, state, caches, slot, pages,
                                prompt_len)
 
-    def prefill_paged(self, params, state, tokens, slot, start, *, chunk):
+    def prefill_paged(self, params, state, tokens, slot, start, *, chunk,
+                      use_pallas=False):
         return tfm.prefill_paged(params, self.cfg, state, tokens, slot,
-                                 start, chunk=chunk)
+                                 start, chunk=chunk, use_pallas=use_pallas)
+
+    def prefill_paged_wave(self, params, state, tokens, ctx_lens, chunk_lens,
+                           *, use_pallas=False):
+        return tfm.prefill_paged_wave(params, self.cfg, state, tokens,
+                                      ctx_lens, chunk_lens,
+                                      use_pallas=use_pallas)
 
     def paged_decode_step(self, params, state, token, alive, **kw):
         return tfm.paged_decode_step(params, self.cfg, state, token, alive,

@@ -587,7 +587,7 @@ def paged_adopt(cfg: ModelConfig, state: PagedDecodeState, caches: list,
 
 
 def prefill_paged(params, cfg: ModelConfig, state: PagedDecodeState, tokens,
-                  slot, start: int, *, chunk: int):
+                  slot, start: int, *, chunk: int, use_pallas: bool = False):
     """Chunked in-pool prefill: run the non-cached prompt suffix through the
     model in fixed-size chunks, writing each layer's quantized KV groups
     straight into the slot's pool blocks (page-table row must already be
@@ -632,13 +632,65 @@ def prefill_paged(params, cfg: ModelConfig, state: PagedDecodeState, tokens,
             h = common.rms_norm(x, p["ln1"], cfg.norm_eps)
             y, pools[i] = attention.paged_prefill_attention(
                 p["attn"], cfg, h, pools[i], pt_row, slot, start + c0,
-                positions, _rope_theta(cfg, kind))
+                positions, _rope_theta(cfg, kind), use_pallas=use_pallas)
             x = x + y
             x, _ = _ffn_sublayer(p, cfg, x, i)
     logits = unembed(params, cfg, x)[:, -1]
     lengths = state.lengths.at[slot].set(
         jnp.asarray(start + s_suf, jnp.int32))
     return logits, dataclasses.replace(state, pools=pools, lengths=lengths)
+
+
+def prefill_paged_wave(params, cfg: ModelConfig, state: PagedDecodeState,
+                       tokens, ctx_lens, chunk_lens, *,
+                       use_pallas: bool = False):
+    """ONE batched group-aligned prefill chunk wave across ALL serving
+    slots — the device half of batched multi-request admission.
+
+    tokens [max_slots, C] i32 (padded; dead lanes feed any id); ctx_lens
+    [max_slots] i32 tokens already in the pool per slot (multiples of R;
+    0 for dead lanes); chunk_lens [max_slots] i32 live tokens of this
+    wave's chunk (0 = dead lane — a slot mid-decode, or a request that ran
+    out of chunks while a longer burst member still prefills). Page-table
+    rows of admitted slots must already be set.
+
+    Unlike :func:`prefill_paged` (python chunk loop, static lengths → one
+    retrace per distinct suffix and one device round-trip per *request*),
+    lengths here are **traced**: ONE compiled wave serves every burst
+    composition, and a burst of arrivals costs one device round-trip per
+    chunk wave. Returns (last_logits [max_slots, vocab] — each lane's
+    logits at its final live chunk position, garbage for dead lanes — and
+    the new state). Dead lanes' lengths and residual windows are untouched.
+    """
+    c_len = tokens.shape[1]
+    if c_len % cfg.kv_group_size:
+        raise ValueError(
+            f"wave chunk width ({c_len}) must be a multiple of the quant "
+            f"group size ({cfg.kv_group_size})")
+    kinds = cfg.layer_kinds()
+    pools = list(state.pools)
+    ctx_lens = ctx_lens.astype(jnp.int32)
+    chunk_lens = chunk_lens.astype(jnp.int32)
+    positions = ctx_lens[:, None] + jnp.arange(c_len)[None, :]
+    x = params["embed"][tokens]
+    x = shard_hint(x, "batch", "seq", "d_model")
+    for i, kind in enumerate(kinds):
+        p = layer_params_at(params, cfg, i)
+        if kind not in (ATTN_GLOBAL, ATTN_LOCAL):
+            raise NotImplementedError(f"paged prefill: layer kind {kind!r}")
+        h = common.rms_norm(x, p["ln1"], cfg.norm_eps)
+        y, pools[i] = attention.paged_prefill_wave_attention(
+            p["attn"], cfg, h, pools[i], state.page_table, ctx_lens,
+            chunk_lens, positions, _rope_theta(cfg, kind),
+            use_pallas=use_pallas)
+        x = x + y
+        x, _ = _ffn_sublayer(p, cfg, x, i)
+    logits = unembed(params, cfg, x)                       # [S, C, V]
+    last_idx = jnp.clip(chunk_lens - 1, 0, c_len - 1)
+    last = jnp.take_along_axis(logits, last_idx[:, None, None], axis=1)[:, 0]
+    active = chunk_lens > 0
+    lengths = jnp.where(active, ctx_lens + chunk_lens, state.lengths)
+    return last, dataclasses.replace(state, pools=pools, lengths=lengths)
 
 
 def paged_decode_step(params, cfg: ModelConfig, state: PagedDecodeState,

@@ -63,10 +63,20 @@ class EngineStats:
     prefix_misses: int = 0
     prefix_hit_tokens: int = 0      # prompt tokens served from cached blocks
     prefix_evicted_blocks: int = 0
+    # device round-trips spent admitting requests: dense prefill + adopt
+    # count one each; serial paged prefill one per request; batched
+    # admission one per chunk wave (the number the batched path shrinks)
+    prefill_dispatches: int = 0
     # per-decode-step wall clock (seconds); multi-step horizons contribute
     # their per-step average so percentiles stay per-token-step
     step_wall_times: list = dataclasses.field(default_factory=list,
                                               repr=False)
+    # per-prefill-dispatch wall clock and per-request admission-start →
+    # first-token latency (seconds)
+    prefill_wall_times: list = dataclasses.field(default_factory=list,
+                                                 repr=False)
+    admit_latency_times: list = dataclasses.field(default_factory=list,
+                                                  repr=False)
 
     @property
     def throughput(self) -> float:
@@ -75,18 +85,45 @@ class EngineStats:
     def record_step_wall(self, seconds: float, steps: int = 1) -> None:
         self.step_wall_times.extend([seconds / steps] * steps)
 
-    def _step_percentile(self, q: float) -> float:
-        if not self.step_wall_times:
+    def record_prefill_wall(self, seconds: float) -> None:
+        self.prefill_wall_times.append(seconds)
+
+    def record_admit_latency(self, seconds: float) -> None:
+        self.admit_latency_times.append(seconds)
+
+    @staticmethod
+    def _percentile_ms(values: list, q: float) -> float:
+        if not values:
             return 0.0
-        return float(np.percentile(np.asarray(self.step_wall_times), q) * 1e3)
+        return float(np.percentile(np.asarray(values), q) * 1e3)
 
     @property
     def decode_p50_ms(self) -> float:
-        return self._step_percentile(50)
+        return self._percentile_ms(self.step_wall_times, 50)
 
     @property
     def decode_p95_ms(self) -> float:
-        return self._step_percentile(95)
+        return self._percentile_ms(self.step_wall_times, 95)
+
+    @property
+    def prefill_p50_ms(self) -> float:
+        """Median wall time of one prefill device dispatch (a full request
+        on the serial paths; one chunk wave under batched admission)."""
+        return self._percentile_ms(self.prefill_wall_times, 50)
+
+    @property
+    def prefill_p95_ms(self) -> float:
+        return self._percentile_ms(self.prefill_wall_times, 95)
+
+    @property
+    def admit_p50_ms(self) -> float:
+        """Median admission-start → first-sampled-token latency per
+        request (page-table update + prefill + first sample)."""
+        return self._percentile_ms(self.admit_latency_times, 50)
+
+    @property
+    def admit_p95_ms(self) -> float:
+        return self._percentile_ms(self.admit_latency_times, 95)
 
     @property
     def decode_tokens_per_s(self) -> float:
@@ -161,6 +198,11 @@ class ServeEngine:
         self.stats.prefill_tokens += b * plen
 
         current = self._sample(last_logits)
+        np.asarray(current)  # sync so prefill/admission wall times are real
+        self.stats.record_prefill_wall(time.time() - t0)
+        self.stats.prefill_dispatches += 1
+        for _ in wave:
+            self.stats.record_admit_latency(time.time() - t0)
         alive = np.ones(b, bool)
         decode = self._decode_fn((b, capacity))
         for step in range(max_new):
@@ -226,6 +268,14 @@ class ContinuousEngine:
       prefilling only the suffix. Cached blocks are shared copy-on-write
       (read-only; refcounted) and evicted LRU under pool pressure. Greedy
       outputs are token-identical with the cache on or off.
+    * ``batched_admission`` (implies ``prefill_paged``) prefills every
+      request admissible at a tick **together**, as lock-step chunk waves
+      through one retrace-free jitted dispatch (``prefill_paged_wave`` with
+      traced per-slot context/chunk lengths; the fused ``qprefill_paged``
+      kernel keeps the work per lane proportional to its live context): a
+      burst of arrivals costs one device round-trip per chunk wave instead
+      of one per request. Greedy outputs are token-identical batched or
+      serial, kernel on or off.
 
     Restrictions (v1): attention-only stacks with global (non-windowed)
     attention; see ``repro.cache.paged``.
@@ -236,7 +286,8 @@ class ContinuousEngine:
                  num_blocks: int | None = None, greedy: bool = True,
                  use_pallas: bool = False, seed: int = 0,
                  prefill_paged: bool = False, prefix_cache: bool = False,
-                 prefill_chunk: int | None = None, decode_horizon: int = 1):
+                 prefill_chunk: int | None = None, decode_horizon: int = 1,
+                 batched_admission: bool = False):
         cfg = api.cfg
         self.api = api
         self.params = params
@@ -251,7 +302,10 @@ class ContinuousEngine:
         self.use_pallas = use_pallas
         self.rng = jax.random.PRNGKey(seed)
         self.stats = EngineStats()
-        self.prefill_paged = prefill_paged or prefix_cache
+        # batched admission prefills a burst of arrivals as lock-step chunk
+        # waves straight into pool blocks — it implies the in-pool path
+        self.batched_admission = batched_admission
+        self.prefill_paged = prefill_paged or prefix_cache or batched_admission
         # default chunk = one quant group: finest sharing granularity (any
         # cached prefix of >= R tokens is usable), more chunks per prefill
         self.prefill_chunk = prefill_chunk if prefill_chunk is not None \
@@ -302,8 +356,16 @@ class ContinuousEngine:
         # (suffix length, shared-prefix length) pair — `start` is static so
         # each chunk attends only the live context blocks, not max_pages
         self._prefill = jax.jit(
-            partial(api.prefill_paged, chunk=self.prefill_chunk),
+            partial(api.prefill_paged, chunk=self.prefill_chunk,
+                    use_pallas=use_pallas),
             static_argnums=(4,), donate_argnums=(1,))
+        # batched admission wave: per-slot context/chunk lengths are traced
+        # (the fused prefill kernel is length-aware), so this compiles ONCE
+        # and serves every burst composition — one device round-trip per
+        # chunk wave instead of per request
+        self._wave = jax.jit(
+            partial(api.prefill_paged_wave, use_pallas=use_pallas),
+            donate_argnums=(1,))
 
     # ------------------------------------------------------------- intake
     def submit(self, req: Request) -> None:
@@ -341,31 +403,50 @@ class ContinuousEngine:
     def _try_admit(self) -> None:
         """FIFO admission: fill free slots while the pool has blocks. With
         the prefix cache on, each admission first pins the longest cached
-        prefix so only the suffix needs fresh blocks (and prefill)."""
-        while self._ready:
-            slot = self._free_slot()
-            if slot is None:
-                return
-            req = self._ready[0]
-            shared = self._match_prefix(req) if self.prefix is not None \
-                else []
-            if shared:
-                self.alloc.ref(shared)  # pin before eviction can reap them
-            pages = self._alloc_with_eviction(
-                self._pages_needed(req) - len(shared))
-            if pages is None:
+        prefix so only the suffix needs fresh blocks (and prefill). With
+        ``batched_admission``, every request admissible this tick is
+        reserved first and then prefilled together as lock-step chunk
+        waves (:meth:`_admit_batch`) — one device dispatch per wave for
+        the whole burst instead of one (or more) per request. A burst
+        member that finishes instantly frees its slot; the outer loop
+        re-collects so waiting requests can take it (as the serial path's
+        rolling while-loop does)."""
+        while True:
+            batch: list = []
+            while self._ready:
+                slot = self._free_slot()
+                if slot is None:
+                    break
+                req = self._ready[0]
+                shared = self._match_prefix(req) if self.prefix is not None \
+                    else []
                 if shared:
-                    self.alloc.release(shared)  # unpin; retry next tick
-                return  # head-of-line waits for blocks to free up
-            if self.prefix is not None:
-                if shared:
-                    self.stats.prefix_hits += 1
-                    self.stats.prefix_hit_tokens += \
-                        len(shared) * self.group_size
+                    self.alloc.ref(shared)  # pin before eviction reaps them
+                pages = self._alloc_with_eviction(
+                    self._pages_needed(req) - len(shared))
+                if pages is None:
+                    if shared:
+                        self.alloc.release(shared)  # unpin; retry next tick
+                    break  # head-of-line waits for blocks to free up
+                if self.prefix is not None:
+                    if shared:
+                        self.stats.prefix_hits += 1
+                        self.stats.prefix_hit_tokens += \
+                            len(shared) * self.group_size
+                    else:
+                        self.stats.prefix_misses += 1
+                self._ready.pop(0)
+                if self.batched_admission:
+                    self._slots[slot] = req  # reserve the slot for the burst
+                    batch.append((req, slot, shared + pages, len(shared)))
                 else:
-                    self.stats.prefix_misses += 1
-            self._ready.pop(0)
-            self._admit(req, slot, shared + pages, n_shared=len(shared))
+                    self._admit(req, slot, shared + pages,
+                                n_shared=len(shared))
+            if not batch:
+                return
+            self._admit_batch(batch)
+            if not self._ready:
+                return
 
     def _match_prefix(self, req: Request) -> list[int]:
         """Longest usable cached prefix of this prompt, as block ids.
@@ -396,6 +477,7 @@ class ContinuousEngine:
 
     def _admit(self, req: Request, slot: int, pages: list[int],
                n_shared: int = 0) -> None:
+        t0 = time.time()
         plen = len(req.prompt)
         self._pt[slot, :] = 0
         self._pt[slot, :len(pages)] = pages
@@ -407,14 +489,19 @@ class ContinuousEngine:
             start = n_shared * self.group_size
             toks = jnp.asarray(np.asarray(req.prompt)[None, start:],
                                jnp.int32)
+            ts = time.time()
             last_logits, self.state = self._prefill(
                 self.params, self.state, toks, jnp.int32(slot), start)
+            np.asarray(last_logits)  # sync so the wall time is real
+            self.stats.record_prefill_wall(time.time() - ts)
+            self.stats.prefill_dispatches += 1
             self.stats.prefill_tokens += plen - start
             if self.prefix is not None:
                 # index the full-group chain (shared nodes just touch LRU)
                 self.prefix.insert(req.prompt, pages)
         else:
             toks = jnp.asarray(np.asarray(req.prompt)[None], jnp.int32)
+            ts = time.time()
             last_logits, dense = self.api.prefill(
                 self.params, {"tokens": toks}, self.schedule, capacity=plen,
                 extra_groups=0)
@@ -423,13 +510,73 @@ class ContinuousEngine:
             self.state = self._adopt(
                 self.state, dense.caches, jnp.int32(slot),
                 jnp.asarray(pages[:n_groups], jnp.int32), jnp.int32(plen))
+            np.asarray(last_logits)  # sync so the wall time is real
+            self.stats.record_prefill_wall(time.time() - ts)
+            self.stats.prefill_dispatches += 2  # dense prefill + adopt
 
         self.stats.admitted += 1
         self._slots[slot] = req
         self._slot_pages[slot] = pages
 
         tok = int(self._sample(last_logits)[0])
+        self.stats.record_admit_latency(time.time() - t0)
         self._emit(slot, req, tok)
+
+    def _admit_batch(self, batch: list) -> None:
+        """Admit a burst of reserved requests with chunk-wave batched
+        prefill: one page-table update for the whole burst, then each wave
+        runs every member's next ``prefill_chunk``-token chunk in ONE
+        device dispatch (``prefill_paged_wave`` — traced ragged lengths,
+        dead lanes masked). Device round-trips scale with the longest
+        suffix, not the burst size. ``batch`` holds ``(req, slot, pages,
+        n_shared)`` tuples from :meth:`_try_admit`."""
+        t0 = time.time()
+        r = self.group_size
+        c = self.prefill_chunk
+        for req, slot, pages, _ in batch:
+            self._pt[slot, :] = 0
+            self._pt[slot, :len(pages)] = pages
+        self.state = dataclasses.replace(
+            self.state, page_table=jnp.asarray(self._pt))
+
+        suffixes = [np.asarray(req.prompt)[n_shared * r:]
+                    for req, _, _, n_shared in batch]
+        n_waves = max(-(-len(sfx) // c) for sfx in suffixes)
+        last_logits: dict[int, np.ndarray] = {}
+        for w in range(n_waves):
+            tokens = np.zeros((self.max_batch, c), np.int32)
+            ctx = np.zeros(self.max_batch, np.int32)
+            clen = np.zeros(self.max_batch, np.int32)
+            for (req, slot, _, n_shared), sfx in zip(batch, suffixes):
+                off = w * c
+                if off >= len(sfx):
+                    continue  # out of chunks: dead lane this wave
+                ln = min(c, len(sfx) - off)
+                tokens[slot, :ln] = sfx[off:off + ln]
+                ctx[slot] = n_shared * r + off
+                clen[slot] = ln
+            ts = time.time()
+            logits, self.state = self._wave(
+                self.params, self.state, jnp.asarray(tokens),
+                jnp.asarray(ctx), jnp.asarray(clen))
+            logits = np.asarray(logits)  # host sync: wall time is real
+            self.stats.record_prefill_wall(time.time() - ts)
+            self.stats.prefill_dispatches += 1
+            for (req, slot, _, _), sfx in zip(batch, suffixes):
+                if w == (len(sfx) - 1) // c:  # this member's final wave
+                    last_logits[slot] = logits[slot]
+
+        for (req, slot, pages, n_shared), sfx in zip(batch, suffixes):
+            self.stats.prefill_tokens += len(sfx)
+            if self.prefix is not None:
+                self.prefix.insert(req.prompt, pages)
+            self.stats.admitted += 1
+            self._slot_pages[slot] = pages
+            # sample in admission order so the non-greedy rng stream matches
+            # the serial path's draw order
+            tok = int(self._sample(jnp.asarray(last_logits[slot][None]))[0])
+            self.stats.record_admit_latency(time.time() - t0)
+            self._emit(slot, req, tok)
 
     def _emit(self, slot: int, req: Request, tok: int) -> None:
         """Record one generated token; finish + free the slot on EOS/limit."""

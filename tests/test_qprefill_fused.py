@@ -1,0 +1,428 @@
+"""Fused paged prefill kernel + batched admission: parity and identity suite.
+
+Covers the flash-style ``qprefill_paged`` kernel (packed pool-block context
+streaming + causal fp intra-chunk tile, one normalized launch) against the
+dense gather oracle across ragged context lengths, empty context, trailing
+partial groups, dead lanes, and q-tiling; the masked batched wave write
+against the serial write path (bitwise); and the engine-level guarantees —
+greedy outputs token-identical across kernel on/off × batched/serial
+admission, with batched admission costing fewer device dispatches.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cache.codec import kv_modes
+from repro.cache.paged import PagedKVPool
+from repro.configs.base import ModelConfig
+from repro.core.precision import (MODE_KIVI, MODE_PER_TOKEN, KVTunerSchedule,
+                                  PrecisionPair)
+from repro.kernels.qprefill import pick_block_q, qprefill_paged
+from repro.models.registry import build_model
+from repro.serving.engine import ContinuousEngine, Request
+
+jax.config.update("jax_platform_name", "cpu")
+
+R = 8
+
+
+def _rand(shape, seed=0, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype)
+
+
+def _mk_pool(pair, mode, b, hkv, d, r, n_blocks, seed=0):
+    pp = PrecisionPair(*pair)
+    pool = PagedKVPool.init(n_blocks, b, hkv, d, pp, mode, r,
+                            dtype=jnp.float32)
+    c = pool.codec
+    kc, ks, kz = c.k.encode(_rand((n_blocks, hkv, r, d), seed))
+    vc, vs, vz = c.v.encode(_rand((n_blocks, hkv, r, d), seed + 1))
+    return dataclasses.replace(
+        pool, k_codes=kc, k_scale=ks, k_zero=kz, v_codes=vc, v_scale=vs,
+        v_zero=vz)
+
+
+def _reference(q, pool, pt, n_ctx, k_ch, v_ch, n_chunk, g):
+    """Masked softmax over [gathered ctx ; causal fp chunk] — the oracle.
+    q [S, Hkv, C·G, D] with rows flattened chunk-position-major."""
+    s, hkv, cg, d = q.shape
+    c = k_ch.shape[2]
+    kk, vv = pool.gather_dequant(pt, jnp.float32)
+    kk = jnp.concatenate([kk, k_ch], axis=2)
+    vv = jnp.concatenate([vv, v_ch], axis=2)
+    s_ctx = pt.shape[1] * pool.group_size
+    kidx = jnp.arange(s_ctx + c)
+    qpos = jnp.arange(cg) // g
+    valid = jnp.where(
+        kidx[None, None, :] < s_ctx,
+        kidx[None, None, :] < n_ctx[:, None, None],
+        ((kidx[None, None, :] - s_ctx) <= qpos[None, :, None])
+        & ((kidx[None, None, :] - s_ctx) < n_chunk[:, None, None]))
+    valid = valid[:, None]
+    scores = jnp.einsum("bhgd,bhsd->bhgs", q, kk) / jnp.sqrt(d)
+    scores = jnp.where(valid, scores, -jnp.inf)
+    probs = jnp.where(valid, jax.nn.softmax(scores, -1), 0.0)
+    return jnp.einsum("bhgs,bhsd->bhgd", probs, vv)
+
+
+def _run_kernel(q, pool, pt, n_ctx, k_ch, v_ch, n_chunk, **kw):
+    k_mode, v_mode = kv_modes(pool.mode)
+    return qprefill_paged(
+        q, pool.k_codes, pool.k_scale, pool.k_zero, pool.v_codes,
+        pool.v_scale, pool.v_zero, k_ch, v_ch, pt, n_ctx, n_chunk,
+        k_bits=pool.k_bits, v_bits=pool.v_bits, k_mode=k_mode,
+        v_mode=v_mode, group_size=pool.group_size, interpret=True, **kw)
+
+
+# ============================================================ kernel parity
+@pytest.mark.parametrize("pair,mode", [((8, 8), MODE_PER_TOKEN),
+                                       ((4, 2), MODE_KIVI),
+                                       ((16, 16), MODE_PER_TOKEN)])
+def test_prefill_ragged_ctx_matches_reference(pair, mode):
+    """Mixed live context lengths — full, partial, empty — with ragged
+    chunk occupancy (incl. a trailing partial group and a dead lane), one
+    launch, vs the dense gather oracle."""
+    s, hkv, g, d, r, p, c = 4, 2, 4, 64, 32, 4, 64
+    pool = _mk_pool(pair, mode, s, hkv, d, r, 1 + s * p, seed=7)
+    pt = jnp.arange(1, 1 + s * p, dtype=jnp.int32).reshape(s, p)
+    n_ctx = jnp.asarray([4 * r, 2 * r, 0, r], jnp.int32)
+    n_chunk = jnp.asarray([c, c - 3, 0, 5], jnp.int32)
+    q = _rand((s, hkv, c * g, d), seed=11)
+    k_ch = _rand((s, hkv, c, d), seed=12)
+    v_ch = _rand((s, hkv, c, d), seed=13)
+
+    o = np.asarray(_run_kernel(q, pool, pt, n_ctx, k_ch, v_ch, n_chunk))
+    ref = np.asarray(_reference(q, pool, pt, n_ctx, k_ch, v_ch, n_chunk, g))
+    np.testing.assert_allclose(o[[0, 1, 3]], ref[[0, 1, 3]],
+                               rtol=3e-5, atol=3e-5)
+    # dead lane: nothing attended, exact zeros out
+    np.testing.assert_array_equal(o[2], 0.0)
+
+
+def test_prefill_empty_context_all_slots():
+    """First chunk of every request: zero live context blocks — the grid
+    collapses to the intra-chunk step only."""
+    s, hkv, g, d, r, p, c = 2, 2, 2, 64, 32, 3, 32
+    pool = _mk_pool((4, 4), MODE_PER_TOKEN, s, hkv, d, r, 1 + s * p, seed=3)
+    pt = jnp.arange(1, 1 + s * p, dtype=jnp.int32).reshape(s, p)
+    n_ctx = jnp.zeros((s,), jnp.int32)
+    n_chunk = jnp.asarray([c, c - 7], jnp.int32)
+    q = _rand((s, hkv, c * g, d), seed=5)
+    k_ch = _rand((s, hkv, c, d), seed=6)
+    v_ch = _rand((s, hkv, c, d), seed=7)
+    o = _run_kernel(q, pool, pt, n_ctx, k_ch, v_ch, n_chunk)
+    ref = _reference(q, pool, pt, n_ctx, k_ch, v_ch, n_chunk, g)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_prefill_q_tiling_matches_untiled():
+    """Forcing multiple q tiles (block_q < C·G) must not change anything —
+    each tile carries its own online-softmax state."""
+    s, hkv, g, d, r, p, c = 2, 2, 4, 64, 32, 3, 64
+    pool = _mk_pool((8, 4), MODE_KIVI, s, hkv, d, r, 1 + s * p, seed=9)
+    pt = jnp.arange(1, 1 + s * p, dtype=jnp.int32).reshape(s, p)
+    n_ctx = jnp.asarray([3 * r, r], jnp.int32)
+    n_chunk = jnp.asarray([c, 17], jnp.int32)
+    q = _rand((s, hkv, c * g, d), seed=13)
+    k_ch = _rand((s, hkv, c, d), seed=14)
+    v_ch = _rand((s, hkv, c, d), seed=15)
+    wide = _run_kernel(q, pool, pt, n_ctx, k_ch, v_ch, n_chunk)
+    tiled = _run_kernel(q, pool, pt, n_ctx, k_ch, v_ch, n_chunk, block_q=64)
+    np.testing.assert_allclose(np.asarray(tiled), np.asarray(wide),
+                               rtol=3e-5, atol=3e-5)
+    ref = _reference(q, pool, pt, n_ctx, k_ch, v_ch, n_chunk, g)
+    np.testing.assert_allclose(np.asarray(tiled), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_prefill_ignores_garbage_past_live_ctx():
+    """Page-table entries past a slot's live context must not affect its
+    output (out-of-range grid steps alias the last live block and are
+    compute-skipped) — the work-proportionality safety property."""
+    s, hkv, g, d, r, p, c = 2, 2, 2, 64, 32, 4, 32
+    pool = _mk_pool((4, 4), MODE_PER_TOKEN, s, hkv, d, r, 1 + s * p, seed=31)
+    n_ctx = jnp.asarray([2 * r, r], jnp.int32)
+    n_chunk = jnp.asarray([c, c - 5], jnp.int32)
+    q = _rand((s, hkv, c * g, d), seed=33)
+    k_ch = _rand((s, hkv, c, d), seed=34)
+    v_ch = _rand((s, hkv, c, d), seed=35)
+    pt_a = jnp.asarray([[1, 2, 3, 4], [5, 6, 7, 8]], jnp.int32)
+    pt_b = jnp.asarray([[1, 2, 8, 7], [5, 1, 2, 3]], jnp.int32)  # junk tail
+    o_a = _run_kernel(q, pool, pt_a, n_ctx, k_ch, v_ch, n_chunk)
+    o_b = _run_kernel(q, pool, pt_b, n_ctx, k_ch, v_ch, n_chunk)
+    np.testing.assert_array_equal(np.asarray(o_a), np.asarray(o_b))
+
+
+def test_pick_block_q():
+    assert pick_block_q(256, 256, 4) == 256
+    assert pick_block_q(256, 100, 4) == 64
+    assert pick_block_q(24, 256, 4) == 24
+    assert pick_block_q(8, 2, 4) == 4
+    with pytest.raises(ValueError):
+        pick_block_q(10, 8, 4)
+
+
+# ============================================================== wave writes
+def test_write_wave_matches_serial_writes_bitwise():
+    """The masked batched wave write must produce bitwise the blocks and
+    residuals that the serial write_prefill_groups + write_residual path
+    does, and leave dead lanes untouched."""
+    hkv, d, r, p = 2, 16, 8, 4
+    pool = _mk_pool((4, 2), MODE_KIVI, 3, hkv, d, r, 1 + 3 * p, seed=41)
+    pt = jnp.arange(1, 1 + 3 * p, dtype=jnp.int32).reshape(3, p)
+    c = 2 * r
+    k = _rand((3, hkv, c, d), seed=42)
+    v = _rand((3, hkv, c, d), seed=43)
+    ctx = jnp.asarray([r, 0, 0], jnp.int32)
+    clen = jnp.asarray([c, r + 3, 0], jnp.int32)  # full / partial / dead
+
+    batched = pool.write_wave(k, v, pt, ctx, clen)
+
+    serial = pool
+    # slot 0: ctx 1 group, chunk 2 full groups → blocks pt[0, 1:3]
+    serial = serial.write_prefill_groups(k[0:1], v[0:1], pt[0, 1:3])
+    # slot 1: 1 full group → pt[1, 0:1], 3-token tail → residual
+    serial = serial.write_prefill_groups(k[1:2, :, :r], v[1:2, :, :r],
+                                         pt[1, 0:1])
+    serial = serial.write_residual(jnp.int32(1), k[1:2, :, r:r + 3],
+                                   v[1:2, :, r:r + 3])
+
+    for name in ("k_codes", "k_scale", "k_zero", "v_codes", "v_scale",
+                 "v_zero"):
+        b_arr = np.asarray(getattr(batched, name))
+        s_arr = np.asarray(getattr(serial, name))
+        if b_arr.ndim > 1:  # skip scratch block 0 (write-order dependent)
+            b_arr, s_arr = b_arr[1:], s_arr[1:]
+        np.testing.assert_array_equal(b_arr, s_arr, err_msg=name)
+    np.testing.assert_array_equal(np.asarray(batched.k_res[1, :, :3]),
+                                  np.asarray(serial.k_res[1, :, :3]))
+    # dead lane 2 and untouched tails keep their original residuals
+    np.testing.assert_array_equal(np.asarray(batched.k_res[2]),
+                                  np.asarray(pool.k_res[2]))
+    np.testing.assert_array_equal(np.asarray(batched.v_res[0]),
+                                  np.asarray(pool.v_res[0]))
+
+
+def test_write_wave_rejects_unaligned_chunk():
+    pool = _mk_pool((8, 8), MODE_PER_TOKEN, 2, 2, 16, 8, 9, seed=1)
+    pt = jnp.zeros((2, 4), jnp.int32)
+    bad = _rand((2, 2, 12, 16))  # 12 % 8 != 0
+    with pytest.raises(ValueError, match="multiple"):
+        pool.write_wave(bad, bad, pt, jnp.zeros(2, jnp.int32),
+                        jnp.zeros(2, jnp.int32))
+
+
+def test_prefill_stream_bytes_tracks_live_context():
+    pool = PagedKVPool.init(65, 4, 2, 32, PrecisionPair(4, 4),
+                            MODE_PER_TOKEN, 8)
+    b25 = pool.prefill_stream_bytes([2 * 8] * 4, chunk=16)
+    b50 = pool.prefill_stream_bytes([4 * 8] * 4, chunk=16)
+    b100 = pool.prefill_stream_bytes([8 * 8] * 4, chunk=16)
+    assert b25 < b50 < b100
+    # a zero-context slot still counts one aliased block + its chunk tile
+    assert pool.prefill_stream_bytes([0] * 4, chunk=16) \
+        == pool.prefill_stream_bytes([8] * 4, chunk=16)
+    # every q tile re-streams the context and chunk tiles
+    assert pool.prefill_stream_bytes([4 * 8] * 4, chunk=16, q_tiles=2) \
+        == 2 * b50
+
+
+# ==================================================== decode ref clamping
+def test_decode_reference_clamps_gather_to_live_pages():
+    """Eager (concrete-length) calls of the XLA paged decode path gather
+    only the batch's live pages; output must match the jitted full-width
+    gather."""
+    from repro.models import attention
+
+    cfg = ModelConfig(name="clamp-tiny", family="dense", num_layers=1,
+                      d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+                      vocab_size=61, q_chunk=16, kv_group_size=R)
+    from repro.models.transformer import layer_params_at
+
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    p = layer_params_at(params, cfg, 0)
+
+    pool = _mk_pool((8, 4), MODE_KIVI, 2, 2, cfg.head_dim, R, 17, seed=51)
+    pt = jnp.arange(1, 17, dtype=jnp.int32).reshape(2, 8)
+    lengths = jnp.asarray([2 * R, R + 3], jnp.int32)  # max 2 live pages of 8
+    alive = jnp.asarray([True, True])
+    x = _rand((2, 1, cfg.d_model), seed=52)
+
+    out_eager, _ = attention.paged_decode_attention(
+        p["attn"], cfg, x, pool, pt, lengths, alive, cfg.rope_theta)
+    jitted = jax.jit(lambda x_, pool_, pt_, ln, al: attention.
+                     paged_decode_attention(p["attn"], cfg, x_, pool_, pt_,
+                                            ln, al, cfg.rope_theta))
+    out_full, _ = jitted(x, pool, pt, lengths, alive)
+    np.testing.assert_allclose(np.asarray(out_eager), np.asarray(out_full),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ========================================================= engine identity
+@pytest.fixture(scope="module")
+def tiny_api():
+    cfg = ModelConfig(name="qprefill-tiny", family="dense", num_layers=2,
+                      d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+                      vocab_size=61, q_chunk=16, kv_group_size=R)
+    return build_model(cfg)
+
+
+@pytest.fixture(scope="module")
+def tiny_params(tiny_api):
+    return tiny_api.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def sched():
+    return KVTunerSchedule.uniform(2, PrecisionPair(8, 4))
+
+
+def _engine_outputs(api, params, sched, prompts, max_new=5, arrivals=None,
+                    **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_seq", 48)
+    kw.setdefault("prefill_paged", True)
+    eng = ContinuousEngine(api, params, sched, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=np.asarray(p), max_new_tokens=max_new,
+                           arrival_step=0 if arrivals is None else arrivals[i]))
+    done = sorted(eng.run(), key=lambda r: r.uid)
+    return [r.output for r in done], eng
+
+
+def test_batched_vs_serial_admission_identity(tiny_api, tiny_params, sched):
+    """4-request burst with ragged prompt lengths: greedy outputs must be
+    token-identical across kernel on/off × batched/serial admission, and
+    batched admission must cost fewer prefill dispatches."""
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, 61, n) for n in (12, 7, 19, 9)]
+    base, ref_eng = _engine_outputs(tiny_api, tiny_params, sched, prompts)
+    assert ref_eng.stats.prefill_dispatches == 4  # serial: one per request
+    for kw in ({"use_pallas": True},
+               {"batched_admission": True},
+               {"batched_admission": True, "use_pallas": True}):
+        out, eng = _engine_outputs(tiny_api, tiny_params, sched, prompts,
+                                   **kw)
+        assert out == base, kw
+        assert eng.alloc.free_blocks == eng.num_blocks - 1
+        if kw.get("batched_admission"):
+            # longest suffix 19 tokens, chunk R=8 → 3 waves for the burst
+            assert eng.stats.prefill_dispatches == 3
+
+
+def test_batched_admission_single_wave_burst(tiny_api, tiny_params, sched):
+    """Prompts that fit one chunk: the whole burst admits in ONE dispatch
+    (>= 4x fewer than serial)."""
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, 61, 12) for _ in range(4)]
+    _, serial = _engine_outputs(tiny_api, tiny_params, sched, prompts,
+                                prefill_chunk=2 * R)
+    _, batched = _engine_outputs(tiny_api, tiny_params, sched, prompts,
+                                 prefill_chunk=2 * R,
+                                 batched_admission=True)
+    assert serial.stats.prefill_dispatches == 4
+    assert batched.stats.prefill_dispatches == 1
+
+
+def test_batched_admission_with_arrivals(tiny_api, tiny_params, sched):
+    """Requests arriving at different steps form bursts per sync point;
+    outputs stay identical to the serial engine."""
+    rng = np.random.default_rng(8)
+    prompts = [rng.integers(0, 61, n) for n in (8, 8, 16, 10)]
+    arrivals = [0, 0, 3, 3]
+    ref, _ = _engine_outputs(tiny_api, tiny_params, sched, prompts,
+                             arrivals=arrivals)
+    out, eng = _engine_outputs(tiny_api, tiny_params, sched, prompts,
+                               arrivals=arrivals, batched_admission=True,
+                               use_pallas=True)
+    assert out == ref
+    assert eng.alloc.free_blocks == eng.num_blocks - 1
+
+
+def test_batched_admission_with_slot_contention(tiny_api, tiny_params,
+                                                sched):
+    """More requests than slots: later admissions join bursts mid-decode
+    (live decode lanes ride through the wave masked); outputs identical."""
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, 61, n) for n in (9, 14, 11, 7, 12)]
+    ref, _ = _engine_outputs(tiny_api, tiny_params, sched, prompts,
+                             max_batch=2)
+    out, eng = _engine_outputs(tiny_api, tiny_params, sched, prompts,
+                               max_batch=2, batched_admission=True,
+                               use_pallas=True)
+    assert out == ref
+    assert eng.alloc.free_blocks == eng.num_blocks - 1
+
+
+def test_prefix_cache_identity_with_kernel(tiny_api, tiny_params, sched):
+    """Prefix-cached serving stays token-identical with the fused prefill
+    kernel on or off (and still hits the cache)."""
+    rng = np.random.default_rng(10)
+    tpl = rng.integers(0, 61, 16)
+    prompts = [np.concatenate([tpl, rng.integers(0, 61, 4 + i)])
+               for i in range(4)]
+    # max_batch=2: admissions span several ticks, so later bursts can hit
+    # prefixes inserted by earlier ones (same-burst members never share —
+    # the tree is updated at burst end)
+    base, _ = _engine_outputs(tiny_api, tiny_params, sched, prompts,
+                              prefill_chunk=2 * R, max_batch=2)
+    for kw in ({"prefix_cache": True},
+               {"prefix_cache": True, "use_pallas": True},
+               {"prefix_cache": True, "use_pallas": True,
+                "batched_admission": True}):
+        out, eng = _engine_outputs(tiny_api, tiny_params, sched, prompts,
+                                   prefill_chunk=2 * R, max_batch=2, **kw)
+        assert out == base, kw
+        assert eng.stats.prefix_hits > 0
+
+
+def test_horizon_composes_with_batched_admission(tiny_api, tiny_params,
+                                                 sched):
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, 61, n) for n in (10, 13, 9)]
+    ref, _ = _engine_outputs(tiny_api, tiny_params, sched, prompts)
+    out, _ = _engine_outputs(tiny_api, tiny_params, sched, prompts,
+                             batched_admission=True, decode_horizon=3,
+                             use_pallas=True)
+    assert out == ref
+
+
+def test_batched_admission_instant_finish_frees_slot(tiny_api, tiny_params,
+                                                     sched):
+    """max_new_tokens=1: every burst member finishes at admission. The
+    freed slot must be re-collected for waiting requests instead of
+    stalling (the serial path's rolling loop behavior)."""
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, 61, 9) for _ in range(3)]
+    ref, _ = _engine_outputs(tiny_api, tiny_params, sched, prompts,
+                             max_new=1, max_batch=1)
+    out, eng = _engine_outputs(tiny_api, tiny_params, sched, prompts,
+                               max_new=1, max_batch=1,
+                               batched_admission=True)
+    assert out == ref and all(len(o) == 1 for o in out)
+    assert eng.alloc.free_blocks == eng.num_blocks - 1
+
+
+def test_batched_admission_implies_prefill_paged(tiny_api, tiny_params,
+                                                 sched):
+    eng = ContinuousEngine(tiny_api, tiny_params, sched,
+                           batched_admission=True)
+    assert eng.prefill_paged
+
+
+def test_prefill_stats_populated(tiny_api, tiny_params, sched):
+    rng = np.random.default_rng(12)
+    prompts = [rng.integers(0, 61, 10) for _ in range(3)]
+    _, eng = _engine_outputs(tiny_api, tiny_params, sched, prompts,
+                             batched_admission=True)
+    st = eng.stats
+    assert st.prefill_dispatches > 0
+    assert len(st.prefill_wall_times) == st.prefill_dispatches
+    assert len(st.admit_latency_times) == st.admitted == 3
+    assert st.prefill_p95_ms >= st.prefill_p50_ms > 0.0
+    assert st.admit_p95_ms >= st.admit_p50_ms > 0.0
