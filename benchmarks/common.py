@@ -89,3 +89,51 @@ def get_bench_model(train_steps: int = TRAIN_STEPS,
 
 def ppl_from_nll(nll: float) -> float:
     return float(np.exp(min(nll, 30.0)))
+
+
+# ------------------------------------------------------- serving workloads
+# Every serving benchmark builds its request stream through these helpers
+# with an EXPLICIT seed (no module-level RNG state anywhere on the path), so
+# a (seed, shape) pair pins the workload bit-for-bit across table8 / table11
+# / table12 runs and CI reruns.
+
+def tiny_serving_ctx(name: str):
+    """Milliseconds-scale random-weight model context for CI smoke runs of
+    the serving benchmarks (table11/table12 ``--tiny``) — scheduling, tier,
+    and token-identity behavior do not depend on trained weights."""
+    import jax
+
+    @dataclasses.dataclass
+    class TinyCtx:
+        api: ModelApi
+        params: dict
+
+    cfg = ModelConfig(name=name, family="dense", num_layers=2, d_model=32,
+                      num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=61,
+                      q_chunk=16, kv_group_size=8)
+    api = build_model(cfg)
+    return TinyCtx(api=api, params=api.init(jax.random.PRNGKey(0)))
+
+
+def poisson_arrivals(n: int, rate: float,
+                     rng: np.random.Generator) -> list[int]:
+    """Cumulative Poisson inter-arrival offsets in decode-step units; the
+    first request arrives at step 0."""
+    if n <= 0:
+        return []
+    return np.concatenate(
+        [[0], np.cumsum(rng.poisson(rate, n - 1))]).tolist()
+
+
+def shared_template_prompts(vocab: int, n_templates: int, per_template: int,
+                            template_len: int, suffix_len: int,
+                            rng: np.random.Generator) -> list[np.ndarray]:
+    """Template-interleaved shared-prefix prompts: request ``i`` uses
+    template ``i % n_templates`` plus a fresh random suffix — the traffic
+    shape where prefix caching (and, under pool pressure, host-tier spills)
+    matters."""
+    templates = [rng.integers(0, vocab, template_len)
+                 for _ in range(n_templates)]
+    return [np.concatenate([templates[i % n_templates],
+                            rng.integers(0, vocab, suffix_len)])
+            for i in range(n_templates * per_template)]

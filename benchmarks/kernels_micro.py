@@ -242,7 +242,7 @@ def run_prefill(ctx=None, max_slots: int = 4, max_pages: int = 32,
 
 
 def _admission_burst(n_requests: int = 4, prompt_len: int = 12,
-                     max_new: int = 4) -> dict:
+                     max_new: int = 4, seed: int = 0) -> dict:
     """4-request burst through a tiny engine: batched vs serial admission
     × prefill kernel on/off. Prompts fit one prefill chunk, so the batched
     path admits the whole burst in ONE wave dispatch where the serial path
@@ -261,7 +261,7 @@ def _admission_burst(n_requests: int = 4, prompt_len: int = 12,
     api = build_model(cfg)
     params = api.init(_jax.random.PRNGKey(0))
     sched = KVTunerSchedule.uniform(2, PrecisionPair(8, 4))
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
     prompts = [rng.integers(0, cfg.vocab_size, prompt_len)
                for _ in range(n_requests)]
 

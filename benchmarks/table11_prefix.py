@@ -29,17 +29,15 @@ def build_workload(vocab: int, n_templates: int, per_template: int,
                    template_len: int, suffix_len: int, seed: int = 0,
                    arrival_rate: float = 1.5):
     """(prompts, arrival_steps): per-template shared prefixes + random
-    suffixes, interleaved across templates, Poisson inter-arrivals."""
+    suffixes, interleaved across templates, Poisson inter-arrivals. The
+    explicit ``seed`` pins the workload bit-for-bit (shared helpers in
+    ``benchmarks.common`` — no module-level RNG state)."""
+    from benchmarks.common import poisson_arrivals, shared_template_prompts
+
     rng = np.random.default_rng(seed)
-    templates = [rng.integers(0, vocab, template_len)
-                 for _ in range(n_templates)]
-    prompts = [np.concatenate([templates[i % n_templates],
-                               rng.integers(0, vocab, suffix_len)])
-               for i in range(n_templates * per_template)]
-    n = len(prompts)
-    arrivals = np.concatenate([[0], np.cumsum(rng.poisson(arrival_rate,
-                                                          n - 1))])
-    return prompts, arrivals.tolist()
+    prompts = shared_template_prompts(vocab, n_templates, per_template,
+                                      template_len, suffix_len, rng)
+    return prompts, poisson_arrivals(len(prompts), arrival_rate, rng)
 
 
 def run(ctx, n_templates: int = 3, per_template: int = 4,
@@ -62,7 +60,8 @@ def run(ctx, n_templates: int = 3, per_template: int = 4,
     for on in (False, True):
         eng = ContinuousEngine(
             ctx.api, ctx.params, sched, max_batch=max_batch, max_seq=max_seq,
-            prefill_paged=True, prefix_cache=on, prefill_chunk=prefill_chunk)
+            prefill_paged=True, prefix_cache=on, prefill_chunk=prefill_chunk,
+            seed=seed)
         for i, p in enumerate(prompts):
             eng.submit(Request(uid=i, prompt=p, max_new_tokens=max_new,
                                arrival_step=arrivals[i]))
@@ -86,7 +85,9 @@ def run(ctx, n_templates: int = 3, per_template: int = 4,
                        "admit_p50_ms": off.admit_p50_ms,
                        "admit_p95_ms": off.admit_p95_ms,
                        "prefill_dispatches": off.prefill_dispatches,
-                       "decode_steps": off.decode_steps},
+                       "decode_steps": off.decode_steps,
+                       "pool_utilization": off.pool_utilization,
+                       "pool_high_watermark": off.pool_high_watermark},
         "prefix_on": {"prefill_tokens": on.prefill_tokens,
                       "tokens_per_s": on.throughput,
                       "decode_tokens_per_s": on.decode_tokens_per_s,
@@ -98,6 +99,8 @@ def run(ctx, n_templates: int = 3, per_template: int = 4,
                       "admit_p95_ms": on.admit_p95_ms,
                       "prefill_dispatches": on.prefill_dispatches,
                       "decode_steps": on.decode_steps,
+                      "pool_utilization": on.pool_utilization,
+                      "pool_high_watermark": on.pool_high_watermark,
                       "hits": on.prefix_hits, "misses": on.prefix_misses,
                       "hit_tokens": on.prefix_hit_tokens,
                       "evicted_blocks": on.prefix_evicted_blocks},
@@ -120,27 +123,6 @@ def check_paper_claims(result: dict) -> dict[str, bool]:
     }
 
 
-def _tiny_ctx():
-    """Milliseconds-scale random model for the CI smoke run."""
-    import dataclasses
-
-    import jax
-
-    from repro.configs.base import ModelConfig
-    from repro.models.registry import build_model
-
-    @dataclasses.dataclass
-    class TinyCtx:
-        api: object
-        params: dict
-
-    cfg = ModelConfig(name="t11-tiny", family="dense", num_layers=2,
-                      d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
-                      vocab_size=61, q_chunk=16, kv_group_size=8)
-    api = build_model(cfg)
-    return TinyCtx(api=api, params=api.init(jax.random.PRNGKey(0)))
-
-
 def main() -> None:
     import argparse
     import json
@@ -151,7 +133,8 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.tiny:
-        ctx = _tiny_ctx()
+        from benchmarks.common import tiny_serving_ctx
+        ctx = tiny_serving_ctx("t11-tiny")
         result = run(ctx, n_templates=2, per_template=3, template_len=16,
                      suffix_len=5, max_new=4, max_batch=2,
                      sched=KVTunerSchedule.uniform(2, PrecisionPair(8, 4)),

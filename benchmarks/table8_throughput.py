@@ -52,10 +52,10 @@ def projected_gain(cfg, schedule, baseline_sched, attn_fraction=0.45) -> float:
 
 
 def run(ctx, n_prompts: int = 8, prompt_len: int = 48,
-        max_new: int = 16) -> dict:
+        max_new: int = 16, seed: int = 0) -> dict:
     cfg = ctx.api.cfg
     n_attn = len(cfg.attention_layers())
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
     prompts = rng.integers(0, cfg.vocab_size, size=(n_prompts, prompt_len))
 
     schedules = {
@@ -90,21 +90,23 @@ def run_engines(ctx, n_requests: int = 10, max_new: int = 8,
     decode-step units (the continuous engine admits mid-decode; the wave
     engine only sees the queue after all requests have arrived — it has no
     streaming admission at all, which is the point)."""
+    from benchmarks.common import poisson_arrivals
+
     cfg = ctx.api.cfg
     sched = default_schedule(cfg, "kvtuner")
     rng = np.random.default_rng(seed)
     plens = rng.choice([32, 48, 64], size=n_requests)
-    arrivals = np.concatenate([[0], np.cumsum(rng.poisson(1.5,
-                                                          n_requests - 1))])
+    arrivals = poisson_arrivals(n_requests, 1.5, rng)
     prompts = [rng.integers(0, cfg.vocab_size, int(n)) for n in plens]
 
-    wave = ServeEngine(ctx.api, ctx.params, sched, max_batch=max_batch)
+    wave = ServeEngine(ctx.api, ctx.params, sched, max_batch=max_batch,
+                       seed=seed)
     for i, p in enumerate(prompts):
         wave.submit(Request(uid=i, prompt=p, max_new_tokens=max_new))
     wave_done = sorted(wave.run(), key=lambda r: r.uid)
 
     cont = ContinuousEngine(ctx.api, ctx.params, sched, max_batch=max_batch,
-                            max_seq=int(plens.max()) + max_new)
+                            max_seq=int(plens.max()) + max_new, seed=seed)
     for i, p in enumerate(prompts):
         cont.submit(Request(uid=i, prompt=p, max_new_tokens=max_new,
                             arrival_step=int(arrivals[i])))
@@ -112,8 +114,8 @@ def run_engines(ctx, n_requests: int = 10, max_new: int = 8,
 
     return {
         "workload": {"n_requests": n_requests, "max_new": max_new,
-                     "prompt_lens": plens.tolist(),
-                     "arrival_steps": arrivals.tolist()},
+                     "seed": seed, "prompt_lens": plens.tolist(),
+                     "arrival_steps": list(arrivals)},
         "wave": {"tokens_per_s": wave.stats.throughput,
                  "decode_tokens_per_s": wave.stats.decode_tokens_per_s,
                  "decode_steps": wave.stats.decode_steps,
@@ -136,6 +138,9 @@ def run_engines(ctx, n_requests: int = 10, max_new: int = 8,
                        "admit_p50_ms": cont.stats.admit_p50_ms,
                        "admit_p95_ms": cont.stats.admit_p95_ms,
                        "prefill_dispatches": cont.stats.prefill_dispatches,
+                       "pool_utilization": cont.stats.pool_utilization,
+                       "pool_high_watermark":
+                           cont.stats.pool_high_watermark,
                        "decode_compilations": cont.decode_compilations},
         "outputs_identical": all(
             w.output == c.output for w, c in zip(wave_done, cont_done)),

@@ -66,19 +66,47 @@ def main():
               f"throughput={eng.stats.throughput:7.1f} tok/s (CPU)")
 
     # continuous batching: the same requests as a ragged mixed-length stream
-    # (no truncation to a common prompt length, one decode compilation)
+    # (no truncation to a common prompt length, one decode compilation).
+    # prefix_cache implies chunked in-pool prefill — the same admission path
+    # the overload demo below uses, so their outputs are comparable
     sched = default_schedule(cfg, "kvtuner")
     eng = ContinuousEngine(ctx.api, ctx.params, sched, max_batch=4,
-                           max_seq=max(len(p) for p in ragged) + 4)
+                           max_seq=max(len(p) for p in ragged) + 4,
+                           prefix_cache=True)
     for i, p in enumerate(ragged):
         eng.submit(Request(uid=i, prompt=p, max_new_tokens=4,
-                           arrival_step=2 * i))
+                           arrival_step=i))
     done = sorted(eng.run(), key=lambda r: r.uid)
     correct = sum(r.output[0] == a for r, a in zip(done, answers))
     print(f"\ncontinuous (paged pool)    bits={sched.equivalent_bits:5.2f} "
           f"answer-acc={correct}/{len(done)} "
           f"throughput={eng.stats.throughput:7.1f} tok/s (CPU) "
           f"decode-compiles={eng.decode_compilations}")
+
+    # overload: the same stream through a pool deliberately too small for
+    # the peak live context, with a host-RAM tier and the preemptive
+    # priority scheduler — evicted prefixes spill to host instead of being
+    # dropped, later arrivals preempt lower-priority victims (parked
+    # bitwise, resumed token-identically), and every request still finishes
+    r = cfg.kv_group_size
+    max_seq = max(len(p) for p in ragged) + 4
+    pages_per_req = max_seq // r + 1
+    eng2 = ContinuousEngine(ctx.api, ctx.params, sched, max_batch=2,
+                            max_seq=max_seq, prefix_cache=True,
+                            num_blocks=1 + 2 * pages_per_req,  # ~2 live reqs
+                            host_blocks=8 * pages_per_req,
+                            scheduler="priority")
+    for i, p in enumerate(ragged):
+        eng2.submit(Request(uid=i, prompt=p, max_new_tokens=4,
+                            arrival_step=i, priority=i))
+    done2 = sorted(eng2.run(), key=lambda r_: r_.uid)
+    s = eng2.stats
+    assert [r_.output for r_ in done2] == [r_.output for r_ in done], \
+        "tiered serving must be token-identical to the unconstrained pool"
+    print(f"overloaded + host tier     outputs identical: True  "
+          f"preemptions={s.preemptions} swap_out={s.swap_out_blocks} "
+          f"swap_in={s.swap_in_blocks} host-prefix-hits={s.host_prefix_hits} "
+          f"pool-peak={s.pool_high_watermark:.0%}")
 
 
 if __name__ == "__main__":

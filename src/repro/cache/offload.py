@@ -1,0 +1,228 @@
+"""Host-RAM tier for the paged quantized KV pool.
+
+KVTuner's 4-8x cache compression is exactly what makes host<->device block
+migration affordable: a swapped block moves *packed* codes + scales, not
+bf16 KV, so offloading rides the same mixed-precision schedule the decode
+kernels consume. This module holds the host side of the tier hierarchy
+
+    device pool  ->  host block store  ->  recompute from prompt
+
+* :func:`extract_blocks` / :func:`scatter_blocks` move packed blocks between
+  the per-layer device pools and host numpy in ONE batched ``device_get`` /
+  ``device_put`` per call (all layers, all blocks together), bitwise exact —
+  a swapped-out block swapped back in dequantizes to identical values.
+* :class:`HostBlockStore` is the refcounted host-side container: evicted
+  radix-tree prefixes spill here instead of being dropped, and preempted
+  requests park their exclusively-owned blocks here until resume. Handles
+  are reference-counted exactly like device blocks in ``BlockAllocator``
+  (the tree and a parked request may both point at host bytes), and freeing
+  an unheld handle raises instead of corrupting the store.
+
+All movement happens host-side between jitted steps — device code never
+sees the host tier, so the single-compile decode step is untouched.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+#: per-layer payload of one packed block:
+#: (k_codes, k_scale, k_zero, v_codes, v_scale, v_zero); scale/zero are
+#: ``None`` for unquantized (bits >= 16) segments, whose pool arrays are
+#: shared ``(1,)`` dummies that never move.
+LayerBlock = tuple
+
+
+def _live_pools(pools) -> list:
+    return [p for p in pools if p is not None]
+
+
+def extract_blocks(pools, bids) -> list[list[LayerBlock]]:
+    """Copy packed blocks ``bids`` of every layer pool to host numpy with ONE
+    batched ``device_get``. Returns one payload per block id: a list over
+    attention layers of :data:`LayerBlock` tuples (layer order = the order of
+    non-``None`` entries in ``pools``)."""
+    import jax.numpy as jnp
+
+    idx = jnp.asarray(list(bids), jnp.int32)
+    batched = []
+    for p in _live_pools(pools):
+        sides = []
+        for codes, scale, zero, seg in (
+                (p.k_codes, p.k_scale, p.k_zero, p.codec.k),
+                (p.v_codes, p.v_scale, p.v_zero, p.codec.v)):
+            if seg.quantized:
+                sides.append((codes[idx], scale[idx], zero[idx]))
+            else:
+                sides.append((codes[idx], None, None))
+        batched.append(tuple(sides[0]) + tuple(sides[1]))
+    host = jax.device_get(batched)   # ONE transfer batch for all layers
+    n = len(bids)
+    return [[tuple(None if a is None else np.asarray(a[i]) for a in layer)
+             for layer in host] for i in range(n)]
+
+
+def _scatter_blocks_jit(live, stacked, idx):
+    """Jitted body of :func:`scatter_blocks`: ``live`` (the non-``None``
+    pools) is DONATED, so the updates land in place instead of holding
+    old+new copies of every pool array — the pool is sized to fill HBM, so
+    a transient double residency per swap event would OOM exactly the
+    deployments the host tier exists for. Retraces once per distinct
+    swapped-block count (swap-event admission cost, like any prefill)."""
+    import dataclasses
+
+    out = []
+    for p, (kc, ks, kz, vc, vs, vz) in zip(live, stacked):
+        rep = dict(k_codes=p.k_codes.at[idx].set(kc),
+                   v_codes=p.v_codes.at[idx].set(vc))
+        if ks is not None:
+            rep.update(k_scale=p.k_scale.at[idx].set(ks),
+                       k_zero=p.k_zero.at[idx].set(kz))
+        if vs is not None:
+            rep.update(v_scale=p.v_scale.at[idx].set(vs),
+                       v_zero=p.v_zero.at[idx].set(vz))
+        out.append(dataclasses.replace(p, **rep))
+    return out
+
+
+_scatter_blocks_call = jax.jit(_scatter_blocks_jit, donate_argnums=(0,))
+
+
+def scatter_blocks(pools, payloads: list[list[LayerBlock]], dst_bids):
+    """Write host payloads into device blocks ``dst_bids`` (one batched
+    transfer of the stacked arrays, then one donating jitted scatter over
+    all layers). Returns the new pools list; bitwise the inverse of
+    :func:`extract_blocks`. The input pools' buffers are consumed (donated)
+    — callers must drop their old references, as the engine does when it
+    rebinds ``state.pools``."""
+    import jax.numpy as jnp
+
+    if not payloads:
+        return list(pools)
+    if len(payloads) != len(dst_bids):
+        raise ValueError(f"{len(payloads)} payloads for {len(dst_bids)} "
+                         "destination blocks")
+    idx = jnp.asarray(list(dst_bids), jnp.int32)
+    live = _live_pools(pools)
+    stacked = [tuple(None if payloads[0][li][f] is None
+                     else np.stack([pl[li][f] for pl in payloads])
+                     for f in range(6)) for li in range(len(live))]
+    new_live = iter(_scatter_blocks_call(live, stacked, idx))
+    return [None if p is None else next(new_live) for p in pools]
+
+
+def extract_residual(pools, slot: int) -> list[tuple]:
+    """Copy one slot's per-layer (k_res, v_res) rows to host (one batched
+    ``device_get``) — the partial-group window a preempted request must carry
+    to its new slot."""
+    rows = [(p.k_res[slot], p.v_res[slot]) for p in _live_pools(pools)]
+    return [tuple(np.asarray(a) for a in rw) for rw in jax.device_get(rows)]
+
+
+def _scatter_residual_jit(live, rows, slot):
+    import dataclasses
+
+    return [dataclasses.replace(p, k_res=p.k_res.at[slot].set(kr),
+                                v_res=p.v_res.at[slot].set(vr))
+            for p, (kr, vr) in zip(live, rows)]
+
+
+_scatter_residual_call = jax.jit(_scatter_residual_jit, donate_argnums=(0,))
+
+
+def scatter_residual(pools, rows: list[tuple], slot: int):
+    """Restore per-layer residual rows at ``slot``; inverse of
+    :func:`extract_residual`. Donating (see :func:`scatter_blocks`)."""
+    import jax.numpy as jnp
+
+    new_live = iter(_scatter_residual_call(
+        _live_pools(pools), rows, jnp.asarray(slot, jnp.int32)))
+    return [None if p is None else next(new_live) for p in pools]
+
+
+class HostBlockStore:
+    """Refcounted host-RAM store of packed quantized KV blocks.
+
+    A *handle* names one logical block's bytes across every layer (mirroring
+    how one device block id spans all layer pools). ``capacity`` bounds the
+    number of resident blocks — the knob that sizes the host tier the way
+    ``num_blocks`` sizes the device pool. Handles are reference-counted:
+    the radix tree holds one reference on spilled prefix blocks, a parked
+    request holds one on its swapped-out blocks, and the payload is freed
+    when the last reference drops.
+    """
+
+    def __init__(self, capacity: int):
+        if capacity < 0:
+            raise ValueError(f"host store capacity must be >= 0, "
+                             f"got {capacity}")
+        self.capacity = capacity
+        self._store: dict[int, list[LayerBlock]] = {}
+        self._refs: dict[int, int] = {}
+        self._next = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    @property
+    def free_slots(self) -> int:
+        return self.capacity - len(self._store)
+
+    def stored_bytes(self) -> int:
+        total = 0
+        for payload in self._store.values():
+            for layer in payload:
+                total += sum(a.nbytes for a in layer if a is not None)
+        return total
+
+    # ---------------------------------------------------------------- swap
+    def put_blocks(self, pools, bids) -> list[int] | None:
+        """Swap packed device blocks ``bids`` out to the host tier (one
+        batched transfer). Returns one handle per block at refcount 1, or
+        ``None`` without copying anything when capacity cannot hold them —
+        the caller then falls back to dropping (prefix spill) or recompute
+        (preemption)."""
+        bids = list(bids)
+        if len(bids) > self.free_slots:
+            return None
+        if not bids:
+            return []
+        payloads = extract_blocks(pools, bids)
+        handles = []
+        for pl in payloads:
+            h = self._next
+            self._next += 1
+            self._store[h] = pl
+            self._refs[h] = 1
+            handles.append(h)
+        return handles
+
+    def take_to_device(self, pools, handles, dst_bids) -> list:
+        """Swap host blocks back into device blocks ``dst_bids`` (one batched
+        transfer); returns the new pools. Handles stay resident (and
+        referenced) — the caller releases them once the swap-in is final."""
+        payloads = [self._payload(h) for h in handles]
+        return scatter_blocks(pools, payloads, dst_bids)
+
+    # ------------------------------------------------------------ refcounts
+    def refcount(self, handle: int) -> int:
+        return self._refs.get(handle, 0)
+
+    def ref(self, handles) -> None:
+        for h in handles:
+            self._payload(h)
+            self._refs[h] += 1
+
+    def release(self, handles) -> None:
+        for h in handles:
+            self._payload(h)
+            self._refs[h] -= 1
+            if self._refs[h] == 0:
+                del self._store[h]
+                del self._refs[h]
+
+    def _payload(self, handle: int) -> list[LayerBlock]:
+        pl = self._store.get(handle)
+        if pl is None:
+            raise ValueError(f"bad or freed host block handle {handle}")
+        return pl

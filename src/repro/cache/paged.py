@@ -433,13 +433,42 @@ class BlockAllocator:
         self.num_blocks = num_blocks
         self._free = list(range(num_blocks - 1, 0, -1))
         self._refs = [0] * num_blocks
+        self.high_watermark = 0
 
     @property
     def free_blocks(self) -> int:
         return len(self._free)
 
+    @property
+    def allocated_blocks(self) -> int:
+        return self.num_blocks - 1 - len(self._free)
+
+    @property
+    def utilization(self) -> float:
+        """Allocated fraction of the usable pool (scratch block excluded)."""
+        return self.allocated_blocks / max(self.num_blocks - 1, 1)
+
     def refcount(self, block: int) -> int:
         return self._refs[block]
+
+    def assert_consistent(self) -> None:
+        """Leak/corruption check: every usable block is either on the free
+        list at refcount 0 or off it at refcount > 0, with no duplicates.
+        Cheap enough to run after every serve loop in tests."""
+        free = set(self._free)
+        if len(free) != len(self._free):
+            raise AssertionError("free list holds duplicate block ids")
+        if not free.isdisjoint({0}) or any(not 0 < b < self.num_blocks
+                                           for b in free):
+            raise AssertionError("free list holds out-of-range block ids")
+        for b in range(1, self.num_blocks):
+            if b in free and self._refs[b] != 0:
+                raise AssertionError(
+                    f"block {b} is free but has refcount {self._refs[b]}")
+            if b not in free and self._refs[b] <= 0:
+                raise AssertionError(
+                    f"block {b} leaked: refcount {self._refs[b]}, "
+                    "not on the free list")
 
     def alloc(self, n: int) -> list[int] | None:
         """n block ids at refcount 1, or None if the pool can't satisfy."""
@@ -451,6 +480,7 @@ class BlockAllocator:
         del self._free[len(self._free) - n:]
         for b in taken:
             self._refs[b] = 1
+        self.high_watermark = max(self.high_watermark, self.allocated_blocks)
         return taken
 
     def ref(self, blocks) -> None:

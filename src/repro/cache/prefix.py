@@ -21,9 +21,18 @@ allocates fresh blocks from ``g`` on and inserts them as sibling nodes.
 Lifetime is reference-counted through :class:`~repro.cache.paged.
 BlockAllocator`: the tree holds one reference on every indexed block, each
 live request holds one more on the blocks it pinned. When the allocator runs
-dry, :meth:`PrefixCache.evict_lru` drops the least-recently-used *leaf*
+dry, :meth:`PrefixCache.evict_lru` reclaims the least-recently-used *leaf*
 whose block no live request references — trimming cold prefixes suffix-first
 so a chain is never broken in the middle.
+
+With a :class:`~repro.cache.offload.HostBlockStore` attached, eviction
+**spills instead of dropping**: the victim's packed block moves to host RAM
+and the node stays in the tree as a *host-resident* entry (``block = -1``,
+``host`` = store handle). A later longest-prefix match that reaches a
+host-resident chain still counts as a hit — the engine swaps the bytes back
+into freshly allocated device blocks and pins them like any shared prefix.
+Only when the host tier itself is full (and no colder host entry can be
+dropped to make room) does eviction fall back to dropping.
 """
 from __future__ import annotations
 
@@ -35,7 +44,8 @@ from repro.cache.paged import BlockAllocator
 @dataclasses.dataclass(eq=False)
 class PrefixNode:
     """One cached R-token group: ``key`` = its token ids, ``block`` = the
-    physical pool block holding its quantized KV."""
+    physical pool block holding its quantized KV (``-1`` when the bytes live
+    in the host tier under handle ``host``)."""
 
     key: tuple[int, ...]
     block: int
@@ -43,21 +53,35 @@ class PrefixNode:
     children: dict[tuple[int, ...], "PrefixNode"] = \
         dataclasses.field(default_factory=dict)
     last_used: int = 0
+    host: int | None = None
+
+    @property
+    def on_device(self) -> bool:
+        return self.block >= 0
 
 
 class PrefixCache:
     """Host-side longest-prefix index; all bookkeeping happens between
-    jitted steps (device code only ever reads page tables)."""
+    jitted steps (device code only ever reads page tables).
 
-    def __init__(self, allocator: BlockAllocator, group_size: int):
+    ``host_store`` (optional) enables the spill tier: see module docstring.
+    """
+
+    def __init__(self, allocator: BlockAllocator, group_size: int,
+                 host_store=None):
         self.alloc = allocator
         self.group_size = group_size
+        self.host = host_store
         self.root = PrefixNode(key=(), block=-1, parent=None)
         self._clock = 0
         self._nodes = 0
+        # cumulative tier-transition counters (engines report deltas)
+        self.spilled_blocks = 0      # device -> host
+        self.dropped_blocks = 0      # device -> gone
+        self.host_dropped_blocks = 0  # host -> gone
 
     def __len__(self) -> int:
-        """Number of cached groups (= pool blocks the tree references)."""
+        """Number of cached groups (device- plus host-resident)."""
         return self._nodes
 
     def _tick(self) -> int:
@@ -71,8 +95,10 @@ class PrefixCache:
 
     # -------------------------------------------------------------- lookup
     def match(self, tokens) -> list[int]:
-        """Longest cached chain of full groups prefixing ``tokens``; returns
-        the physical block ids (group ``g`` of the prompt → ``blocks[g]``).
+        """Longest *device-resident* cached chain of full groups prefixing
+        ``tokens``; returns the physical block ids (group ``g`` of the
+        prompt → ``blocks[g]``). Stops at the first host-resident node —
+        use :meth:`match_nodes` for tier-aware admission.
 
         A pure lookup: LRU stamps refresh only on :meth:`insert` (a
         successful admission), so a speculative match — truncated by the
@@ -80,21 +106,39 @@ class PrefixCache:
         not promote never-used suffix nodes over genuinely warm chains.
         Between a match and its admission the engine pins the blocks, so
         unstamped matched nodes cannot be evicted underneath it."""
-        node, blocks = self.root, []
+        blocks = []
+        for n in self.match_nodes(tokens):
+            if not n.on_device:
+                break
+            blocks.append(n.block)
+        return blocks
+
+    def match_nodes(self, tokens) -> list["PrefixNode"]:
+        """Longest cached chain of full groups prefixing ``tokens`` across
+        BOTH tiers — node ``g`` may be device-resident (``on_device``) or
+        host-resident (``host`` handle). The engine swaps host entries back
+        into fresh device blocks before pinning the chain. Like
+        :meth:`match`, a pure lookup (no LRU stamping): a chain of
+        device-resident nodes is always a prefix of the result (eviction
+        spills suffix-first and swap-in restores root-first)."""
+        node, chain = self.root, []
         for key in self._groups(tokens):
             child = node.children.get(key)
             if child is None:
                 break
-            blocks.append(child.block)
+            chain.append(child)
             node = child
-        return blocks
+        return chain
 
     # -------------------------------------------------------------- insert
     def insert(self, tokens, blocks: list[int]) -> int:
         """Index a prefilled prompt's full-group chain: ``blocks[g]`` holds
         group ``g``. Newly adopted blocks gain one tree reference (so they
         outlive the request); already-cached groups just refresh their LRU
-        stamp. Returns the number of groups newly adopted."""
+        stamp. A host-resident node whose group the request holds a device
+        block for is *promoted* back to the device tier (its host copy is
+        freed — the fresh block is bitwise identical by the chunk-aligned
+        sharing invariant). Returns the number of groups newly adopted."""
         t = self._tick()
         node, adopted = self.root, 0
         for g, key in enumerate(self._groups(tokens)):
@@ -107,18 +151,27 @@ class PrefixCache:
                 self._nodes += 1
                 adopted += 1
             else:
+                if not child.on_device:
+                    # promote: tree adopts the request's fresh device block
+                    self.alloc.ref([blocks[g]])
+                    self.host.release([child.host])
+                    child.block, child.host = blocks[g], None
                 child.last_used = t
             node = child
         return adopted
 
     # ------------------------------------------------------------ eviction
-    def _evictable(self):
-        """One post-order pass: nodes whose whole subtree is unpinned (no
-        live request holds any block in it), in LRU order — deeper first on
-        ties so a chain always trims suffix-before-parent. Iterative (cached
-        chains can be thousands of groups deep)."""
-        cands = []
-        ok: dict[int, bool] = {}
+    def _scan(self):
+        """One post-order pass over the tree: ``(device_cands, host_cands)``
+        — nodes whose whole subtree is unpinned (no live request holds any
+        block in it; host entries count a store reference beyond the tree's
+        own as a pin), each list in LRU order, deeper first on ties so a
+        chain always trims suffix-before-parent. Host candidates addition-
+        ally require a subtree free of device nodes (dropping one must not
+        orphan a device-resident descendant). Iterative (cached chains can
+        be thousands of groups deep)."""
+        dev, hst = [], []
+        ok: dict[int, tuple[bool, bool]] = {}  # id -> (unpinned, host_only)
         stack = [(c, 1, False) for c in self.root.children.values()]
         while stack:
             node, depth, visited = stack.pop()
@@ -127,38 +180,119 @@ class PrefixCache:
                 stack.extend((c, depth + 1, False)
                              for c in node.children.values())
                 continue
-            sub_ok = all(ok[id(c)] for c in node.children.values())
-            e = sub_ok and self.alloc.refcount(node.block) == 1
-            ok[id(node)] = e
-            if e:
-                cands.append((node.last_used, -depth, id(node), node))
-        cands.sort()
-        return [c[-1] for c in cands]
+            kids = [ok[id(c)] for c in node.children.values()]
+            sub_ok = all(k[0] for k in kids)
+            if node.on_device:
+                unpinned = sub_ok and self.alloc.refcount(node.block) == 1
+                host_only = False
+            else:
+                unpinned = sub_ok and self.host.refcount(node.host) == 1
+                host_only = all(k[1] for k in kids)
+            ok[id(node)] = (unpinned, unpinned and host_only)
+            if unpinned:
+                entry = (node.last_used, -depth, id(node), node)
+                if node.on_device:
+                    dev.append(entry)
+                elif host_only:
+                    hst.append(entry)
+        dev.sort()
+        hst.sort()
+        return [c[-1] for c in dev], [c[-1] for c in hst]
 
-    def evict(self, need: int, partial: bool = False) -> int:
-        """Free up to ``need`` blocks, least-recently-used first, in ONE tree
-        scan. When fewer than ``need`` blocks are evictable the call refuses
-        (returns 0) unless ``partial`` — a doomed allocation attempt must not
-        destroy cached templates it cannot help anyway."""
+    def _drop(self, node) -> None:
+        """Unlink ``node`` and free its whole (detached) subtree. Callers
+        always drop unpinned device descendants first (candidate lists put
+        children before parents and are consumed prefix-first), so anything
+        still attached below can only be host-resident — spilled suffixes
+        ride along with their dropped ancestor instead of leaking."""
+        del node.parent.children[node.key]
+        stack = [node]
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            self._nodes -= 1
+            if n.on_device:
+                if n is not node:
+                    raise AssertionError(
+                        "evicted a node with device-resident descendants")
+                self.alloc.release([n.block])
+                self.dropped_blocks += 1
+            else:
+                self.host.release([n.host])
+                self.host_dropped_blocks += 1
+
+    def evict(self, need: int, partial: bool = False, pools=None) -> int:
+        """Free up to ``need`` device blocks, least-recently-used first, in
+        ONE tree scan. When fewer than ``need`` blocks are evictable the
+        call refuses (returns 0) unless ``partial`` — a doomed allocation
+        attempt must not destroy cached templates it cannot help anyway.
+
+        With a host store attached and ``pools`` given, victims **spill**:
+        their packed bytes move to the host tier in one batched transfer and
+        the nodes stay matchable (host-resident). Colder host entries are
+        dropped to make room; victims the host tier cannot hold after that
+        are dropped outright. Hotter victims get the host slots (drops take
+        the LRU end), so the tier order always runs cold -> colder."""
         if need <= 0:
             return 0
-        cands = self._evictable()
-        if len(cands) < need and not partial:
+        dev, hst = self._scan()
+        if len(dev) < need and not partial:
             return 0
-        freed = 0
-        for node in cands:
-            if freed >= need:
-                break
-            del node.parent.children[node.key]
-            self._nodes -= 1
-            self.alloc.release([node.block])
-            freed += 1
-        return freed
+        take = dev[:need]
+        n_spill = 0
+        if self.host is not None and pools is not None and take:
+            room = self.host.free_slots
+            if room < len(take):
+                # drop cold host entries to make room for hotter spills
+                for node in hst:
+                    if room >= len(take):
+                        break
+                    self._drop(node)
+                    room += 1
+            n_spill = min(len(take), room)
+        dropped, spilled = take[:len(take) - n_spill], \
+            take[len(take) - n_spill:]
+        if spilled:
+            handles = self.host.put_blocks(pools, [n.block for n in spilled])
+            if handles is None:   # raced capacity (shouldn't happen)
+                dropped, spilled, handles = take, [], []
+            for node, h in zip(spilled, handles):
+                self.alloc.release([node.block])
+                node.block, node.host = -1, h
+                self.spilled_blocks += 1
+        for node in dropped:
+            self._drop(node)
+        return len(take)
 
-    def evict_lru(self) -> int:
-        """Drop the least-recently-used evictable leaf; 1 if freed, else 0."""
-        return self.evict(1)
+    def drop_host_lru(self, n: int) -> int:
+        """Drop up to ``n`` cold host-tier entries (LRU, suffix-first) to
+        make room in the store — used before parking a preempted request's
+        blocks. Returns entries dropped."""
+        if n <= 0:
+            return 0
+        _, hst = self._scan()
+        for node in hst[:n]:
+            self._drop(node)
+        return min(n, len(hst))
+
+    def evict_lru(self, pools=None) -> int:
+        """Reclaim the least-recently-used evictable leaf's device block;
+        1 if freed, else 0. Pass ``pools`` to spill it into an attached
+        host store instead of dropping (see :meth:`evict`)."""
+        return self.evict(1, pools=pools)
 
     def clear(self) -> int:
-        """Drop every evictable cached prefix; returns blocks freed."""
-        return self.evict(self._nodes, partial=True)
+        """Drop every evictable cached prefix (both tiers, nothing spills);
+        returns device blocks freed."""
+        freed = 0
+        while True:
+            dev, hst = self._scan()
+            if not dev and not hst:
+                return freed
+            if dev:
+                # children precede parents; host suffixes cascade along
+                for node in dev:
+                    self._drop(node)
+                freed += len(dev)
+            else:
+                self._drop(hst[0])

@@ -44,9 +44,23 @@ class Request:
     max_new_tokens: int = 16
     eos_id: int | None = None
     arrival_step: int = 0        # decode-step index when the request arrives
+    priority: int = 0            # higher wins under the 'priority' scheduler
     # filled by the engine:
     output: list = dataclasses.field(default_factory=list)
     done: bool = False
+
+
+@dataclasses.dataclass(eq=False)
+class _Parked:
+    """Device-side remains of a preempted request. ``entries`` maps each of
+    its page-table positions to ``("dev", block)`` — a shared block the
+    parked request still holds a reference on — or ``("host", handle)`` —
+    an exclusively-owned block swapped out to the host tier. ``None``
+    entries mean the blocks were dropped entirely (host tier full):
+    resume recomputes from the prompt instead of swapping in."""
+
+    entries: list | None
+    residuals: list | None       # per-layer (k_res, v_res) host rows
 
 
 @dataclasses.dataclass
@@ -63,6 +77,22 @@ class EngineStats:
     prefix_misses: int = 0
     prefix_hit_tokens: int = 0      # prompt tokens served from cached blocks
     prefix_evicted_blocks: int = 0
+    # tiered-store accounting (host_blocks > 0 and/or preemption enabled)
+    preemptions: int = 0
+    resumes: int = 0                # swap-in resumes (token-identical)
+    recompute_resumes: int = 0      # host tier was full: replayed instead
+    replay_steps: int = 0           # decode steps spent rebuilding state
+    swap_out_blocks: int = 0        # device -> host (preemption parking)
+    swap_in_blocks: int = 0         # host -> device (resume + prefix hits)
+    host_prefix_hits: int = 0       # admissions served from a spilled chain
+    host_prefix_hit_tokens: int = 0
+    prefix_spilled_blocks: int = 0  # evictions that spilled instead of drop
+    prefix_dropped_blocks: int = 0  # evictions that really dropped
+    host_evicted_blocks: int = 0    # host-tier LRU drops
+    # pool occupancy (allocated fraction of usable device blocks)
+    pool_utilization: float = 0.0   # at the last allocator event
+    pool_high_watermark: float = 0.0
+    host_utilization: float = 0.0   # host-tier fill at the last event
     # device round-trips spent admitting requests: dense prefill + adopt
     # count one each; serial paged prefill one per request; batched
     # admission one per chunk wave (the number the batched path shrinks)
@@ -276,6 +306,20 @@ class ContinuousEngine:
       burst of arrivals costs one device round-trip per chunk wave instead
       of one per request. Greedy outputs are token-identical batched or
       serial, kernel on or off.
+    * ``scheduler`` picks the admission/preemption policy (``"fcfs"`` /
+      ``"priority"`` / ``"ssf"`` or a ``SchedulerPolicy`` instance — see
+      ``repro.serving.scheduler``). ``host_blocks`` adds a host-RAM tier
+      (``repro.cache.offload``) that parks preempted requests' packed
+      blocks and receives evicted radix prefixes (spill-instead-of-drop:
+      a later match on a spilled chain swaps it back in and still counts
+      as a hit). With a host tier, preemption is on by default: under pool
+      pressure the scheduler parks a policy-chosen victim — swap-out is
+      bitwise, so the victim resumes token-identically — instead of
+      stalling the queue; when the host tier is full the victim's blocks
+      are dropped and resume recomputes from the prompt (deterministic
+      prefill + recorded-token replay, still token-identical). ``preempt``
+      overrides the default (e.g. recompute-only preemption with no host
+      tier).
 
     Restrictions (v1): attention-only stacks with global (non-windowed)
     attention; see ``repro.cache.paged``.
@@ -287,7 +331,9 @@ class ContinuousEngine:
                  use_pallas: bool = False, seed: int = 0,
                  prefill_paged: bool = False, prefix_cache: bool = False,
                  prefill_chunk: int | None = None, decode_horizon: int = 1,
-                 batched_admission: bool = False):
+                 batched_admission: bool = False,
+                 scheduler="fcfs", host_blocks: int = 0,
+                 preempt: bool | None = None):
         cfg = api.cfg
         self.api = api
         self.params = params
@@ -315,17 +361,30 @@ class ContinuousEngine:
                 f"prefill_chunk ({self.prefill_chunk}) must be a positive "
                 f"multiple of the quant group size ({self.group_size})")
 
+        from repro.cache.offload import HostBlockStore
         from repro.cache.paged import BlockAllocator
         from repro.cache.prefix import PrefixCache
+        from repro.serving.scheduler import make_scheduler
 
         self.state = api.init_paged_state(
             schedule, max_batch, self.num_blocks, self.max_pages)
         self.alloc = BlockAllocator(self.num_blocks)
-        self.prefix = PrefixCache(self.alloc, self.group_size) \
+        # host tier: one capacity knob shared by prefix spills and
+        # preemption parking — the host-RAM mirror of num_blocks
+        self.host = HostBlockStore(host_blocks) if host_blocks > 0 else None
+        self.prefix = PrefixCache(self.alloc, self.group_size,
+                                  host_store=self.host) \
             if prefix_cache else None
+        self.sched = make_scheduler(scheduler)
+        # preemption defaults on exactly when a host tier exists to park
+        # victims in; recompute-only preemption is opt-in (preempt=True)
+        self.preempt_enabled = bool(host_blocks > 0) if preempt is None \
+            else preempt
+        self._parked: dict[int, _Parked] = {}
         self._pt = np.zeros((max_batch, self.max_pages), np.int32)
         self._slots: list[Request | None] = [None] * max_batch
         self._slot_pages: list[list[int]] = [[] for _ in range(max_batch)]
+        self._reserved: set[int] = set()    # slots mid-batched-admission
         self._current = np.zeros(max_batch, np.int32)
         self._pending: list[Request] = []   # submitted, not yet arrived
         self._ready: list[Request] = []     # arrived, waiting for slot/blocks
@@ -401,55 +460,61 @@ class ContinuousEngine:
         return None
 
     def _try_admit(self) -> None:
-        """FIFO admission: fill free slots while the pool has blocks. With
-        the prefix cache on, each admission first pins the longest cached
-        prefix so only the suffix needs fresh blocks (and prefill). With
-        ``batched_admission``, every request admissible this tick is
+        """Scheduler-ordered admission: fill free slots while the pool has
+        blocks. With the prefix cache on, each admission first pins the
+        longest cached prefix — swapping host-resident chain links back in —
+        so only the suffix needs fresh blocks (and prefill). With
+        ``batched_admission``, every request admissible at a tick is
         reserved first and then prefilled together as lock-step chunk
         waves (:meth:`_admit_batch`) — one device dispatch per wave for
-        the whole burst instead of one (or more) per request. A burst
-        member that finishes instantly frees its slot; the outer loop
-        re-collects so waiting requests can take it (as the serial path's
-        rolling while-loop does)."""
+        the whole burst instead of one (or more) per request. When the
+        queue head cannot be admitted and preemption is enabled, the
+        scheduler may park a running victim (:meth:`_preempt`) instead of
+        stalling. A burst member that finishes instantly frees its slot;
+        the outer loop re-collects so waiting requests can take it (as the
+        serial path's rolling while-loop does)."""
         while True:
+            self._ready.sort(key=lambda r: self.sched.admission_key(r, self))
             batch: list = []
             while self._ready:
-                slot = self._free_slot()
-                if slot is None:
-                    break
                 req = self._ready[0]
-                shared = self._match_prefix(req) if self.prefix is not None \
-                    else []
-                if shared:
-                    self.alloc.ref(shared)  # pin before eviction reaps them
-                pages = self._alloc_with_eviction(
-                    self._pages_needed(req) - len(shared))
-                if pages is None:
-                    if shared:
-                        self.alloc.release(shared)  # unpin; retry next tick
+                parked = self._parked.get(req.uid)
+                if parked is not None and parked.entries is not None:
+                    # swap-in resume: no prefill, just blocks + residuals
+                    if self._resume_swap(req, parked):
+                        self._ready.pop(0)
+                        continue
+                    if self.preempt_enabled and self._preempt_for(req):
+                        continue
+                    break  # head-of-line waits for slot/blocks
+                res = self._reserve(req, resuming=parked is not None)
+                if res is None:
+                    if self.preempt_enabled and self._preempt_for(req):
+                        continue
                     break  # head-of-line waits for blocks to free up
-                if self.prefix is not None:
-                    if shared:
-                        self.stats.prefix_hits += 1
-                        self.stats.prefix_hit_tokens += \
-                            len(shared) * self.group_size
-                    else:
-                        self.stats.prefix_misses += 1
                 self._ready.pop(0)
-                if self.batched_admission:
+                slot, pages, n_shared = res
+                if parked is not None:
+                    # recompute fallback: re-prefill + replay recorded
+                    # tokens (never batched — replay is per-slot serial)
+                    self._admit(req, slot, pages, n_shared=n_shared,
+                                replay=True)
+                elif self.batched_admission:
                     self._slots[slot] = req  # reserve the slot for the burst
-                    batch.append((req, slot, shared + pages, len(shared)))
+                    self._reserved.add(slot)
+                    batch.append((req, slot, pages, n_shared))
                 else:
-                    self._admit(req, slot, shared + pages,
-                                n_shared=len(shared))
+                    self._admit(req, slot, pages, n_shared=n_shared)
             if not batch:
                 return
             self._admit_batch(batch)
+            self._reserved.clear()
             if not self._ready:
                 return
 
-    def _match_prefix(self, req: Request) -> list[int]:
-        """Longest usable cached prefix of this prompt, as block ids.
+    def _match_chain(self, req: Request) -> list:
+        """Longest usable cached prefix of this prompt, as radix nodes
+        (device- or host-resident).
 
         The match is capped below the full prompt (at least one suffix token
         must run so admission has logits to sample from) and truncated to a
@@ -457,26 +522,252 @@ class ContinuousEngine:
         context boundaries, so only chunk-aligned sharing reproduces the
         cache-off computation bit-for-bit.
         """
-        blocks = self.prefix.match(req.prompt)
+        nodes = self.prefix.match_nodes(req.prompt)
         r = self.group_size
         per_chunk = self.prefill_chunk // r
-        n = min(len(blocks), (len(req.prompt) - 1) // r)
-        return blocks[:n // per_chunk * per_chunk]
+        n = min(len(nodes), (len(req.prompt) - 1) // r)
+        return nodes[:n // per_chunk * per_chunk]
+
+    def suffix_tokens(self, req: Request) -> int:
+        """Prompt tokens an admission of ``req`` would actually prefill
+        (scheduler hook): zero while it runs or sits swap-parked, otherwise
+        its prompt minus the longest usable cached prefix."""
+        parked = self._parked.get(req.uid)
+        if parked is not None and parked.entries is not None:
+            return 0
+        if req in self._slots:
+            return 0
+        if self.prefix is None:
+            return len(req.prompt)
+        return len(req.prompt) - len(self._match_chain(req)) * self.group_size
+
+    def _reserve(self, req: Request, resuming: bool = False):
+        """Slot + blocks for one admission: pin the longest usable cached
+        prefix (swapping host-resident chain links back into fresh device
+        blocks — a *host-tier hit*), then allocate fresh blocks for the
+        rest. Returns ``(slot, pages, n_shared)``, or ``None`` (with
+        nothing pinned or allocated) when a slot or blocks are missing.
+        ``resuming`` (recompute resume of a preempted request) suppresses
+        the hit/miss counters — the request was already counted at its
+        original admission; physical swap traffic is still recorded."""
+        slot = self._free_slot()
+        if slot is None:
+            return None
+        chain = self._match_chain(req) if self.prefix is not None else []
+        dev = [n.block for n in chain if n.on_device]
+        hst = [n for n in chain if not n.on_device]
+        if dev:
+            self.alloc.ref(dev)       # pin before eviction reaps them
+        if hst:
+            # shield the host copies from host-tier LRU drops while the
+            # allocation below spills other chains into the store
+            self.host.ref([n.host for n in hst])
+        pages = self._alloc_with_eviction(self._pages_needed(req) - len(dev))
+        if pages is None:
+            if dev:
+                self.alloc.release(dev)   # unpin; retry next tick
+            if hst:
+                self.host.release([n.host for n in hst])
+            return None
+        if hst:
+            handles = [n.host for n in hst]
+            dst = pages[:len(hst)]
+            pools = self.host.take_to_device(self.state.pools, handles, dst)
+            self.state = dataclasses.replace(self.state, pools=pools)
+            self.alloc.ref(dst)            # the tree's reference moves tiers
+            self.host.release(handles)     # ... so its host reference drops
+            self.host.release(handles)     # ... and so does our shield
+            for n, b in zip(hst, dst):
+                n.block, n.host = b, None
+            self.stats.swap_in_blocks += len(hst)
+            if not resuming:
+                self.stats.host_prefix_hits += 1
+                self.stats.host_prefix_hit_tokens += \
+                    len(hst) * self.group_size
+        if self.prefix is not None and not resuming:
+            if chain:
+                self.stats.prefix_hits += 1
+                self.stats.prefix_hit_tokens += len(chain) * self.group_size
+            else:
+                self.stats.prefix_misses += 1
+        self._note_pool()
+        return slot, [n.block for n in chain] + pages[len(hst):], len(chain)
 
     def _alloc_with_eviction(self, n: int) -> list[int] | None:
-        """Allocate n blocks, evicting LRU cached prefixes under pressure.
+        """Allocate n blocks, evicting LRU cached prefixes under pressure
+        (spilled to the host tier when one is attached, dropped otherwise).
         Eviction is one tree pass for exactly the deficit, and refuses when
         it cannot reach it — a doomed attempt leaves the cache intact."""
         pages = self.alloc.alloc(n)
         if pages is None and self.prefix is not None:
-            freed = self.prefix.evict(n - self.alloc.free_blocks)
+            pc = self.prefix
+            before = (pc.spilled_blocks, pc.dropped_blocks,
+                      pc.host_dropped_blocks)
+            freed = pc.evict(n - self.alloc.free_blocks,
+                             pools=self.state.pools)
             if freed:
                 self.stats.prefix_evicted_blocks += freed
+                self.stats.prefix_spilled_blocks += \
+                    pc.spilled_blocks - before[0]
+                self.stats.prefix_dropped_blocks += \
+                    pc.dropped_blocks - before[1]
+                self.stats.host_evicted_blocks += \
+                    pc.host_dropped_blocks - before[2]
                 pages = self.alloc.alloc(n)
+        self._note_pool()
         return pages
 
+    def _note_pool(self) -> None:
+        self.stats.pool_utilization = self.alloc.utilization
+        self.stats.pool_high_watermark = \
+            self.alloc.high_watermark / max(self.num_blocks - 1, 1)
+        if self.host is not None and self.host.capacity:
+            self.stats.host_utilization = len(self.host) / self.host.capacity
+
+    # --------------------------------------------------- preemption / tiers
+    def _preempt_for(self, waiting: Request) -> bool:
+        """Preempt ONE scheduler-approved victim to make room for
+        ``waiting``; False when no victim qualifies (the queue head then
+        stalls exactly as without preemption). Victims are chosen by the
+        policy's ``victim_key``; slots reserved for an in-flight admission
+        burst are never preempted."""
+        victims = [(s, r) for s, r in enumerate(self._slots)
+                   if r is not None and s not in self._reserved
+                   and self.sched.wants_preempt(waiting, r, self)]
+        if not victims:
+            return False
+        slot, _ = min(victims,
+                      key=lambda sr: self.sched.victim_key(sr[1], self))
+        self._preempt(slot)
+        return True
+
+    def _preempt(self, slot: int) -> None:
+        """Park the request running in ``slot``. Its exclusively-owned
+        blocks (refcount 1) swap out to the host tier in one batched
+        transfer — bitwise, so resume is token-identical — together with
+        its per-layer residual windows; shared blocks keep their reference
+        (other owners are serving from them anyway, and the kept pin stops
+        the radix tree from spilling them underneath the parked request).
+        When the host tier cannot hold the exclusive blocks even after
+        dropping cold host entries, everything is released instead and the
+        resume replays from the prompt (recompute fallback — deterministic
+        chunked prefill + recorded-token replay, still token-identical)."""
+        from repro.cache import offload
+
+        req = self._slots[slot]
+        pages = self._slot_pages[slot]
+        excl = [b for b in pages if self.alloc.refcount(b) == 1]
+        handles = None
+        if self.host is not None:
+            short = len(excl) - self.host.free_slots
+            if short > 0 and self.prefix is not None:
+                self.stats.host_evicted_blocks += \
+                    self.prefix.drop_host_lru(short)
+            handles = self.host.put_blocks(self.state.pools, excl)
+        if handles is None:
+            # recompute fallback: shared references drop too — resume is a
+            # full re-admission (prefix re-match included) plus replay
+            self.alloc.release(pages)
+            self._parked[req.uid] = _Parked(entries=None, residuals=None)
+        else:
+            hmap = dict(zip(excl, handles))
+            entries = [("host", hmap[b]) if b in hmap else ("dev", b)
+                       for b in pages]
+            residuals = offload.extract_residual(self.state.pools, slot)
+            self.alloc.release(excl)
+            self._parked[req.uid] = _Parked(entries=entries,
+                                            residuals=residuals)
+            self.stats.swap_out_blocks += len(excl)
+        self.stats.preemptions += 1
+        self._slots[slot] = None
+        self._slot_pages[slot] = []
+        self._ready.append(req)
+        # keep the waiting queue policy-ordered mid-pass: the victim must
+        # not sit behind lower-ranked requests for the rest of this tick
+        self._ready.sort(key=lambda r: self.sched.admission_key(r, self))
+        self._note_pool()
+
+    def _resume_swap(self, req: Request, parked: _Parked) -> bool:
+        """Un-park a swap-preempted request into a free slot: allocate fresh
+        device blocks for its host-tier entries, swap the packed bytes back
+        in (one batched transfer), restore its residual windows, page-table
+        row, cached length, and current token. Bitwise — decode continues
+        exactly where preemption stopped it."""
+        from repro.cache import offload
+
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        n_host = sum(1 for kind, _ in parked.entries if kind == "host")
+        fresh = self._alloc_with_eviction(n_host)
+        if fresh is None:
+            return False
+        handles = [v for kind, v in parked.entries if kind == "host"]
+        it = iter(fresh)
+        pages = [v if kind == "dev" else next(it)
+                 for kind, v in parked.entries]
+        pools = self.state.pools
+        if handles:
+            pools = self.host.take_to_device(pools, handles, fresh)
+            self.host.release(handles)
+        pools = offload.scatter_residual(pools, parked.residuals, slot)
+        self._pt[slot, :] = 0
+        self._pt[slot, :len(pages)] = pages
+        lengths = self.state.lengths.at[slot].set(
+            len(req.prompt) + len(req.output) - 1)
+        self.state = dataclasses.replace(
+            self.state, pools=pools, lengths=lengths,
+            page_table=jnp.asarray(self._pt))
+        self._slots[slot] = req
+        self._slot_pages[slot] = pages
+        self._current[slot] = req.output[-1]
+        del self._parked[req.uid]
+        self.stats.swap_in_blocks += n_host
+        self.stats.resumes += 1
+        self._note_pool()
+        return True
+
+    def _demote_parked_lru(self) -> bool:
+        """Last-resort deadlock breaker: a swap-parked request pins its
+        shared blocks and host handles; when admission stalls with no live
+        slots, converting one parked request to recompute releases those
+        pins so the queue head can proceed."""
+        for parked in self._parked.values():
+            if parked.entries is None:
+                continue
+            host = [v for kind, v in parked.entries if kind == "host"]
+            if host:
+                self.host.release(host)
+            self.alloc.release([v for kind, v in parked.entries
+                                if kind == "dev"])
+            parked.entries = None
+            parked.residuals = None
+            self._note_pool()
+            return True
+        return False
+
+    def _replay(self, req: Request, slot: int) -> None:
+        """Rebuild a recompute-parked request's decode state bitwise by
+        feeding its recorded tokens back through the normal decode step
+        (every KV append lands exactly where the original decode put it;
+        the logits are discarded — outputs were already emitted)."""
+        out = req.output
+        alive = np.zeros(self.max_batch, bool)
+        alive[slot] = True
+        alive_dev = jnp.asarray(alive)
+        for t in range(len(out) - 1):
+            tokens = np.zeros(self.max_batch, np.int32)
+            tokens[slot] = out[t]
+            _, self.state = self._step(
+                self.params, self.state, jnp.asarray(tokens[:, None]),
+                alive_dev)
+            self.stats.replay_steps += 1
+        self._current[slot] = out[-1]
+        del self._parked[req.uid]
+        self.stats.recompute_resumes += 1
+
     def _admit(self, req: Request, slot: int, pages: list[int],
-               n_shared: int = 0) -> None:
+               n_shared: int = 0, replay: bool = False) -> None:
         t0 = time.time()
         plen = len(req.prompt)
         self._pt[slot, :] = 0
@@ -514,9 +805,14 @@ class ContinuousEngine:
             self.stats.record_prefill_wall(time.time() - ts)
             self.stats.prefill_dispatches += 2  # dense prefill + adopt
 
-        self.stats.admitted += 1
         self._slots[slot] = req
         self._slot_pages[slot] = pages
+        if replay:
+            # recompute resume: the request already emitted tokens — rebuild
+            # its decode-produced blocks/residual instead of sampling afresh
+            self._replay(req, slot)
+            return
+        self.stats.admitted += 1
 
         tok = int(self._sample(last_logits)[0])
         self.stats.record_admit_latency(time.time() - t0)
@@ -589,6 +885,7 @@ class ContinuousEngine:
             self._slot_pages[slot] = []
             self._slots[slot] = None
             self._done.append(req)
+            self._note_pool()
         else:
             self._current[slot] = tok
 
@@ -611,9 +908,15 @@ class ContinuousEngine:
                 if not self._pending and not self._ready:
                     break
                 if self._ready:
-                    # cannot happen: with no live slots every slot is free
-                    # and (post-eviction) every pool block too, and submit()
-                    # rejects requests larger than the pool
+                    # swap-parked requests pin their shared blocks and host
+                    # handles; with no live slots that is the only thing
+                    # that can still block the queue head — demote one to
+                    # recompute and retry. With nothing left to demote this
+                    # cannot happen: every slot is free, (post-eviction)
+                    # every pool block too, and submit() rejects requests
+                    # larger than the pool.
+                    if self._demote_parked_lru():
+                        continue
                     raise RuntimeError(
                         "admission stalled with no live slots")
                 # nothing decodable yet: fast-forward straight to the next

@@ -1,0 +1,126 @@
+"""Pluggable admission & preemption scheduling for ``ContinuousEngine``.
+
+A policy decides two things, both between jitted steps (the device never
+sees scheduling):
+
+* **admission order** — how the arrived-but-waiting queue is sorted before
+  slots/blocks are handed out (``admission_key``);
+* **preemption** — when the head of that queue cannot be admitted under pool
+  pressure, whether a running *victim* should be preempted for it
+  (``wants_preempt``) and which victim to prefer (``victim_key``). A
+  preempted request's exclusively-owned blocks swap out to the host tier
+  (or are dropped for recompute-from-prompt when the tier is full), and it
+  re-enters the waiting queue to be resumed token-identically later.
+
+Every policy's ``wants_preempt`` is a *strict* comparison on a quantity
+that never increases for a given request (arrival time, priority, remaining
+work), so preemption cannot livelock: A can displace B and B later displace
+A only after A made real progress, and total progress is bounded by the
+workload.
+
+Built-in policies:
+
+* ``fcfs`` — earliest arrival wins, always. A waiting request preempts only
+  victims that *arrived* strictly later than it did; the latest-arrived
+  victim goes first. Equal-arrival traffic degrades to today's
+  stall-and-wait admission.
+* ``priority`` — higher ``Request.priority`` wins. Victims must have
+  strictly lower priority than the waiting request; lowest priority (then
+  latest arrival) is evicted first.
+* ``ssf`` — shortest-suffix-first: the request with the least remaining
+  work (non-cached prefill suffix + undecoded token budget) wins, the
+  classic mean-latency heuristic. Victims must have strictly more remaining
+  work; the largest-remaining victim goes first.
+"""
+from __future__ import annotations
+
+
+class SchedulerPolicy:
+    """Base policy. Subclasses override the three hooks; ``engine`` is the
+    calling ``ContinuousEngine`` (gives access to prefix-match state for
+    suffix-aware policies)."""
+
+    name = "base"
+    preemptive = True
+
+    def admission_key(self, req, engine):
+        """Sort key over waiting requests; smallest admits first."""
+        raise NotImplementedError
+
+    def wants_preempt(self, waiting, victim, engine) -> bool:
+        """True if ``waiting`` justifies preempting running ``victim``.
+        MUST be a strict comparison (see module docstring)."""
+        raise NotImplementedError
+
+    def victim_key(self, victim, engine):
+        """Sort key over eligible victims; smallest is preempted first."""
+        raise NotImplementedError
+
+    # ------------------------------------------------------------- shared
+    @staticmethod
+    def remaining_work(req, engine) -> int:
+        """Tokens of work left: the prefill suffix not covered by a cached
+        prefix (zero once running) plus the undecoded token budget. Never
+        increases for a given request."""
+        return engine.suffix_tokens(req) + req.max_new_tokens \
+            - len(req.output)
+
+
+class FCFSScheduler(SchedulerPolicy):
+    name = "fcfs"
+
+    def admission_key(self, req, engine):
+        return (req.arrival_step, req.uid)
+
+    def wants_preempt(self, waiting, victim, engine) -> bool:
+        return waiting.arrival_step < victim.arrival_step
+
+    def victim_key(self, victim, engine):
+        return (-victim.arrival_step, -victim.uid)
+
+
+class PriorityScheduler(SchedulerPolicy):
+    name = "priority"
+
+    def admission_key(self, req, engine):
+        return (-req.priority, req.arrival_step, req.uid)
+
+    def wants_preempt(self, waiting, victim, engine) -> bool:
+        return waiting.priority > victim.priority
+
+    def victim_key(self, victim, engine):
+        return (victim.priority, -victim.arrival_step, -victim.uid)
+
+
+class ShortestSuffixScheduler(SchedulerPolicy):
+    name = "ssf"
+
+    def admission_key(self, req, engine):
+        return (self.remaining_work(req, engine), req.arrival_step, req.uid)
+
+    def wants_preempt(self, waiting, victim, engine) -> bool:
+        return self.remaining_work(waiting, engine) \
+            < self.remaining_work(victim, engine)
+
+    def victim_key(self, victim, engine):
+        return (-self.remaining_work(victim, engine), -victim.uid)
+
+
+POLICIES = {p.name: p for p in (FCFSScheduler, PriorityScheduler,
+                                ShortestSuffixScheduler)}
+
+
+def make_scheduler(spec) -> SchedulerPolicy:
+    """Resolve ``spec`` — a policy name, class, or instance — to a policy
+    instance."""
+    if isinstance(spec, SchedulerPolicy):
+        return spec
+    if isinstance(spec, type) and issubclass(spec, SchedulerPolicy):
+        return spec()
+    if isinstance(spec, str):
+        if spec not in POLICIES:
+            raise ValueError(f"unknown scheduler {spec!r}; "
+                             f"have {sorted(POLICIES)}")
+        return POLICIES[spec]()
+    raise TypeError(f"scheduler spec must be a name, SchedulerPolicy class, "
+                    f"or instance; got {type(spec).__name__}")

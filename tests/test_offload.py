@@ -1,0 +1,465 @@
+"""Tiered KV block store tests: host-RAM offload, preemption-aware
+scheduling, and spill-instead-of-drop prefix caching.
+
+Covers the tier subsystem end-to-end: bitwise host<->device block round
+trips (mixed per-layer precision, unquantized layers included), the
+refcounted ``HostBlockStore``, allocator utilization/consistency stats,
+scheduler policy resolution and ordering, and the engine-level guarantees —
+preemption/resume and recompute-fallback token-identity across scheduler
+policies x ``decode_horizon`` x ``batched_admission`` x ``use_pallas``,
+host-tier prefix hits on spilled chains, and workload reproducibility from
+explicit seeds.
+"""
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.cache.offload import HostBlockStore, extract_blocks
+from repro.cache.paged import BlockAllocator, PagedKVPool
+from repro.cache.prefix import PrefixCache
+from repro.configs.base import ModelConfig
+from repro.core.precision import MODE_KIVI, KVTunerSchedule, PrecisionPair
+from repro.models.registry import build_model
+from repro.serving.engine import ContinuousEngine, Request
+from repro.serving.scheduler import (POLICIES, SchedulerPolicy,
+                                     make_scheduler)
+
+jax.config.update("jax_platform_name", "cpu")
+
+R = 8        # tiny quant group -> groups/flushes within a few tokens
+CHUNK = 16   # prefill chunk (2 groups)
+
+
+@pytest.fixture(scope="module")
+def tiny_api():
+    cfg = ModelConfig(name="offload-tiny", family="dense", num_layers=2,
+                      d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+                      vocab_size=61, q_chunk=16, kv_group_size=R)
+    return build_model(cfg)
+
+
+@pytest.fixture(scope="module")
+def tiny_params(tiny_api):
+    return tiny_api.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def sched():
+    return KVTunerSchedule.uniform(2, PrecisionPair(8, 4))
+
+
+def _pools(seed=0):
+    """Two-layer pool list with a None (non-attention) gap and mixed
+    precision, incl. an unquantized layer (dummy scale/zero path)."""
+    key = jax.random.PRNGKey(seed)
+    hkv, d, n = 2, 16, 6
+    pools = [
+        PagedKVPool.init(n, 1, hkv, d, PrecisionPair(8, 4), MODE_KIVI, R,
+                         dtype=jnp.float32),
+        None,
+        PagedKVPool.init(n, 1, hkv, d, PrecisionPair(16, 16), MODE_KIVI, R,
+                         dtype=jnp.float32),
+    ]
+    for i, p in enumerate(pools):
+        if p is None:
+            continue
+        k = jax.random.normal(jax.random.fold_in(key, 2 * i),
+                              (1, hkv, 2 * R, d), jnp.float32)
+        v = jax.random.normal(jax.random.fold_in(key, 2 * i + 1),
+                              (1, hkv, 2 * R, d), jnp.float32)
+        pools[i] = p.write_prefill_groups(k, v, jnp.asarray([2, 4]))
+    return pools
+
+
+def _gather(pools, pt):
+    return [None if p is None else
+            tuple(np.asarray(x) for x in p.gather_dequant(pt))
+            for p in pools]
+
+
+# =============================================== host store: bitwise moves
+def test_host_roundtrip_bitwise():
+    """swap-out -> swap-in (to different block ids) -> gather_dequant is
+    bitwise identical, for quantized and unquantized layers alike."""
+    pools = _pools()
+    pt = jnp.asarray([[2, 4]], jnp.int32)
+    before = _gather(pools, pt)
+
+    store = HostBlockStore(capacity=4)
+    handles = store.put_blocks(pools, [2, 4])
+    assert len(store) == 2 and store.free_slots == 2
+    # clobber the source blocks, then restore into DIFFERENT slots
+    zeroed = list(pools)
+    for i, p in enumerate(zeroed):
+        if p is None:
+            continue
+        import dataclasses
+        zeroed[i] = dataclasses.replace(
+            p, k_codes=jnp.zeros_like(p.k_codes),
+            v_codes=jnp.zeros_like(p.v_codes))
+    restored = store.take_to_device(zeroed, handles, [1, 3])
+    store.release(handles)
+    assert len(store) == 0
+    after = _gather(restored, jnp.asarray([[1, 3]], jnp.int32))
+    for b, a in zip(before, after):
+        if b is None:
+            continue
+        np.testing.assert_array_equal(b[0], a[0])
+        np.testing.assert_array_equal(b[1], a[1])
+
+
+def test_host_store_capacity_and_refcounts():
+    pools = _pools()
+    store = HostBlockStore(capacity=1)
+    assert store.put_blocks(pools, [2, 4]) is None   # over capacity: no-op
+    assert len(store) == 0
+    (h,) = store.put_blocks(pools, [2])
+    assert store.free_slots == 0
+    store.ref([h])
+    store.release([h])
+    assert len(store) == 1                # second owner still holds it
+    store.release([h])
+    assert len(store) == 0
+    with pytest.raises(ValueError, match="handle"):
+        store.release([h])                # double free raises
+    with pytest.raises(ValueError):
+        HostBlockStore(capacity=-1)
+
+
+def test_extract_blocks_payload_shapes():
+    pools = _pools()
+    payloads = extract_blocks(pools, [2])
+    (quant, raw) = payloads[0][0], payloads[0][1]
+    assert quant[0].shape[0] == 2          # k_codes [Hkv, R, D*kb/8]
+    assert quant[1] is not None            # quantized: scales move
+    assert raw[1] is None and raw[2] is None  # bits>=16: dummies stay put
+
+
+# ==================================== allocator stats + consistency check
+def test_allocator_stats_and_consistency():
+    a = BlockAllocator(9)
+    assert a.utilization == 0.0 and a.high_watermark == 0
+    x = a.alloc(4)
+    assert a.allocated_blocks == 4 and a.utilization == 0.5
+    assert a.high_watermark == 4
+    a.release(x[:2])
+    assert a.high_watermark == 4           # watermark is the peak
+    a.assert_consistent()
+    # corrupt deliberately: a freed id with a dangling refcount
+    a._refs[x[0]] = 1
+    with pytest.raises(AssertionError, match="free but has refcount"):
+        a.assert_consistent()
+    a._refs[x[0]] = 0
+    a._refs[x[2]] = 0                      # leaked: allocated, refcount 0
+    with pytest.raises(AssertionError, match="leaked"):
+        a.assert_consistent()
+
+
+# ====================================================== scheduler policies
+def test_make_scheduler_resolution():
+    assert make_scheduler("ssf").name == "ssf"
+    assert isinstance(make_scheduler(POLICIES["fcfs"]), SchedulerPolicy)
+    inst = POLICIES["priority"]()
+    assert make_scheduler(inst) is inst
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        make_scheduler("lifo")
+    with pytest.raises(TypeError):
+        make_scheduler(42)
+
+
+def test_policy_orderings():
+    class Eng:  # engine stub: no prefix cache, nothing running
+        prefix = None
+        _parked = {}
+        _slots = []
+
+        @staticmethod
+        def suffix_tokens(req):
+            return len(req.prompt)
+
+    a = Request(uid=0, prompt=np.zeros(8), arrival_step=5, priority=1,
+                max_new_tokens=4)
+    b = Request(uid=1, prompt=np.zeros(24), arrival_step=0, priority=3,
+                max_new_tokens=4)
+    eng = Eng()
+    fcfs, prio, ssf = (make_scheduler(n) for n in ("fcfs", "priority", "ssf"))
+    assert fcfs.admission_key(b, eng) < fcfs.admission_key(a, eng)
+    assert prio.admission_key(b, eng) < prio.admission_key(a, eng)
+    assert ssf.admission_key(a, eng) < ssf.admission_key(b, eng)  # shorter
+    # preemption predicates are strict: equal rank never preempts
+    assert not fcfs.wants_preempt(a, a, eng)
+    assert not prio.wants_preempt(a, a, eng)
+    assert not ssf.wants_preempt(a, a, eng)
+    assert fcfs.wants_preempt(b, a, eng)       # earlier arrival wins
+    assert prio.wants_preempt(b, a, eng)       # higher priority wins
+    assert ssf.wants_preempt(a, b, eng)        # less remaining work wins
+
+
+# ============================================ engine: preemption + resume
+def _engine(api, params, sched, **kw):
+    kw.setdefault("prefill_chunk", CHUNK)
+    kw.setdefault("prefix_cache", True)
+    kw.setdefault("max_seq", 48)
+    return ContinuousEngine(api, params, sched, max_batch=2, **kw)
+
+
+def _workload(seed=1, n_templates=2, n=8):
+    """Late arrivals with climbing priority and shrinking budgets: priority
+    and ssf schedulers both find preemption victims under pool pressure."""
+    rng = np.random.default_rng(seed)
+    tpls = [rng.integers(0, 61, 32) for _ in range(n_templates)]
+    prompts = [np.concatenate([tpls[i % n_templates],
+                               rng.integers(0, 61, 5)]) for i in range(n)]
+    arrivals = [0, 0, 3, 5, 8, 11, 14, 17][:n]
+    prios = [0, 0, 2, 3, 4, 5, 6, 7][:n]
+    maxnew = [12, 12, 6, 6, 5, 5, 4, 4][:n]
+    return [Request(uid=i, prompt=p, max_new_tokens=maxnew[i],
+                    arrival_step=arrivals[i], priority=prios[i])
+            for i, p in enumerate(prompts)]
+
+
+def _run(engine, reqs):
+    for r in reqs:
+        engine.submit(r)
+    done = sorted(engine.run(), key=lambda r: r.uid)
+    engine.alloc.assert_consistent()
+    return [r.output for r in done]
+
+
+@pytest.fixture(scope="module")
+def reference(tiny_api, tiny_params, sched):
+    """Unconstrained-pool outputs every overload config must reproduce."""
+    return _run(_engine(tiny_api, tiny_params, sched), _workload())
+
+
+@pytest.mark.parametrize("kw", [
+    dict(scheduler="priority"),
+    dict(scheduler="priority", decode_horizon=3),
+    dict(scheduler="priority", batched_admission=True),
+    dict(scheduler="priority", use_pallas=True),
+], ids=["priority", "horizon3", "batched", "pallas"])
+def test_preempt_resume_token_identity(tiny_api, tiny_params, sched,
+                                       reference, kw):
+    """The acceptance property: an undersized pool + host tier + preemption
+    finishes every request with greedy outputs bitwise-identical to the
+    unconstrained run — swap-out/swap-in is a bitwise round trip and shared
+    blocks stay pinned."""
+    eng = _engine(tiny_api, tiny_params, sched, num_blocks=14,
+                  host_blocks=10, **kw)
+    assert _run(eng, _workload()) == reference
+    s = eng.stats
+    assert s.preemptions > 0 and s.resumes > 0
+    assert s.swap_out_blocks > 0 and s.swap_in_blocks >= s.swap_out_blocks
+    assert s.recompute_resumes == 0
+    assert s.pool_high_watermark == 1.0     # the pool really was the wall
+    assert not eng._parked                  # everyone resumed and finished
+    # remaining host entries can only be tree-owned spilled prefixes
+    assert len(eng.host) <= eng.stats.prefix_spilled_blocks
+
+
+@pytest.mark.parametrize("pallas", [False, True], ids=["xla", "pallas"])
+def test_ssf_preempts_long_victim(tiny_api, tiny_params, sched, pallas):
+    """Shortest-suffix-first: a short late arrival displaces the
+    long-remaining victim, and outputs still match the unconstrained run
+    (kernel on or off)."""
+    rng = np.random.default_rng(5)
+    long_p = [rng.integers(0, 61, 37) for _ in range(2)]
+    short_p = [rng.integers(0, 61, 12) for _ in range(2)]
+    reqs = lambda: (  # noqa: E731 - rebuilt per engine (outputs accumulate)
+        [Request(uid=i, prompt=p, max_new_tokens=24, arrival_step=0)
+         for i, p in enumerate(long_p)]
+        + [Request(uid=2 + i, prompt=p, max_new_tokens=3, arrival_step=4)
+           for i, p in enumerate(short_p)])
+    ref = _run(_engine(tiny_api, tiny_params, sched, scheduler="ssf",
+                       max_seq=64, use_pallas=pallas), reqs())
+    eng = _engine(tiny_api, tiny_params, sched, scheduler="ssf",
+                  max_seq=64, num_blocks=18, host_blocks=12,
+                  use_pallas=pallas)
+    assert _run(eng, reqs()) == ref
+    assert eng.stats.preemptions > 0 and eng.stats.resumes > 0
+
+
+@pytest.mark.parametrize("pallas", [False, True], ids=["xla", "pallas"])
+def test_fcfs_is_non_preemptive_under_overload(tiny_api, tiny_params, sched,
+                                               pallas):
+    """FCFS finds no victim by construction (running requests never arrived
+    later than a waiter), so overload degrades to stall-and-wait — but the
+    host tier still spills/revives prefixes and outputs stay identical."""
+    ref = _run(_engine(tiny_api, tiny_params, sched, use_pallas=pallas),
+               _workload())
+    eng = _engine(tiny_api, tiny_params, sched, scheduler="fcfs",
+                  num_blocks=14, host_blocks=10, use_pallas=pallas)
+    assert _run(eng, _workload()) == ref
+    assert eng.stats.preemptions == 0
+
+
+def test_spilled_prefix_hits(tiny_api, tiny_params, sched):
+    """Evicted radix chains spill to the host tier and a later match on the
+    spilled chain swaps it back in, counting as BOTH a prefix hit and a
+    host-tier hit — instead of yesterday's drop + full re-prefill."""
+    rng = np.random.default_rng(7)
+    tpls = [rng.integers(0, 61, 32) for _ in range(3)]
+    prompts = [np.concatenate([tpls[i % 3], rng.integers(0, 61, 5)])
+               for i in range(12)]
+    mk = lambda: [Request(uid=i, prompt=p, max_new_tokens=5,  # noqa: E731
+                          arrival_step=(0 if i < 6 else 2))
+                  for i, p in enumerate(prompts)]
+    ref = _run(_engine(tiny_api, tiny_params, sched), mk())
+    eng = _engine(tiny_api, tiny_params, sched, num_blocks=14,
+                  host_blocks=16)
+    assert _run(eng, mk()) == ref
+    s = eng.stats
+    assert s.prefix_spilled_blocks > 0
+    assert s.host_prefix_hits > 0
+    assert s.host_prefix_hit_tokens > 0
+    assert s.swap_in_blocks > 0
+    # host hits are a subset of hits; spilled-chain tokens were NOT
+    # prefilled again (the whole point): every prompt token was either
+    # prefilled or served from a (device- or host-) cached chain
+    assert s.host_prefix_hits <= s.prefix_hits
+    assert s.prefill_tokens + s.prefix_hit_tokens == \
+        sum(len(p) for p in prompts)
+
+
+def test_recompute_fallback_when_host_full(tiny_api, tiny_params, sched):
+    """Host tier too small to park a victim's blocks: preemption drops them
+    and resume replays prompt + recorded tokens — still token-identical."""
+    ref = _run(_engine(tiny_api, tiny_params, sched), _workload())
+    eng = _engine(tiny_api, tiny_params, sched, scheduler="priority",
+                  num_blocks=14, host_blocks=2)
+    assert _run(eng, _workload()) == ref
+    s = eng.stats
+    assert s.preemptions > 0
+    assert s.recompute_resumes > 0
+    assert s.replay_steps > 0
+    # resume re-reservation must not double-count admission hit/miss stats
+    assert s.prefix_hits + s.prefix_misses == s.admitted
+
+
+def test_recompute_only_preemption_no_host_tier(tiny_api, tiny_params,
+                                                sched):
+    """preempt=True with host_blocks=0: every preemption takes the
+    recompute path (the engine never allocates a host store)."""
+    ref = _run(_engine(tiny_api, tiny_params, sched), _workload())
+    eng = _engine(tiny_api, tiny_params, sched, scheduler="priority",
+                  num_blocks=14, host_blocks=0, preempt=True)
+    assert _run(eng, _workload()) == ref
+    assert eng.host is None
+    assert eng.stats.preemptions > 0
+    assert eng.stats.recompute_resumes == eng.stats.preemptions
+    assert eng.stats.swap_out_blocks == 0
+
+
+# ============================================== prefix cache spill details
+def test_prefix_spill_and_promote():
+    """Node-level spill semantics: evict with a host store keeps the chain
+    matchable; insert with a fresh device block promotes it back and frees
+    the host copy."""
+    a = BlockAllocator(16)
+    store = HostBlockStore(capacity=8)
+    cache = PrefixCache(a, group_size=4, host_store=store)
+    pools = None  # spill payloads only matter on the engine path
+
+    toks = np.arange(12)
+    blocks = a.alloc(3)
+    cache.insert(toks, blocks)
+    a.release(blocks)            # tree is sole owner
+    # without pools, evict drops (no payload to move) — use drop_host path
+    # via the engine-style call: pools=None means plain drop
+    assert cache.evict(1, pools=pools) == 1
+    assert cache.dropped_blocks == 1
+    assert len(cache) == 2
+
+    # re-adopt a block for the dropped group, then spill WITH payloads
+    tail = a.alloc(1)
+    cache.insert(toks, blocks[:2] + tail)
+    a.release(tail)
+    real_pools = _pools()
+    assert cache.evict(2, pools=real_pools) == 2
+    assert cache.spilled_blocks == 2 and len(store) == 2
+    assert len(cache) == 3       # nodes survive as host-resident
+    nodes = cache.match_nodes(toks)
+    assert len(nodes) == 3
+    assert nodes[0].on_device and not nodes[1].on_device
+    assert cache.match(toks) == [nodes[0].block]   # device prefix only
+
+    # promotion: a request prefilled fresh device blocks for those groups
+    fresh = a.alloc(2)
+    cache.insert(toks, [nodes[0].block] + fresh)
+    assert len(store) == 0       # host copies freed
+    assert all(n.on_device for n in cache.match_nodes(toks))
+    cache.clear()
+    a.assert_consistent()
+
+
+def test_drop_cascades_host_suffix_and_prefers_spill():
+    """A dropped device node takes its detached host-resident suffix with it
+    (no handle leaks); and under store pressure eviction prefers dropping
+    the coldest host entry so a hotter victim can still spill."""
+    toks = np.arange(12)
+
+    a = BlockAllocator(16)
+    store = HostBlockStore(capacity=2)
+    cache = PrefixCache(a, group_size=4, host_store=store)
+    blocks = a.alloc(3)
+    cache.insert(toks, blocks)
+    a.release(blocks)
+    cache.evict(2, pools=_pools())          # chain is now [dev, host, host]
+    cache._drop(cache.match_nodes(toks)[0])  # backstop path: cascade
+    assert len(cache) == 0 and len(store) == 0
+    assert cache.host_dropped_blocks == 2 and cache.dropped_blocks == 1
+    a.assert_consistent()
+
+    a2, store2 = BlockAllocator(16), HostBlockStore(capacity=2)
+    c2 = PrefixCache(a2, group_size=4, host_store=store2)
+    b2 = a2.alloc(3)
+    c2.insert(toks, b2)
+    a2.release(b2)
+    c2.evict(2, pools=_pools())
+    assert c2.evict(1, pools=_pools()) == 1  # store full: drop cold + spill
+    assert len(c2) == 2 and len(store2) == 2  # chain survives [host, host]
+    assert c2.host_dropped_blocks == 1 and c2.spilled_blocks == 3
+    assert not any(n.on_device for n in c2.match_nodes(toks)[:2])
+    a2.assert_consistent()
+
+
+def test_drop_host_lru():
+    a = BlockAllocator(16)
+    store = HostBlockStore(capacity=8)
+    cache = PrefixCache(a, group_size=4, host_store=store)
+    toks = np.arange(8)
+    blocks = a.alloc(2)
+    cache.insert(toks, blocks)
+    a.release(blocks)
+    assert cache.evict(2, pools=_pools()) == 2
+    assert len(store) == 2
+    assert cache.drop_host_lru(1) == 1
+    assert len(store) == 1 and cache.host_dropped_blocks == 1
+    assert cache.drop_host_lru(5) == 1     # only one left
+    assert len(store) == 0 and len(cache) == 0
+
+
+# ======================================================== reproducibility
+def test_workloads_reproducible_from_seed():
+    from benchmarks.common import poisson_arrivals, shared_template_prompts
+    from benchmarks.table12_offload import build_workload
+
+    r1 = np.random.default_rng(11)
+    r2 = np.random.default_rng(11)
+    p1 = shared_template_prompts(61, 2, 3, 16, 4, r1)
+    p2 = shared_template_prompts(61, 2, 3, 16, 4, r2)
+    assert all(np.array_equal(a, b) for a, b in zip(p1, p2))
+    assert poisson_arrivals(9, 1.5, r1) == poisson_arrivals(9, 1.5, r2)
+    w1, w2 = build_workload(61, 2, 2, 16, 4, seed=3), \
+        build_workload(61, 2, 2, 16, 4, seed=3)
+    assert all(np.array_equal(a, b) for a, b in zip(w1[0], w2[0]))
+    assert w1[1:] == w2[1:]
+    assert build_workload(61, 2, 2, 16, 4, seed=4)[1] != w1[1] or \
+        not all(np.array_equal(a, b) for a, b in
+                zip(build_workload(61, 2, 2, 16, 4, seed=4)[0], w1[0]))
