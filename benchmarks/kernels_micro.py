@@ -292,6 +292,118 @@ def _admission_burst(n_requests: int = 4, prompt_len: int = 12,
     }
 
 
+# =================================================================== verify
+def run_verify(ctx=None, max_slots: int = 4, max_pages: int = 32,
+               hkv: int = 2, g: int = 4, d: int = 64, r: int = 32,
+               bits: int = 4, reps: int = 5) -> dict:
+    """Fused speculative-verify sweep: one ``qverify_paged`` call scoring
+    k+1 candidate positions per slot vs the k+1 serial ``qdecode_paged``
+    calls it replaces, for k ∈ {2, 4, 8} × 25/50/100% context fill. The
+    fused pass streams each live context block ONCE for all candidates
+    (the candidate window rides in a bf16 side buffer), so both µs/call
+    and the analytic bytes (``PagedKVPool.verify_stream_bytes``) must beat
+    k+1 × the serial decode numbers."""
+    import dataclasses
+
+    from repro.cache.codec import kv_modes
+    from repro.cache.paged import PagedKVPool
+    from repro.core.precision import PrecisionPair
+    from repro.kernels.qdecode import qdecode_paged
+    from repro.kernels.qprefill import qverify_paged
+
+    num_blocks = 1 + max_slots * max_pages
+    pp = PrecisionPair(bits, bits)
+    pool = PagedKVPool.init(num_blocks, max_slots, hkv, d, pp,
+                            MODE_PER_TOKEN, r, dtype=jnp.bfloat16)
+    key = jax.random.PRNGKey(0)
+    ks_ = jax.random.split(key, 7)
+    c = pool.codec
+    kc, ksc, kz = c.k.encode(jax.random.normal(ks_[0], (num_blocks, hkv, r, d)))
+    vc, vsc, vz = c.v.encode(jax.random.normal(ks_[1], (num_blocks, hkv, r, d)))
+    pool = dataclasses.replace(
+        pool, k_codes=kc, k_scale=ksc, k_zero=kz, v_codes=vc, v_scale=vsc,
+        v_zero=vz,
+        k_res=jax.random.normal(ks_[2], (max_slots, hkv, r, d), jnp.bfloat16),
+        v_res=jax.random.normal(ks_[3], (max_slots, hkv, r, d), jnp.bfloat16))
+    pt = jnp.asarray(
+        [[1 + s * max_pages + j for j in range(max_pages)]
+         for s in range(max_slots)], jnp.int32)
+    k_mode, v_mode = kv_modes(MODE_PER_TOKEN)
+    kwq = dict(k_bits=bits, v_bits=bits, k_mode=k_mode, v_mode=v_mode,
+               group_size=r, interpret=True)
+
+    def serial(q1, n_valid, n_res):
+        return qdecode_paged(
+            q1, pool.k_codes, pool.k_scale, pool.k_zero, pool.v_codes,
+            pool.v_scale, pool.v_zero, pool.k_res, pool.v_res, pt,
+            n_valid, n_res, **kwq)
+
+    def fused(qv, k_win, v_win, n_main, n_res, n_win):
+        return qverify_paged(
+            qv, pool.k_codes, pool.k_scale, pool.k_zero, pool.v_codes,
+            pool.v_scale, pool.v_zero, pool.k_res, pool.v_res, k_win, v_win,
+            pt, n_main, n_res, n_win, **kwq)
+
+    rows = []
+    for k in (2, 4, 8):
+        k1 = k + 1
+        qv = jax.random.normal(ks_[4], (max_slots, hkv, k1 * g, d))
+        q1 = qv[:, :, :g]
+        k_win = jax.random.normal(ks_[5], (max_slots, hkv, k1, d),
+                                  jnp.bfloat16)
+        v_win = jax.random.normal(ks_[6], (max_slots, hkv, k1, d),
+                                  jnp.bfloat16)
+        n_win = jnp.full((max_slots,), k1, jnp.int32)
+        for fill in (0.25, 0.50, 1.00):
+            pages = max(int(max_pages * fill), 1)
+            lens = [pages * r] * max_slots
+            n_main = jnp.asarray(lens, jnp.int32)
+            n_res = jnp.asarray([r // 2] * max_slots, jnp.int32)
+
+            def serial_k1():
+                # the k+1 single-token decode dispatches the fused verify
+                # replaces — each re-streams every live context block
+                out = None
+                for _ in range(k1):
+                    out = serial(q1, n_main + n_res, n_res)
+                return out
+
+            us_fused = _time_min(fused, qv, k_win, v_win, n_main, n_res,
+                                 n_win, reps=reps)
+            us_serial = _time_min(serial_k1, reps=reps)
+            rows.append({
+                "kernel": "qverify_paged", "k": k, "fill": fill,
+                "live_pages": pages * max_slots,
+                "us_fused": us_fused, "us_serial_k1": us_serial,
+                "fused_bytes": pool.verify_stream_bytes(
+                    [ln + r // 2 for ln in lens], k1),
+                "serial_bytes": k1 * pool.decode_stream_bytes(
+                    [ln + r // 2 for ln in lens]),
+            })
+    return {"rows": rows, "geometry": {
+        "max_slots": max_slots, "max_pages": max_pages, "hkv": hkv, "g": g,
+        "d": d, "r": r, "bits": bits, "block_bytes": pool.block_bytes()}}
+
+
+def check_verify_claims(result: dict) -> dict[str, bool]:
+    rows = result["rows"]
+    full = [r for r in rows if r["fill"] == 1.0]
+    k4 = {r["fill"]: r for r in rows if r["k"] == 4}
+    return {
+        "fused verify streams fewer bytes than k+1 serial decodes (all k)":
+            all(r["fused_bytes"] < r["serial_bytes"] for r in rows),
+        "fused byte advantage grows with k (context amortized once)":
+            full[0]["serial_bytes"] / full[0]["fused_bytes"]
+            < full[-1]["serial_bytes"] / full[-1]["fused_bytes"],
+        "fused verify faster than k+1 serial decode calls (100% fill)":
+            all(r["us_fused"] < r["us_serial_k1"] for r in full),
+        "fused bytes track live context fill":
+            k4[0.25]["fused_bytes"] < k4[0.5]["fused_bytes"]
+            < k4[1.0]["fused_bytes"]
+            and k4[0.25]["fused_bytes"] < 0.35 * k4[1.0]["fused_bytes"],
+    }
+
+
 def check_prefill_claims(result: dict) -> dict[str, bool]:
     by_fill = {r["fill"]: r for r in result["rows"]}
     full, quarter = by_fill[1.0], by_fill[0.25]
@@ -323,9 +435,15 @@ def main() -> None:
                     help="paged decode work-proportionality sweep (CI smoke)")
     ap.add_argument("--prefill", action="store_true",
                     help="fused prefill + batched admission sweep (CI smoke)")
+    ap.add_argument("--verify", action="store_true",
+                    help="fused speculative-verify vs serial decode sweep "
+                         "(CI smoke)")
     args = ap.parse_args()
 
-    if args.prefill:
+    if args.verify:
+        result = run_verify()
+        claims = check_verify_claims(result)
+    elif args.prefill:
         result = run_prefill()
         claims = check_prefill_claims(result)
     elif args.paged:

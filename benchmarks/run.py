@@ -48,6 +48,9 @@ def main() -> None:
         "t8_engines": lambda: table8_throughput.run_engines(
             ctx, n_requests=6 if args.fast else 10,
             max_new=6 if args.fast else 8),
+        "t8_speculative": lambda: table8_throughput.run_speculative(
+            ctx, per_template=2 if args.fast else 3,
+            max_new=64 if args.fast else 96),
         "t11_prefix": lambda: table11_prefix.run(
             ctx, per_template=2 if args.fast else 4,
             max_new=4 if args.fast else 8),
@@ -57,6 +60,7 @@ def main() -> None:
         "kernels_micro": lambda: kernels_micro.run(ctx),
         "kernels_paged": lambda: kernels_micro.run_paged(ctx),
         "kernels_prefill": lambda: kernels_micro.run_prefill(ctx),
+        "kernels_verify": lambda: kernels_micro.run_verify(ctx),
     }
     checkers = {
         "t9_error": table9_error.check_paper_claims,
@@ -72,6 +76,8 @@ def main() -> None:
         "kernels_micro": kernels_micro.check_paper_claims,
         "kernels_paged": kernels_micro.check_paged_claims,
         "kernels_prefill": kernels_micro.check_prefill_claims,
+        "kernels_verify": kernels_micro.check_verify_claims,
+        "t8_speculative": table8_throughput.check_speculative_claims,
     }
     wanted = set(tables) if args.tables == "all" else \
         set(args.tables.split(","))

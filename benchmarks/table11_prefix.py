@@ -12,7 +12,11 @@ is the radix-tree prefix cache:
 
 Reported: prefill tokens (and the saved fraction), cache hits, end-to-end
 tokens/s. Greedy outputs must be token-identical between the two runs —
-prefix caching is a pure work-elimination optimization.
+prefix caching is a pure work-elimination optimization. ``speculate_k > 0``
+layers speculative multi-token decode on top of both engines (same drafter,
+same identity requirement) and the per-engine speculation accounting
+(drafted/accepted tokens, acceptance rate, accepted-length percentiles)
+rides along in the report.
 
 Standalone: ``PYTHONPATH=src python -m benchmarks.table11_prefix [--tiny]``
 (``--tiny`` drives a milliseconds-scale random model — the CI smoke mode).
@@ -40,10 +44,20 @@ def build_workload(vocab: int, n_templates: int, per_template: int,
     return prompts, poisson_arrivals(len(prompts), arrival_rate, rng)
 
 
+def _spec_fields(stats) -> dict:
+    """Speculative-decode accounting (zeros when ``speculate_k=0``)."""
+    return {"spec_steps": stats.spec_steps,
+            "drafted_tokens": stats.drafted_tokens,
+            "accepted_tokens": stats.accepted_tokens,
+            "acceptance_rate": stats.acceptance_rate,
+            "accepted_len_p50": stats.accepted_len_p50,
+            "accepted_len_p95": stats.accepted_len_p95}
+
+
 def run(ctx, n_templates: int = 3, per_template: int = 4,
         template_len: int = 64, suffix_len: int = 16, max_new: int = 8,
         max_batch: int = 4, seed: int = 0, sched=None,
-        prefill_chunk: int | None = None) -> dict:
+        prefill_chunk: int | None = None, speculate_k: int = 0) -> dict:
     cfg = ctx.api.cfg
     if sched is None:
         from repro.launch.steps import default_schedule
@@ -61,7 +75,7 @@ def run(ctx, n_templates: int = 3, per_template: int = 4,
         eng = ContinuousEngine(
             ctx.api, ctx.params, sched, max_batch=max_batch, max_seq=max_seq,
             prefill_paged=True, prefix_cache=on, prefill_chunk=prefill_chunk,
-            seed=seed)
+            seed=seed, speculate_k=speculate_k)
         for i, p in enumerate(prompts):
             eng.submit(Request(uid=i, prompt=p, max_new_tokens=max_new,
                                arrival_step=arrivals[i]))
@@ -74,7 +88,8 @@ def run(ctx, n_templates: int = 3, per_template: int = 4,
         "workload": {"n_templates": n_templates,
                      "per_template": per_template,
                      "template_len": template_len, "suffix_len": suffix_len,
-                     "max_new": max_new, "arrival_steps": arrivals},
+                     "max_new": max_new, "arrival_steps": arrivals,
+                     "speculate_k": speculate_k},
         "prefix_off": {"prefill_tokens": off.prefill_tokens,
                        "tokens_per_s": off.throughput,
                        "decode_tokens_per_s": off.decode_tokens_per_s,
@@ -87,7 +102,8 @@ def run(ctx, n_templates: int = 3, per_template: int = 4,
                        "prefill_dispatches": off.prefill_dispatches,
                        "decode_steps": off.decode_steps,
                        "pool_utilization": off.pool_utilization,
-                       "pool_high_watermark": off.pool_high_watermark},
+                       "pool_high_watermark": off.pool_high_watermark,
+                       **_spec_fields(off)},
         "prefix_on": {"prefill_tokens": on.prefill_tokens,
                       "tokens_per_s": on.throughput,
                       "decode_tokens_per_s": on.decode_tokens_per_s,
@@ -103,7 +119,8 @@ def run(ctx, n_templates: int = 3, per_template: int = 4,
                       "pool_high_watermark": on.pool_high_watermark,
                       "hits": on.prefix_hits, "misses": on.prefix_misses,
                       "hit_tokens": on.prefix_hit_tokens,
-                      "evicted_blocks": on.prefix_evicted_blocks},
+                      "evicted_blocks": on.prefix_evicted_blocks,
+                      **_spec_fields(on)},
         "prefill_tokens_saved_frac": saved,
         "outputs_identical": out_on == out_off,
     }

@@ -297,6 +297,182 @@ class PagedKVPool:
                                    v_codes=vc, v_scale=vs, v_zero=vz,
                                    k_res=k_res, v_res=v_res)
 
+    def append_tokens(self, k_new: jax.Array, v_new: jax.Array,
+                      lengths: jax.Array, counts: jax.Array,
+                      page_table: jax.Array) -> "PagedKVPool":
+        """Append up to K tokens per slot in one call — the commit half of
+        speculative decode. Slot ``s`` appends the first ``counts[s]`` of its
+        K candidate tokens; the rest never touch the pool (their writes are
+        masked out), so a partial accept IS the rollback of the rejected
+        tail.
+
+        Because ``K <= R``, the whole commit crosses at most ONE group
+        boundary, so it vectorizes to exactly the cost of a single
+        :meth:`append` — one masked multi-token window write plus one
+        encode/scatter per side — instead of K unrolled steps. Token j
+        lands at window position ``(L + j) % R`` (each position written at
+        most once); slots whose window fills flush the **flush-moment**
+        window state (old partial group + the tokens that completed it) to
+        logical group ``L // R``, everyone else scatters to
+        :data:`SCRATCH_BLOCK`. Live pool blocks and residual windows end
+        bitwise identical to ``counts[s]`` sequential single-token appends;
+        only the scratch block (garbage by contract) differs.
+
+        ``k_new/v_new [max_slots, Hkv, K, D]`` post-rope candidate KV;
+        ``lengths [max_slots]`` i32 pre-append; ``counts [max_slots]`` i32
+        in ``[0, K]`` (0 = dead slot); ``page_table [max_slots, P]``.
+        """
+        r = self.group_size
+        kk = k_new.shape[2]
+        if kk > r:
+            raise ValueError(
+                f"append_tokens: K ({kk}) must be <= group_size ({r}) "
+                f"so at most one group can flush")
+        lengths = lengths.astype(jnp.int32)
+        counts = counts.astype(jnp.int32)
+        base = jnp.mod(lengths, r)                       # [S]
+        j = jnp.arange(kk)                               # [K]
+        pos = jnp.mod(base[:, None] + j[None, :], r)     # [S, K]
+        live = j[None, :] < counts[:, None]              # [S, K]
+        # the step that completes the current group, if any slot reaches it
+        j_f = r - 1 - base                               # [S]
+        flush = j_f < counts
+
+        def scatter(win, toks, mask):
+            """Masked multi-token one-hot write into the residual window."""
+            onehot = (pos[:, :, None] == jnp.arange(r)[None, None, :]) \
+                & mask[:, :, None]                       # [S, K, r]
+            oh = onehot[:, None, :, :, None]             # [S, 1, K, r, 1]
+            t = toks.astype(win.dtype)[:, :, :, None, :]   # [S, H, K, 1, D]
+            upd = jnp.sum(jnp.where(oh, t, jnp.zeros((), win.dtype)), axis=2)
+            written = jnp.any(onehot, axis=1)[:, None, :, None]
+            return jnp.where(written, upd, win)
+
+        # window state AT the flush moment: only tokens up to j_f written
+        # (post-boundary tokens had not been appended yet)
+        pre = live & (j[None, :] <= j_f[:, None])
+        k_fl = scatter(self.k_res, k_new, pre)
+        v_fl = scatter(self.v_res, v_new, pre)
+        # final window state: every accepted token written at its position
+        k_res = scatter(self.k_res, k_new, live)
+        v_res = scatter(self.v_res, v_new, live)
+
+        g = lengths // r       # the logical group the flush completes
+        bids = jnp.where(
+            flush,
+            jnp.take_along_axis(page_table, g[:, None], axis=1)[:, 0],
+            SCRATCH_BLOCK)
+        c = self.codec
+        kc, ks, kz = _encode_scatter(self.k_codes, self.k_scale, self.k_zero,
+                                     bids, k_fl, c.k)
+        vc, vs, vz = _encode_scatter(self.v_codes, self.v_scale, self.v_zero,
+                                     bids, v_fl, c.v)
+        return dataclasses.replace(self, k_codes=kc, k_scale=ks, k_zero=kz,
+                                   v_codes=vc, v_scale=vs, v_zero=vz,
+                                   k_res=k_res, v_res=v_res)
+
+    # ------------------------------------------------- speculative rollback
+    def snapshot_spec(self, lengths: jax.Array,
+                      page_table: jax.Array) -> dict:
+        """Capture everything a ``<= R``-token speculative append can
+        disturb, so :meth:`rollback_spec` can make rejected tokens vanish
+        **bitwise**. Take it BEFORE :meth:`append_tokens`.
+
+        Appending ``Ka <= R`` tokens from length ``L`` crosses at most ONE
+        group boundary, and the only block it can flush is the one backing
+        logical group ``L // R`` — so the snapshot is the residual windows
+        plus that single block (codes + scales) per slot. Quantized blocks
+        cannot recover the bf16 values they were encoded from, which is why
+        rollback needs a pre-append copy at all ("unflush/re-own").
+        """
+        lengths = lengths.astype(jnp.int32)
+        g0 = jnp.clip(lengths // self.group_size, 0,
+                      page_table.shape[1] - 1)
+        bids = jnp.take_along_axis(page_table.astype(jnp.int32),
+                                   g0[:, None], axis=1)[:, 0]
+
+        def grab(arr):
+            return arr[bids] if arr.ndim > 1 else arr
+
+        return {"bids": bids, "k_res": self.k_res, "v_res": self.v_res,
+                "k_codes": grab(self.k_codes), "k_scale": grab(self.k_scale),
+                "k_zero": grab(self.k_zero), "v_codes": grab(self.v_codes),
+                "v_scale": grab(self.v_scale), "v_zero": grab(self.v_zero)}
+
+    def rollback_tail(self, snap: dict, lengths: jax.Array, keep: jax.Array,
+                      appended: jax.Array) -> "PagedKVPool":
+        """Bitwise-revert the REJECTED TAIL of a multi-token append: after
+        slot ``s`` appended ``appended[s] <= R`` tokens (single-token
+        :meth:`append` sub-steps or one :meth:`append_tokens`) from length
+        ``lengths[s]``, keep the first ``keep[s]`` and make the rest vanish
+        — live blocks and residual windows end bitwise identical to having
+        appended only the kept prefix (the tested invariant).
+
+        Token ``j`` of the append landed at window position
+        ``(L + j) % R``, so position ``p`` is restored from the snapshot iff
+        its token index ``(p - L%R) % R`` falls in ``[keep, appended)`` —
+        this truncates the speculative window tail AND, when the rolled-back
+        region wrapped past a flush, re-exposes the old partial group the
+        wrap overwrote. The group flush fires at token index
+        ``j_f = R-1 - L%R``; iff ``j_f`` is itself rejected the snapshot
+        block scatters back to its physical id ("unflush"), while a flush in
+        the KEPT prefix encoded exactly the serial flush-moment bytes and
+        must stand. Slots with nothing to unflush scatter their stale
+        snapshot copy to :data:`SCRATCH_BLOCK` (garbage by contract) — no
+        per-slot control flow.
+
+        ``lengths [max_slots]`` i32 PRE-append lengths (the ones the
+        snapshot was taken at); ``keep/appended [max_slots]`` i32 with
+        ``0 <= keep <= appended <= R``.
+        """
+        r = self.group_size
+        lengths = lengths.astype(jnp.int32)
+        keep = keep.astype(jnp.int32)
+        appended = appended.astype(jnp.int32)
+        base = jnp.mod(lengths, r)                        # [S]
+        p = jnp.arange(r)[None, :]                        # window positions
+        jmap = jnp.mod(p - base[:, None], r)              # token that wrote p
+        restore = (jmap >= keep[:, None]) & (jmap < appended[:, None])
+        rm = restore[:, None, :, None]                    # [S, 1, r, 1]
+        k_res = jnp.where(rm, snap["k_res"], self.k_res)
+        v_res = jnp.where(rm, snap["v_res"], self.v_res)
+
+        j_f = r - 1 - base                 # sub-step that flushed, if reached
+        unflush = (j_f >= keep) & (j_f < appended)
+        bids = jnp.where(unflush, snap["bids"], SCRATCH_BLOCK)
+
+        def put(arr, saved):
+            if arr.ndim <= 1:
+                return arr
+            return arr.at[bids].set(saved)
+
+        return dataclasses.replace(
+            self,
+            k_codes=put(self.k_codes, snap["k_codes"]),
+            k_scale=put(self.k_scale, snap["k_scale"]),
+            k_zero=put(self.k_zero, snap["k_zero"]),
+            v_codes=put(self.v_codes, snap["v_codes"]),
+            v_scale=put(self.v_scale, snap["v_scale"]),
+            v_zero=put(self.v_zero, snap["v_zero"]),
+            k_res=k_res, v_res=v_res)
+
+    def rollback_spec(self, snap: dict, undo: jax.Array) -> "PagedKVPool":
+        """Undo a speculative :meth:`append_tokens` WHOLESALE for the slots
+        in ``undo`` — post-rollback state is bitwise identical to never
+        having appended. The ``keep = 0, appended = R`` corner of
+        :meth:`rollback_tail`: every window position reverts and the
+        snapshot block scatters back unconditionally (a no-op rewrite of
+        identical bytes when no flush happened).
+
+        ``undo [max_slots]`` bool. Only valid for appends of at most
+        ``group_size`` tokens since the snapshot (one flush max — see
+        :meth:`snapshot_spec`).
+        """
+        undo = undo.astype(bool)
+        zero = jnp.zeros(undo.shape, jnp.int32)
+        return self.rollback_tail(
+            snap, zero, zero, jnp.where(undo, self.group_size, 0))
+
     # ------------------------------------------------------------- dequant
     def gather_dequant(self, page_table: jax.Array, dtype=jnp.bfloat16):
         """Materialize per-slot (K̂, V̂) ``[max_slots, Hkv, P·R, D]`` by
@@ -356,6 +532,30 @@ class PagedKVPool:
         res_bytes = int(np.prod(self.k_res.shape[1:])) * \
             self.k_res.dtype.itemsize
         return fetched * self.block_bytes() + 2 * len(lens) * res_bytes
+
+    def verify_stream_bytes(self, lengths, n_tokens: int,
+                            q_tiles: int = 1) -> int:
+        """Analytic HBM bytes ONE fused decode-verify launch streams for
+        per-slot committed token counts ``lengths`` and ``n_tokens``
+        (= speculate_k + 1) query/window tokens per slot: live packed
+        context blocks (same aliasing rules as :meth:`decode_stream_bytes`)
+        plus every slot's residual window plus its full-precision
+        ``n_tokens``-token candidate K/V tile. The amortization story in
+        one number: verifying k+1 tokens re-streams the pool ONCE, where
+        k+1 single-token decodes stream it k+1 times — the benchmark
+        reports this ratio alongside wall-clock
+        (``benchmarks/kernels_micro.run_verify``)."""
+        import numpy as np
+
+        lens = np.asarray(lengths)
+        r = self.group_size
+        fetched = int(np.sum(np.maximum(lens // r, 1)))
+        hkv = self.k_res.shape[1]
+        res_bytes = int(np.prod(self.k_res.shape[1:])) * \
+            self.k_res.dtype.itemsize
+        win = hkv * n_tokens * self.head_dim * self.k_res.dtype.itemsize
+        return q_tiles * (fetched * self.block_bytes()
+                          + 2 * len(lens) * (res_bytes + win))
 
     def prefill_stream_bytes(self, ctx_lens, chunk: int,
                              q_tiles: int = 1) -> int:

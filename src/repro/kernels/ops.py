@@ -134,6 +134,46 @@ def qdecode_paged_attention(q: jax.Array, pool, page_table: jax.Array,
     return out.reshape(b, 1, h, d).astype(q.dtype)
 
 
+def qverify_paged_attention(q: jax.Array, pool, page_table: jax.Array,
+                            lengths: jax.Array, k_win: jax.Array,
+                            v_win: jax.Array, win_lens: jax.Array,
+                            interpret: bool | None = None) -> jax.Array:
+    """Fused speculative-verify attention over the shared paged pool.
+
+    q [S, K1, H, hd] — K1 = speculate_k + 1 candidate-token queries per
+    slot (post-rope); ``pool`` is a ``repro.cache.paged.PagedKVPool``;
+    page_table [S, P]; lengths [S] i32 committed tokens per slot (main +
+    residual; pass 0 for dead lanes); k_win/v_win [S, Hkv, K1, D]
+    full-precision candidate K/V; win_lens [S] i32 live candidate tokens
+    (K1, or 0 for dead lanes). ONE Pallas launch per layer scores every
+    candidate position against live pool blocks + the residual window +
+    the causal candidate window — the decode-verify dispatch of the
+    speculative engine. Returns [S, K1, H, hd].
+    """
+    from repro.cache.paged import PagedKVPool  # noqa: F401 (doc/type only)
+
+    interpret = default_interpret() if interpret is None else interpret
+    s, k1, h, d = q.shape
+    hkv = pool.k_res.shape[1]
+    g = h // hkv
+    # flatten (window_pos, q_head) window-position-major: row = c·G + g
+    qg = q.reshape(s, k1, hkv, g, d).transpose(0, 2, 1, 3, 4) \
+        .reshape(s, hkv, k1 * g, d)
+    k_mode, v_mode = _kv_modes(pool.mode)
+    r = pool.group_size
+    n_main = (lengths // r * r).astype(jnp.int32)
+
+    out = qprefill_kernel.qverify_paged(
+        qg, pool.k_codes, pool.k_scale, pool.k_zero,
+        pool.v_codes, pool.v_scale, pool.v_zero,
+        pool.k_res, pool.v_res, k_win, v_win, page_table,
+        n_main, lengths - n_main, win_lens,
+        k_bits=pool.k_bits, v_bits=pool.v_bits, k_mode=k_mode, v_mode=v_mode,
+        group_size=r, interpret=interpret)
+    return out.reshape(s, hkv, k1, g, d).transpose(0, 2, 1, 3, 4) \
+        .reshape(s, k1, h, d).astype(q.dtype)
+
+
 def qprefill_paged_attention(q: jax.Array, pool, page_table: jax.Array,
                              ctx_lens: jax.Array, k_chunk: jax.Array,
                              v_chunk: jax.Array, chunk_lens: jax.Array,

@@ -226,3 +226,204 @@ def qprefill_paged(q, k_codes, k_scale, k_zero, v_codes, v_scale, v_zero,
     )(page_table.astype(jnp.int32), n_ctx, n_chunk,
       q, k_codes, k_scale, k_zero, v_codes, v_scale, v_zero,
       k_chunk, v_chunk)
+
+
+# ============================================================ decode-verify
+def _qverify_kernel(pt_ref, nctx_ref, nres_ref, nwin_ref, q_ref, kc_ref,
+                    ks_ref, kz_ref, vc_ref, vs_ref, vz_ref, kr_ref, vr_ref,
+                    kw_ref, vw_ref, o_ref, acc_sc, m_sc, l_sc, *, k_bits,
+                    v_bits, k_mode, v_mode, group_size, g, block_q, win, d):
+    s_idx = pl.program_id(0)
+    qt = pl.program_id(2)
+    j = pl.program_id(3)
+    r = group_size
+    live = nctx_ref[s_idx] // r  # this slot's live context block count
+
+    @pl.when(j == 0)
+    def _init():
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+        m_sc[...] = jnp.full_like(m_sc, NEG)
+        l_sc[...] = jnp.zeros_like(l_sc)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # [Bq, D]
+
+    def _online(scores, valid, v):
+        scores = jnp.where(valid, scores, NEG)
+        m_prev, l_prev = m_sc[...], l_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new) * valid.astype(jnp.float32)
+        acc_sc[...] = acc_sc[...] * alpha + p @ v
+        l_sc[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        m_sc[...] = m_new
+
+    @pl.when(j < live)
+    def _ctx_block():
+        # in-range steps score one packed context block; out-of-range steps'
+        # index maps alias the slot's last live block (no fresh DMA) and
+        # skip compute — work ∝ committed tokens, not pool capacity
+        k = _dequant_block(kc_ref, ks_ref, kz_ref, k_bits, k_mode,
+                           group_size, d)
+        scores = (q @ k.T) / jnp.sqrt(float(d))  # [Bq, R]
+        pos = j * r + jax.lax.broadcasted_iota(jnp.int32, (1, r), 1)
+        valid = pos < nctx_ref[s_idx]
+        v = _dequant_block(vc_ref, vs_ref, vz_ref, v_bits, v_mode,
+                           group_size, d)
+        _online(scores, valid, v)
+
+    @pl.when(j == pl.num_programs(3) - 2)
+    def _residual():
+        # second-to-last step: the committed partial group lives in the bf16
+        # residual window (the kernel never streams a partial pool block)
+        kr = kr_ref[0, 0].astype(jnp.float32)  # [R, D]
+        scores = (q @ kr.T) / jnp.sqrt(float(d))
+        valid = jax.lax.broadcasted_iota(jnp.int32, (1, r), 1) \
+            < nres_ref[s_idx]
+        _online(scores, valid, vr_ref[0, 0].astype(jnp.float32))
+
+    @pl.when(j == pl.num_programs(3) - 1)
+    def _window_and_store():
+        # final step: the full-precision candidate window [current, k drafts]
+        # folds in causally (verify position c sees drafts <= c) and the
+        # normalized output stores. Dead lanes (all counts 0) emit zeros.
+        kw = kw_ref[0, 0].astype(jnp.float32)  # [K1, D]
+        scores = (q @ kw.T) / jnp.sqrt(float(d))  # [Bq, K1]
+        qpos = (qt * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, win), 0)) // g
+        kpos = jax.lax.broadcasted_iota(jnp.int32, (block_q, win), 1)
+        valid = (kpos <= qpos) & (kpos < nwin_ref[s_idx])
+        scores = jnp.where(valid, scores, NEG)
+
+        m_prev, l_prev = m_sc[...], l_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new) * valid.astype(jnp.float32)
+        acc = acc_sc[...] * alpha + p @ vw_ref[0, 0].astype(jnp.float32)
+        l_tot = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        o_ref[0, 0] = acc / jnp.maximum(l_tot, 1e-20)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "k_bits", "v_bits", "k_mode", "v_mode", "group_size", "block_q",
+    "interpret"))
+def qverify_paged(q, k_codes, k_scale, k_zero, v_codes, v_scale, v_zero,
+                  k_res, v_res, k_win, v_win, page_table, n_ctx, n_res,
+                  n_win, *, k_bits: int, v_bits: int, k_mode: str,
+                  v_mode: str, group_size: int = 32,
+                  block_q: int = DEFAULT_BLOCK_Q,
+                  interpret: bool | None = None):
+    """Fused speculative-verify attention: K1 = k+1 candidate tokens per
+    slot score against the slot's ENTIRE committed context — live packed
+    pool blocks, then the bf16 residual window, then the full-precision
+    candidate window itself as the final causal block — in ONE Pallas
+    launch with one normalized output. The decode-shaped sibling of
+    :func:`qprefill_paged`: same scalar-prefetch page-table streaming, same
+    index-map clamping and ``pl.when`` dead-lane masking, but lengths are
+    arbitrary (not group-aligned), so the committed partial group rides in
+    via the residual stage exactly as in ``qdecode_paged``.
+
+    The amortization this buys: one launch re-streams each live block once
+    to score K1 query positions, where K1 single-token decode launches
+    stream the same blocks K1 times — the HBM-bound win speculative decode
+    exists for.
+
+    q [S, Hkv, K1·G, D] — candidate queries flattened window-position-major
+    (row = c·G + g); pool codes [N, Hkv, R, D·bits/8] (raw dtype when
+    bits >= 16); k_res/v_res [S, Hkv, R, D] per-slot residual windows;
+    k_win/v_win [S, Hkv, K1, D] full-precision post-rope candidate K/V;
+    page_table [S, P] i32; n_ctx [S] i32 committed tokens in pool blocks
+    (multiples of R — pass ``lengths // R * R``); n_res [S] i32 committed
+    residual tokens (``lengths - n_ctx``); n_win [S] i32 live candidate
+    tokens (K1, or 0 for a dead lane). Returns normalized attention output
+    [S, Hkv, K1·G, D] f32; dead-lane rows are exact zeros.
+    """
+    interpret = resolve_interpret(interpret)
+    s, hkv, cg, d = q.shape
+    win = k_win.shape[2]
+    assert cg % win == 0, (cg, win)
+    g = cg // win
+    r = group_size
+    assert k_codes.shape[2] == r, (k_codes.shape, r)
+    assert k_res.shape == (s, hkv, r, d), (k_res.shape, (s, hkv, r, d))
+    assert k_win.shape == (s, hkv, win, d), (k_win.shape, (s, hkv, win, d))
+    block_q = pick_block_q(cg, block_q, g)
+    nq = cg // block_q
+
+    n_ctx = n_ctx.astype(jnp.int32)
+    n_res = n_res.astype(jnp.int32)
+    n_win = n_win.astype(jnp.int32)
+    live_pages = n_ctx // r
+    max_live = jnp.maximum(jnp.max(live_pages), 0)
+
+    def block_at(pt, nc, s_, j):
+        """Clamp out-of-range context steps to the slot's last live block
+        (already resident → no DMA), as in the prefill/decode kernels."""
+        live = nc[s_] // r
+        return pt[s_, jnp.minimum(j, jnp.maximum(live - 1, 0))]
+
+    def seg_specs(bits, mode):
+        cd = d if bits >= 16 else d * bits // 8
+        cspec = pl.BlockSpec(
+            (1, 1, r, cd),
+            lambda s_, h, qt, j, pt, nc, nr, nw:
+                (block_at(pt, nc, s_, j), h, 0, 0))
+        if bits >= 16:
+            dummy = pl.BlockSpec(
+                (1,), lambda s_, h, qt, j, pt, nc, nr, nw: (0,))
+            return cspec, dummy, dummy
+        if mode == MODE_PER_CHANNEL:
+            sspec = pl.BlockSpec(
+                (1, 1, 1, 1, d),
+                lambda s_, h, qt, j, pt, nc, nr, nw:
+                    (block_at(pt, nc, s_, j), h, 0, 0, 0))
+        else:
+            gg = min(group_size, d)
+            sspec = pl.BlockSpec(
+                (1, 1, r, d // gg, 1),
+                lambda s_, h, qt, j, pt, nc, nr, nw:
+                    (block_at(pt, nc, s_, j), h, 0, 0, 0))
+        return cspec, sspec, sspec
+
+    kc_spec, ks_spec, kz_spec = seg_specs(k_bits, k_mode)
+    vc_spec, vs_spec, vz_spec = seg_specs(v_bits, v_mode)
+    q_spec = pl.BlockSpec((1, 1, block_q, d),
+                          lambda s_, h, qt, j, pt, nc, nr, nw: (s_, h, qt, 0))
+    res_spec = pl.BlockSpec((1, 1, r, d),
+                            lambda s_, h, qt, j, pt, nc, nr, nw:
+                                (s_, h, 0, 0))
+    win_spec = pl.BlockSpec((1, 1, win, d),
+                            lambda s_, h, qt, j, pt, nc, nr, nw:
+                                (s_, h, 0, 0))
+
+    kernel = functools.partial(
+        _qverify_kernel, k_bits=k_bits, v_bits=v_bits, k_mode=k_mode,
+        v_mode=v_mode, group_size=group_size, g=g, block_q=block_q, win=win,
+        d=d)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,  # (page_table, n_ctx, n_res, n_win)
+        grid=(s, hkv, nq, max_live + 2),
+        in_specs=[
+            q_spec,
+            kc_spec, ks_spec, kz_spec, vc_spec, vs_spec, vz_spec,
+            res_spec, res_spec, win_spec, win_spec,
+        ],
+        out_specs=q_spec,
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s, hkv, cg, d), jnp.float32),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), n_ctx, n_res, n_win,
+      q, k_codes, k_scale, k_zero, v_codes, v_scale, v_zero,
+      k_res, v_res, k_win, v_win)

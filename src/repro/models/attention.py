@@ -400,6 +400,74 @@ def paged_decode_attention(params, cfg, x, pool, page_table, lengths, alive,
     return y, new_pool
 
 
+# ------------------------------------------------------------ paged verify
+def paged_verify_attention(params, cfg, x, pool, page_table, lengths, alive,
+                           theta: float, use_pallas: bool = False):
+    """Speculative-verify attention: score K1 = speculate_k + 1 candidate
+    tokens per slot against the slot's committed context in one pass,
+    WITHOUT writing the pool — commit happens after acceptance, via
+    ``PagedKVPool.append_tokens`` (the sampling/commit split of the
+    speculative engine; rejected candidates never touch pool state).
+
+    x [max_slots, K1, D] — embedded ``[current, draft_1..draft_k]`` per
+    slot; lengths [max_slots] i32 committed tokens (pre-verify); alive
+    [max_slots] bool (dead lanes are fully masked and produce finite
+    garbage the engine ignores). Candidate position c attends the
+    committed context plus candidates ``<= c`` — exactly what c serial
+    decode steps would see, at the same RoPE positions. Candidate K/V
+    round-trips through the residual-window dtype before attention so the
+    scores match what the serial step computes after storing the token in
+    the window (bitwise the same key bytes).
+
+    Returns (attn_out [max_slots, K1, D], (k_t, v_t) [max_slots, Hkv, K1, D]
+    post-rope candidate KV for the later commit).
+    """
+    s, k1, _ = x.shape
+    hd = cfg.head_dim
+    lengths = lengths.astype(jnp.int32)
+    positions = lengths[:, None] + jnp.arange(k1)[None, :]
+    q, k_new, v_new = qkv(params, cfg, x, positions, theta)
+    k_t = k_new.transpose(0, 2, 1, 3)   # [S, Hkv, K1, D]
+    v_t = v_new.transpose(0, 2, 1, 3)
+    k_att = k_t.astype(pool.k_res.dtype)
+    v_att = v_t.astype(pool.v_res.dtype)
+    live_len = jnp.where(alive, lengths, 0)
+    win_lens = jnp.where(alive, k1, 0).astype(jnp.int32)
+
+    if use_pallas:
+        from repro.kernels import ops as kops
+        out = kops.qverify_paged_attention(
+            q, pool, page_table, live_len, k_att, v_att,
+            win_lens).astype(x.dtype)
+    else:
+        r = pool.group_size
+        live = _concrete_live_pages(live_len, r)
+        pt = page_table if live is None else page_table[:, :live]
+        k_ctx, v_ctx = pool.gather_dequant(pt, x.dtype)
+        k_cat = jnp.concatenate([k_ctx, pool.k_res.astype(x.dtype),
+                                 k_att.astype(x.dtype)], axis=2)
+        v_cat = jnp.concatenate([v_ctx, pool.v_res.astype(x.dtype),
+                                 v_att.astype(x.dtype)], axis=2)
+        s_main = k_ctx.shape[2]
+        n_main = live_len // r * r
+        n_res = live_len - n_main
+        ii = jnp.arange(s_main + r + k1)[None, None, :]
+        qi = jnp.arange(k1)[None, :, None]
+        valid = jnp.where(
+            ii < s_main, ii < n_main[:, None, None],
+            jnp.where(ii < s_main + r,
+                      (ii - s_main) < n_res[:, None, None],
+                      ((ii - s_main - r) <= qi)
+                      & ((ii - s_main - r) < win_lens[:, None, None])))
+        bias = jnp.where(valid, 0.0, NEG_INF)[:, None]          # [S,1,K1,S']
+        sc = _scores(q, k_cat.transpose(0, 2, 1, 3), cfg) + bias
+        p = jax.nn.softmax(sc, axis=-1)
+        out = _weighted_v(p, v_cat.transpose(0, 2, 1, 3), cfg).astype(x.dtype)
+
+    y = out.reshape(s, k1, cfg.num_heads * hd) @ params["wo"]
+    return y, (k_t, v_t)
+
+
 # ------------------------------------------------------------ paged prefill
 def paged_prefill_attention(params, cfg, x, pool, pt_row, slot, ctx_len: int,
                             positions, theta: float,

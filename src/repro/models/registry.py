@@ -64,6 +64,11 @@ class ModelApi:
         return tfm.paged_decode_loop(params, self.cfg, state, token, alive,
                                      remaining, eos_ids, rng, **kw)
 
+    def paged_spec_step(self, params, state, tokens, drafts, n_draft, alive,
+                        remaining, eos_ids, **kw):
+        return tfm.paged_spec_step(params, self.cfg, state, tokens, drafts,
+                                   n_draft, alive, remaining, eos_ids, **kw)
+
     # ------------------------------------------------------------ dry-run
     def input_specs(self, cell: ShapeCell) -> dict:
         """ShapeDtypeStruct stand-ins for every model input of this cell.

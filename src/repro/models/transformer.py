@@ -771,6 +771,155 @@ def paged_decode_loop(params, cfg: ModelConfig, state: PagedDecodeState,
     return state, toks, emitted, rng
 
 
+def _spec_accept(nxt, drafts, n_draft, alive, remaining, eos_ids):
+    """Longest greedy-consistent accepted prefix + emission mask, shared by
+    both verification backends. ``nxt [S, K1]`` greedy outputs per candidate
+    position. Returns (counts [S] i32, emitted [S, K1] bool)."""
+    k = drafts.shape[1]
+    k1 = k + 1
+    if k:
+        match = (drafts == nxt[:, :k]) \
+            & (jnp.arange(k)[None, :] < n_draft[:, None])
+        matched = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1),
+                          axis=1)
+    else:
+        matched = jnp.zeros(nxt.shape[0], jnp.int32)
+    pos = jnp.arange(k1)[None, :]
+    eos_pos = jnp.min(jnp.where(nxt == eos_ids[:, None], pos, k1), axis=1)
+    m = jnp.minimum(jnp.minimum(matched + 1, eos_pos + 1),
+                    jnp.maximum(remaining, 1))
+    counts = jnp.where(alive, m, 0)
+    emitted = alive[:, None] & (pos < counts[:, None])
+    return counts, emitted
+
+
+def paged_spec_step(params, cfg: ModelConfig, state: PagedDecodeState,
+                    tokens, drafts, n_draft, alive, remaining, eos_ids,
+                    use_pallas: bool = False, fused: bool = False):
+    """One speculative draft–verify–commit step over all serving slots —
+    sampling is split from state commit: verification scores every
+    candidate, acceptance picks the longest greedy-consistent prefix, and
+    rejected candidates' KV is rolled back bitwise.
+
+    Two verification backends:
+
+    * default (``fused=False``): ``k+1`` serial-shaped
+      :func:`paged_decode_step` sub-steps run inside the ONE dispatch — a
+      device-side scan, so the host still syncs once per draft–verify–commit
+      round. Each sub-step is the exact op/shape sequence of a plain decode
+      step, so accepted tokens are **bitwise identical by construction** to
+      serial decode (kernel on or off); the rejected tail's pool writes are
+      reverted by :meth:`PagedKVPool.rollback_tail` against per-layer
+      :meth:`~PagedKVPool.snapshot_spec` snapshots. The win is amortizing
+      the per-token host round-trip (the dominant small-batch cost), not
+      the forward FLOPs.
+    * ``fused=True``: ONE ``[S, k+1]``-wide forward scores all candidate
+      positions in a single pass over the quantized pool
+      (:func:`~repro.models.attention.paged_verify_attention`; Pallas
+      ``qverify_paged`` or the XLA oracle), committing accepted KV via
+      :meth:`~PagedKVPool.append_tokens` — fewer pool passes, but the wide
+      matmuls are only numerically (not bitwise) equal to serial steps, so
+      greedy outputs can diverge at near-tie argmaxes over long horizons.
+
+    tokens [max_slots] i32 — each slot's current token (KV not yet
+    appended, the engine convention); drafts [max_slots, k] i32 candidate
+    continuations; n_draft [max_slots] i32 live drafts per slot (0 = no
+    match: the slot degenerates to a normal one-token decode inside the
+    same dispatch); alive [max_slots] bool; remaining [max_slots] i32
+    emission budget per slot (>= 1 for live slots); eos_ids [max_slots]
+    i32 per-slot EOS (-1 = none).
+
+    Per slot the step emits ``m = min(matched_prefix + 1, first_eos + 1,
+    remaining)`` tokens — accepted candidate c+1 IS the greedy output of
+    position c, and EOS/budget cut the accepted prefix exactly where the
+    serial loop's liveness mask would stop. The last emitted token's KV is
+    NOT appended — it is the next step's input.
+
+    Returns (new_state, out_tokens [max_slots, k+1], emitted
+    [max_slots, k+1] bool). ``out_tokens[s, c]`` is meaningful where
+    ``emitted[s, c]``; ``emitted[s].sum()`` tokens were committed.
+    """
+    k = drafts.shape[1]
+    k1 = k + 1
+    tokens = tokens.astype(jnp.int32)
+    drafts = drafts.astype(jnp.int32)
+    n_draft = n_draft.astype(jnp.int32)
+    remaining = remaining.astype(jnp.int32)
+    inputs = jnp.concatenate([tokens[:, None], drafts], axis=1)  # [S, K1]
+
+    if fused:
+        return _paged_spec_step_fused(
+            params, cfg, state, inputs, drafts, n_draft, alive, remaining,
+            eos_ids, use_pallas=use_pallas)
+
+    lengths0 = state.lengths
+    snaps = [None if pool is None else
+             pool.snapshot_spec(lengths0, state.page_table)
+             for pool in state.pools]
+
+    def body(st, xs):
+        inp_c, c = xs
+        sub_alive = alive & (c <= n_draft)
+        logits, st = paged_decode_step(params, cfg, st, inp_c[:, None],
+                                       sub_alive, use_pallas=use_pallas)
+        return st, jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    st, outs = jax.lax.scan(
+        body, state, (inputs.T, jnp.arange(k1, dtype=jnp.int32)))
+    nxt = outs.T                                          # [S, K1] greedy
+
+    counts, emitted = _spec_accept(nxt, drafts, n_draft, alive, remaining,
+                                   eos_ids)
+    appended = jnp.where(alive, n_draft + 1, 0)
+    new_pools = list(st.pools)
+    for i, snap in enumerate(snaps):
+        if snap is not None:
+            new_pools[i] = new_pools[i].rollback_tail(
+                snap, lengths0, counts, appended)
+    new_state = dataclasses.replace(
+        st, pools=new_pools, lengths=lengths0 + counts)
+    return new_state, nxt, emitted
+
+
+def _paged_spec_step_fused(params, cfg: ModelConfig, state: PagedDecodeState,
+                           inputs, drafts, n_draft, alive, remaining,
+                           eos_ids, use_pallas: bool = False):
+    """Fused verification backend of :func:`paged_spec_step`: one
+    ``[S, K1]``-wide forward scores all candidate positions without touching
+    the pool, then only accepted tokens' KV is appended
+    (:meth:`PagedKVPool.append_tokens`) — rejected drafts vanish without any
+    state to roll back."""
+    x = params["embed"][inputs]
+    x = shard_hint(x, "batch", "seq", "d_model")
+    kinds = cfg.layer_kinds()
+    stash: list = [None] * len(kinds)
+    for i, kind in enumerate(kinds):
+        p = layer_params_at(params, cfg, i)
+        if kind not in (ATTN_GLOBAL, ATTN_LOCAL):
+            raise NotImplementedError(f"paged verify: layer kind {kind!r}")
+        h = common.rms_norm(x, p["ln1"], cfg.norm_eps)
+        y, stash[i] = attention.paged_verify_attention(
+            p["attn"], cfg, h, state.pools[i], state.page_table,
+            state.lengths, alive, _rope_theta(cfg, kind),
+            use_pallas=use_pallas)
+        x = x + y
+        x, _ = _ffn_sublayer(p, cfg, x, i)
+    logits = unembed(params, cfg, x)                      # [S, K1, V]
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # [S, K1] greedy
+
+    counts, emitted = _spec_accept(nxt, drafts, n_draft, alive, remaining,
+                                   eos_ids)
+    new_pools = list(state.pools)
+    for i, kv in enumerate(stash):
+        if kv is not None:
+            k_t, v_t = kv
+            new_pools[i] = new_pools[i].append_tokens(
+                k_t, v_t, state.lengths, counts, state.page_table)
+    new_state = dataclasses.replace(
+        state, pools=new_pools, lengths=state.lengths + counts)
+    return new_state, nxt, emitted
+
+
 def init_decode_state(cfg: ModelConfig, schedule, batch: int, capacity: int,
                       extra_groups: int = 4, filled_to: int | None = None):
     """Fresh (or pretend-prefilled, for dry-runs) decode state."""

@@ -1,0 +1,69 @@
+"""Draft-token proposers for speculative decode.
+
+The engine's verify pass (``models.transformer.paged_spec_step``) accepts
+any candidate source — acceptance keeps only the longest greedy-consistent
+prefix, so a bad draft costs one wasted verify lane, never a wrong token.
+``Drafter`` is the host-side protocol a draft model can later plug into;
+the default is **prompt lookup** (model-free n-gram matching, in the spirit
+of "Prompt Lookup Decoding" / REST): the request's own history — prompt
+plus everything generated so far — doubles as the n-gram table, which is
+exactly right for the shared-template serving workloads where speculation
+pays (templated few-shot prompts, retrieved context, code with repeated
+identifiers).
+
+Drafting runs on host between device dispatches: the engine must sync for
+emitted tokens every speculative step anyway, so the numpy suffix match
+rides in that gap and costs no device time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+
+@runtime_checkable
+class Drafter(Protocol):
+    """Per-slot candidate proposer. ``history`` is the request's prompt
+    followed by every token generated so far (1-D int array, the last
+    entry being the token about to be fed to the model); returns up to
+    ``k`` draft continuations (int32, possibly empty — an empty draft
+    degrades that slot to normal one-token decode for the step)."""
+
+    def draft(self, history: np.ndarray, k: int) -> np.ndarray:
+        ...
+
+
+@dataclasses.dataclass
+class PromptLookupDrafter:
+    """Model-free n-gram drafter: find an earlier occurrence of the
+    history's trailing n-gram and propose the tokens that followed it.
+    Tries ``max_ngram`` down to ``min_ngram`` (longer matches are more
+    specific, so they win); among same-length matches the one with the
+    LONGEST continuation wins, most recent on ties — a hit near the end of
+    history may be followed by only a token or two, and every unfilled
+    draft lane is a verify lane wasted, so an older full-``k`` occurrence
+    beats a newer truncated one. Vectorized with a sliding-window view —
+    one numpy pass per n-gram size, no python loop over positions."""
+
+    max_ngram: int = 3
+    min_ngram: int = 1
+
+    def draft(self, history: np.ndarray, k: int) -> np.ndarray:
+        h = np.ascontiguousarray(np.asarray(history).ravel())
+        empty = np.zeros(0, np.int32)
+        if k <= 0 or len(h) < 2:
+            return empty
+        hi = min(self.max_ngram, len(h) - 1)
+        for n in range(hi, self.min_ngram - 1, -1):
+            suffix = h[-n:]
+            # windows over h[:-1]: every match has >= 1 continuation token,
+            # and the trailing n-gram cannot match itself
+            wins = np.lib.stride_tricks.sliding_window_view(h[:-1], n)
+            hits = np.nonzero((wins == suffix).all(axis=1))[0]
+            if len(hits):
+                cont = np.minimum(len(h) - (hits + n), k)
+                p = int(hits[cont == cont.max()][-1])
+                return h[p + n:p + n + k].astype(np.int32)
+        return empty

@@ -97,6 +97,16 @@ class EngineStats:
     # count one each; serial paged prefill one per request; batched
     # admission one per chunk wave (the number the batched path shrinks)
     prefill_dispatches: int = 0
+    # speculative decode accounting (continuous engine, speculate_k > 0):
+    # a verify dispatch commits a VARIABLE number of tokens, so throughput
+    # math must count committed tokens, never dispatches × slots
+    spec_steps: int = 0             # draft→verify→commit dispatches
+    drafted_tokens: int = 0         # candidate tokens proposed by the drafter
+    accepted_tokens: int = 0        # drafted tokens that were committed
+    # committed tokens per live slot per spec dispatch (>= 1 each: the
+    # verify of position 0 is a normal decode step) — p50/p95 below
+    accepted_lengths: list = dataclasses.field(default_factory=list,
+                                               repr=False)
     # per-decode-step wall clock (seconds); multi-step horizons contribute
     # their per-step average so percentiles stay per-token-step
     step_wall_times: list = dataclasses.field(default_factory=list,
@@ -159,10 +169,30 @@ class EngineStats:
     def decode_tokens_per_s(self) -> float:
         """Aggregate decode-emitted tokens/s over decode-step wall time only
         (prefill-sampled admission tokens and host scheduling excluded — the
-        kernel-facing throughput number)."""
+        kernel-facing throughput number). ``decode_tokens`` counts actual
+        committed tokens, so multi-token speculative commits are credited
+        at their true count, not one-per-step-per-slot."""
         if not self.step_wall_times:
             return 0.0
         return self.decode_tokens / max(sum(self.step_wall_times), 1e-9)
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of drafted tokens the verify pass committed."""
+        return self.accepted_tokens / max(self.drafted_tokens, 1)
+
+    @property
+    def accepted_len_p50(self) -> float:
+        """Median committed tokens per live slot per verify dispatch."""
+        if not self.accepted_lengths:
+            return 0.0
+        return float(np.percentile(np.asarray(self.accepted_lengths), 50))
+
+    @property
+    def accepted_len_p95(self) -> float:
+        if not self.accepted_lengths:
+            return 0.0
+        return float(np.percentile(np.asarray(self.accepted_lengths), 95))
 
 
 # ==================================================================== wave
@@ -320,6 +350,25 @@ class ContinuousEngine:
       prefill + recorded-token replay, still token-identical). ``preempt``
       overrides the default (e.g. recompute-only preemption with no host
       tier).
+    * ``speculate_k`` turns on speculative multi-token decode: a host-side
+      ``Drafter`` (default: model-free prompt lookup over each request's own
+      prompt + generated tokens, ``repro.serving.draft``) proposes up to k
+      candidates per live slot, ONE device dispatch verifies all k+1
+      positions against the quantized pool, and the longest
+      greedy-consistent prefix is accepted — 1..k+1 tokens per request per
+      dispatch, token-identical with ``speculate_k=0``. The default backend
+      scans k+1 serial-shaped decode sub-steps inside the dispatch (bitwise
+      = plain decode by construction) and **rolls back** the rejected
+      tail's KV bitwise (``PagedKVPool.rollback_tail`` against pre-step
+      snapshots — rejected tokens vanish from windows and blocks alike);
+      ``fused_verify=True`` instead scores all k+1 positions in one wide
+      forward pass (Pallas ``qverify_paged`` or its XLA oracle) and commits
+      only accepted KV — fewer pool passes, but wide-matmul rounding may
+      diverge from serial decode at near-tie argmaxes. Either way the
+      post-step pool state is exactly the accepted prefix's, so preemption,
+      prefix sharing and the host tier compose unchanged. Requires greedy
+      decoding and ``speculate_k + 1 <= R`` (a commit flushes at most one
+      quant group).
 
     Restrictions (v1): attention-only stacks with global (non-windowed)
     attention; see ``repro.cache.paged``.
@@ -333,7 +382,8 @@ class ContinuousEngine:
                  prefill_chunk: int | None = None, decode_horizon: int = 1,
                  batched_admission: bool = False,
                  scheduler="fcfs", host_blocks: int = 0,
-                 preempt: bool | None = None):
+                 preempt: bool | None = None, speculate_k: int = 0,
+                 drafter=None, fused_verify: bool = False):
         cfg = api.cfg
         self.api = api
         self.params = params
@@ -424,6 +474,28 @@ class ContinuousEngine:
         # chunk wave instead of per request
         self._wave = jax.jit(
             partial(api.prefill_paged_wave, use_pallas=use_pallas),
+            donate_argnums=(1,))
+        # speculative decode: acceptance is greedy-consistency, and the
+        # single-flush rollback bound requires a whole speculative commit
+        # (k accepted drafts + 1 bonus token) to fit in one quant group
+        if speculate_k < 0:
+            raise ValueError(f"speculate_k ({speculate_k}) must be >= 0")
+        if speculate_k:
+            if not greedy:
+                raise ValueError(
+                    "speculate_k requires greedy decoding (acceptance keeps "
+                    "the longest greedy-consistent draft prefix)")
+            if speculate_k + 1 > self.group_size:
+                raise ValueError(
+                    f"speculate_k + 1 ({speculate_k + 1}) must be <= the "
+                    f"quant group size ({self.group_size})")
+        self.speculate_k = speculate_k
+        self.fused_verify = fused_verify
+        from repro.serving.draft import PromptLookupDrafter
+        self.drafter = drafter if drafter is not None else PromptLookupDrafter()
+        self._spec = jax.jit(
+            partial(api.paged_spec_step, use_pallas=use_pallas,
+                    fused=fused_verify),
             donate_argnums=(1,))
 
     # ------------------------------------------------------------- intake
@@ -931,7 +1003,9 @@ class ContinuousEngine:
             for i in live:
                 tokens[i] = self._current[i]
                 alive[i] = True
-            if self.decode_horizon == 1:
+            if self.speculate_k:
+                self._run_spec(live, tokens, alive)
+            elif self.decode_horizon == 1:
                 ts = time.time()
                 logits, self.state = self._step(
                     self.params, self.state, jnp.asarray(tokens[:, None]),
@@ -974,6 +1048,62 @@ class ContinuousEngine:
             for i in live:
                 if emitted[t, i]:
                     self._emit(i, self._slots[i], int(toks[t, i]))
+
+    def _run_spec(self, live, tokens, alive) -> None:
+        """Up to ``decode_horizon`` speculative dispatches: draft k
+        candidates per live slot on host, verify all k+1 positions in one
+        fused pass, then commit + emit each slot's accepted
+        greedy-consistent prefix (1..k+1 tokens per dispatch). The host
+        must sync every dispatch anyway — accepted tokens feed the next
+        round of drafting — so the horizon composes as H sequential
+        dispatches between admission checks, not one fused device loop."""
+        k = self.speculate_k
+        for _ in range(self.decode_horizon):
+            drafts = np.zeros((self.max_batch, k), np.int32)
+            n_draft = np.zeros(self.max_batch, np.int32)
+            remaining = np.zeros(self.max_batch, np.int32)
+            eos = np.full(self.max_batch, -1, np.int32)
+            for i in live:
+                req = self._slots[i]
+                remaining[i] = req.max_new_tokens - len(req.output)
+                if req.eos_id is not None:
+                    eos[i] = req.eos_id
+                hist = np.concatenate(
+                    [np.asarray(req.prompt, np.int32),
+                     np.asarray(req.output, np.int32)])
+                d = np.asarray(self.drafter.draft(hist, k),
+                               np.int32).ravel()[:k]
+                drafts[i, :len(d)] = d
+                n_draft[i] = len(d)
+            ts = time.time()
+            self.state, toks, emitted = self._spec(
+                self.params, self.state, jnp.asarray(tokens),
+                jnp.asarray(drafts), jnp.asarray(n_draft),
+                jnp.asarray(alive), jnp.asarray(remaining), jnp.asarray(eos))
+            toks = np.asarray(toks)          # [max_batch, k+1]
+            emitted = np.asarray(emitted)    # [max_batch, k+1] bool
+            self.stats.record_step_wall(time.time() - ts)
+            counts = emitted.sum(axis=1)
+            self._step_count += 1
+            self.stats.decode_steps += 1
+            self.stats.spec_steps += 1
+            self.stats.decode_tokens += int(counts.sum())
+            for i in live:
+                self.stats.drafted_tokens += int(n_draft[i])
+                self.stats.accepted_tokens += int(counts[i]) - 1
+                self.stats.accepted_lengths.append(int(counts[i]))
+                for t in range(int(counts[i])):
+                    self._emit(i, self._slots[i], int(toks[i, t]))
+                    if self._slots[i] is None:
+                        break       # EOS/limit is always the last accepted
+            live = [i for i in live if self._slots[i] is not None]
+            if not live:
+                return
+            tokens = np.zeros(self.max_batch, np.int32)
+            alive = np.zeros(self.max_batch, bool)
+            for i in live:
+                tokens[i] = self._current[i]
+                alive[i] = True
 
     def _sample(self, logits: jax.Array) -> jax.Array:
         if self.greedy:

@@ -1,0 +1,425 @@
+"""Speculative multi-token decode tests.
+
+Covers the draft–verify–commit engine end-to-end: prompt-lookup drafting,
+multi-token pool commit (``append_tokens``) bitwise-identical to sequential
+appends, speculative snapshot/rollback bitwise-identical to never having
+appended (including a group-boundary flush mid-speculation), the fused
+verify kernel's parity with the XLA oracle, greedy token-identity of
+``speculate_k > 0`` against plain decode across engine configurations
+(kernel on/off, horizon, prefix cache, batched admission,
+preemption-under-overload), EOS landing mid-accepted-prefix, and the
+speculative stats/byte accounting.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cache.paged import SCRATCH_BLOCK, PagedKVPool
+from repro.configs.base import ModelConfig
+from repro.core.precision import (MODE_KIVI, MODE_PER_TOKEN, KVTunerSchedule,
+                                  PrecisionPair)
+from repro.models import attention
+from repro.models.registry import build_model
+from repro.models.transformer import layer_params_at
+from repro.serving.draft import Drafter, PromptLookupDrafter
+from repro.serving.engine import ContinuousEngine, Request
+
+jax.config.update("jax_platform_name", "cpu")
+
+R = 8   # small quant group → flushes inside short speculative runs
+
+
+# ============================================================== drafting
+def test_prompt_lookup_basic_match():
+    d = PromptLookupDrafter(max_ngram=3)
+    h = np.array([1, 2, 3, 9, 9, 1, 2, 3], np.int32)
+    # trailing 3-gram [1,2,3] recurs at the start; continuation is [9, 9, 1]
+    np.testing.assert_array_equal(d.draft(h, 3), [9, 9, 1])
+    # k truncates the proposal
+    np.testing.assert_array_equal(d.draft(h, 1), [9])
+
+
+def test_prompt_lookup_most_recent_occurrence_wins():
+    d = PromptLookupDrafter(max_ngram=2)
+    h = np.array([5, 6, 1, 5, 6, 2, 5, 6], np.int32)
+    # [5,6] occurs at 0 (→1) and 3 (→2); the later occurrence wins
+    np.testing.assert_array_equal(d.draft(h, 1), [2])
+
+
+def test_prompt_lookup_falls_back_to_shorter_ngram():
+    d = PromptLookupDrafter(max_ngram=3)
+    h = np.array([7, 1, 2, 9, 4, 1, 2], np.int32)
+    # no earlier [4,1,2] / [1,2]→ at 1 continues with 9
+    np.testing.assert_array_equal(d.draft(h, 2), [9, 4])
+
+
+def test_prompt_lookup_no_match_and_degenerate():
+    d = PromptLookupDrafter()
+    assert d.draft(np.array([1, 2, 3, 4], np.int32), 2).size == 0
+    assert d.draft(np.array([1], np.int32), 2).size == 0
+    assert d.draft(np.array([], np.int32), 2).size == 0
+    assert d.draft(np.array([1, 1, 1], np.int32), 0).size == 0
+    assert isinstance(d, Drafter)
+
+
+# ===================================================== pool: multi-append
+ARRAYS = ("k_codes", "k_scale", "k_zero", "v_codes", "v_scale", "v_zero",
+          "k_res", "v_res")
+
+
+def _pool_state(pair=(4, 4), mode=MODE_PER_TOKEN, seed=3):
+    """Two-slot pool with committed lengths [6, 3] (both mid-group)."""
+    hkv, d = 2, 16
+    pool = PagedKVPool.init(num_blocks=6, max_slots=2, kv_heads=hkv,
+                            head_dim=d, pair=PrecisionPair(*pair), mode=mode,
+                            group_size=R)
+    pt = jnp.array([[1, 2, 3, 0], [4, 5, 0, 0]], jnp.int32)
+    rng = np.random.default_rng(seed)
+
+    def rnd(k):
+        return jnp.asarray(rng.standard_normal((2, hkv, k, d)), jnp.float32)
+
+    lens = jnp.array([0, 0], jnp.int32)
+    for i in range(6):
+        alive = jnp.array([True, i < 3])
+        pool = pool.append(rnd(1), rnd(1), lens, alive, pt)
+        lens = lens + alive.astype(jnp.int32)
+    return pool, pt, lens, rnd
+
+
+def _diff(a, b, skip_block0=True):
+    """Field names whose arrays differ. ``skip_block0`` drops the scratch
+    block (id 0), whose contents are garbage by contract."""
+    bad = []
+    for n in ARRAYS:
+        x, y = jnp.asarray(getattr(a, n)), jnp.asarray(getattr(b, n))
+        if x.ndim > 1 and skip_block0:
+            x, y = x[SCRATCH_BLOCK + 1:], y[SCRATCH_BLOCK + 1:]
+        if not bool(jnp.array_equal(x, y)):
+            bad.append(n)
+    return bad
+
+
+@pytest.mark.parametrize("pair,mode", [((4, 4), MODE_PER_TOKEN),
+                                       ((8, 4), MODE_KIVI)])
+def test_append_tokens_matches_sequential_appends_bitwise(pair, mode):
+    pool, pt, lens, rnd = _pool_state(pair, mode)
+    kt, vt = rnd(4), rnd(4)
+    counts = jnp.array([3, 4], jnp.int32)   # slot1 crosses no boundary,
+    multi = pool.append_tokens(kt, vt, lens, counts, pt)
+    seq, cur = pool, lens
+    for i in range(4):
+        alive = counts > i
+        seq = seq.append(kt[:, :, i:i + 1], vt[:, :, i:i + 1], cur, alive, pt)
+        cur = cur + alive.astype(jnp.int32)
+    # every live block + both residual windows bitwise; only the scratch
+    # block (garbage by contract) may differ from the sequential loop
+    assert _diff(multi, seq) == []
+
+
+def test_append_tokens_zero_count_is_noop():
+    pool, pt, lens, rnd = _pool_state()
+    out = pool.append_tokens(rnd(3), rnd(3), lens,
+                             jnp.array([0, 0], jnp.int32), pt)
+    assert _diff(out, pool) == []
+
+
+# ================================================== pool: snapshot/rollback
+def test_rollback_bitwise_across_group_boundary():
+    """Append 4 from lengths [6, 3]: slot 0 crosses 8 and flushes block 1
+    mid-speculation; rollback must unflush it — post-rollback state is
+    bitwise the never-appended pool."""
+    pool, pt, lens, rnd = _pool_state()
+    snap = pool.snapshot_spec(lens, pt)
+    appended = pool.append_tokens(rnd(4), rnd(4), lens,
+                                  jnp.array([4, 4], jnp.int32), pt)
+    # the flush really happened (block 1 changed) — then vanishes
+    assert "k_codes" in _diff(appended, pool)
+    back = appended.rollback_spec(snap, jnp.array([True, True]))
+    assert _diff(back, pool) == []
+
+
+def test_rollback_partial_undo_mask():
+    """Undoing only slot 0 must equal a run where slot 0 never appended
+    while slot 1 appended the same tokens."""
+    pool, pt, lens, rnd = _pool_state()
+    kt, vt = rnd(4), rnd(4)
+    snap = pool.snapshot_spec(lens, pt)
+    both = pool.append_tokens(kt, vt, lens, jnp.array([4, 4], jnp.int32), pt)
+    undone = both.rollback_spec(snap, jnp.array([True, False]))
+    only1 = pool.append_tokens(kt, vt, lens, jnp.array([0, 4], jnp.int32), pt)
+    assert _diff(undone, only1) == []
+
+
+def test_rollback_noop_when_nothing_appended():
+    pool, pt, lens, _ = _pool_state()
+    snap = pool.snapshot_spec(lens, pt)
+    back = pool.rollback_spec(snap, jnp.array([True, True]))
+    assert _diff(back, pool) == []
+
+
+def _append_seq(pool, lens, pt, kt, vt, counts):
+    """Serial single-token appends — the sub-step commit path of the scan
+    verify backend."""
+    cur = lens
+    for j in range(kt.shape[2]):
+        alive = jnp.asarray(np.asarray(counts) > j)
+        pool = pool.append(kt[:, :, j:j + 1], vt[:, :, j:j + 1], cur, alive,
+                           pt)
+        cur = cur + alive.astype(jnp.int32)
+    return pool
+
+
+@pytest.mark.parametrize("keep", [(0, 0), (1, 1), (2, 3), (4, 2), (5, 3)])
+def test_rollback_tail_bitwise_vs_keep_only_appends(keep):
+    """Serial-append 5/3 tokens from lengths [6, 3] (slot 0's flush fires
+    at sub-step j_f=1, then wraps into the next group), then roll back all
+    but ``keep``: the result must be bitwise the pool that only ever
+    appended the kept prefix — covering unflush (flush in the rejected
+    tail, keep<=1 for slot 0), flush-stands (flush in the kept prefix,
+    keep>=2), wrapped-window restore, and the full/no-op corners."""
+    pool, pt, lens, rnd = _pool_state()
+    kt, vt = rnd(5), rnd(5)
+    appended = (5, 3)
+    snap = pool.snapshot_spec(lens, pt)
+    full = _append_seq(pool, lens, pt, kt, vt, appended)
+    assert "k_codes" in _diff(full, pool)       # the flush really happened
+    rolled = full.rollback_tail(snap, lens, jnp.asarray(keep, jnp.int32),
+                                jnp.asarray(appended, jnp.int32))
+    ref = _append_seq(pool, lens, pt, kt, vt, keep)
+    assert _diff(rolled, ref) == []
+
+
+# ================================================= verify kernel parity
+@pytest.mark.parametrize("pair,mode", [((4, 4), MODE_PER_TOKEN),
+                                       ((8, 4), MODE_KIVI)])
+def test_verify_attention_kernel_matches_oracle(pair, mode):
+    """Fused ``qverify_paged`` (interpret mode) vs the gather/dense oracle,
+    over ragged lengths including an empty-context lane and a dead lane."""
+    cfg = ModelConfig(name="verify-par", family="dense", num_layers=1,
+                      d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+                      vocab_size=61, q_chunk=16, kv_group_size=R)
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(1))
+    p = layer_params_at(params, cfg, 0)["attn"]
+
+    s, k1, hkv, d = 3, 3, 2, cfg.head_dim
+    pool = PagedKVPool.init(num_blocks=10, max_slots=s, kv_heads=hkv,
+                            head_dim=d, pair=PrecisionPair(*pair), mode=mode,
+                            group_size=R)
+    pt = jnp.asarray(1 + np.arange(s * 3).reshape(s, 3), jnp.int32)
+    rng = np.random.default_rng(11)
+    lens = jnp.array([13, 0, 5], jnp.int32)     # ragged; lane 1 empty
+    cur = jnp.zeros(s, jnp.int32)
+    for i in range(13):
+        alive = jnp.asarray(np.arange(s) * 0 + 1, bool) & (cur < lens)
+        kv = [jnp.asarray(rng.standard_normal((s, hkv, 1, d)), jnp.float32)
+              for _ in range(2)]
+        pool = pool.append(kv[0], kv[1], cur, alive, pt)
+        cur = cur + alive.astype(jnp.int32)
+    x = jnp.asarray(rng.standard_normal((s, k1, cfg.d_model)), jnp.float32)
+    alive = jnp.array([True, True, False])
+
+    y_ref, (kr, vr) = attention.paged_verify_attention(
+        p, cfg, x, pool, pt, lens, alive, 10000.0, use_pallas=False)
+    y_ker, (kk, vk) = attention.paged_verify_attention(
+        p, cfg, x, pool, pt, lens, alive, 10000.0, use_pallas=True)
+    live = np.asarray(alive)
+    np.testing.assert_allclose(np.asarray(y_ker)[live],
+                               np.asarray(y_ref)[live],
+                               rtol=3e-5, atol=3e-5)
+    # candidate KV for the commit is path-independent
+    np.testing.assert_array_equal(np.asarray(kr), np.asarray(kk))
+    np.testing.assert_array_equal(np.asarray(vr), np.asarray(vk))
+
+
+# =========================================================== engine fixtures
+@pytest.fixture(scope="module")
+def tiny_api():
+    cfg = ModelConfig(name="spec-tiny", family="dense", num_layers=2,
+                      d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+                      vocab_size=61, q_chunk=16, kv_group_size=R)
+    return build_model(cfg)
+
+
+@pytest.fixture(scope="module")
+def tiny_params(tiny_api):
+    return tiny_api.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def sched():
+    return KVTunerSchedule.uniform(2, PrecisionPair(8, 4))
+
+
+def _workload(seed=1, n=6, max_new=10, eos_id=None):
+    rng = np.random.default_rng(seed)
+    tpl = rng.integers(1, 60, 16)
+    prompts = [np.concatenate([tpl, rng.integers(1, 60, 1 + i % 4)])
+               for i in range(n)]
+    return [Request(uid=i, prompt=p.astype(np.int32), max_new_tokens=max_new,
+                    eos_id=eos_id) for i, p in enumerate(prompts)]
+
+
+def _run(engine, reqs):
+    for r in reqs:
+        engine.submit(r)
+    done = sorted(engine.run(), key=lambda r: r.uid)
+    engine.alloc.assert_consistent()
+    return [list(r.output) for r in done]
+
+
+def _engine(api, params, sched, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_seq", 64)
+    return ContinuousEngine(api, params, sched, **kw)
+
+
+@pytest.fixture(scope="module")
+def reference(tiny_api, tiny_params, sched):
+    """Plain (speculate_k=0) greedy outputs every spec config must match."""
+    return _run(_engine(tiny_api, tiny_params, sched), _workload())
+
+
+# ====================================================== engine: identity
+@pytest.mark.parametrize("kw", [
+    dict(speculate_k=2),
+    dict(speculate_k=4),
+    dict(speculate_k=2, use_pallas=True),
+    dict(speculate_k=2, decode_horizon=3),
+    dict(speculate_k=2, batched_admission=True),
+    dict(speculate_k=2, prefix_cache=True),
+    dict(speculate_k=3, prefix_cache=True, use_pallas=True,
+         decode_horizon=2),
+    # fused verify is only numerically (not bitwise) serial-equivalent, so
+    # its identity is asserted on the short-horizon workload only
+    dict(speculate_k=2, fused_verify=True),
+], ids=["k2", "k4", "k2-pallas", "k2-horizon3", "k2-batched", "k2-prefix",
+        "k3-all", "k2-fused"])
+def test_speculative_token_identity(tiny_api, tiny_params, sched,
+                                    reference, kw):
+    """The acceptance property: speculation changes throughput, never
+    tokens — greedy outputs are identical to ``speculate_k=0`` for every
+    engine composition."""
+    eng = _engine(tiny_api, tiny_params, sched, **kw)
+    assert _run(eng, _workload()) == reference
+    s = eng.stats
+    assert s.spec_steps > 0 and s.drafted_tokens > 0
+    assert 0.0 <= s.acceptance_rate <= 1.0
+    # every commit emits at least the guaranteed token
+    assert s.accepted_lengths and min(s.accepted_lengths) >= 1
+    assert max(s.accepted_lengths) <= kw["speculate_k"] + 1
+
+
+def test_speculative_with_preemption_under_overload(tiny_api, tiny_params,
+                                                    sched):
+    """Speculation composes with host-tier preemption: an undersized pool
+    forces swap-out mid-run (never observing a speculative tail — rejected
+    KV is rolled back inside the dispatch, before the host ever sees the
+    state) and the resumed requests finish token-identically."""
+    def work():
+        rng = np.random.default_rng(5)
+        tpl = rng.integers(1, 60, 24)
+        prompts = [np.concatenate([tpl, rng.integers(1, 60, 5)])
+                   for _ in range(6)]
+        return [Request(uid=i, prompt=p.astype(np.int32),
+                        max_new_tokens=[12, 12, 6, 6, 5, 5][i],
+                        arrival_step=[0, 0, 3, 5, 8, 11][i],
+                        priority=[0, 0, 2, 3, 4, 5][i])
+                for i, p in enumerate(prompts)]
+
+    base = _run(_engine(tiny_api, tiny_params, sched, prefix_cache=True,
+                        prefill_chunk=16, scheduler="priority"), work())
+    eng = _engine(tiny_api, tiny_params, sched, prefix_cache=True,
+                  prefill_chunk=16, scheduler="priority", speculate_k=2,
+                  num_blocks=14, host_blocks=10)
+    assert _run(eng, work()) == base
+    assert eng.stats.preemptions > 0 and eng.stats.resumes > 0
+    assert eng.stats.spec_steps > 0
+
+
+class OracleDrafter:
+    """Test-only drafter that proposes the reference continuation for the
+    request's history — forces full acceptance so EOS-handling inside an
+    accepted prefix is actually exercised."""
+
+    def __init__(self, refs):
+        self.refs = refs   # list of (prompt, full_output) pairs
+
+    def draft(self, history, k):
+        for prompt, out in self.refs:
+            full = np.concatenate([prompt, out])
+            n = len(history)
+            if n <= len(full) and np.array_equal(full[:n], history):
+                return full[n:n + k].astype(np.int32)
+        return np.zeros(0, np.int32)
+
+
+def test_eos_mid_accepted_prefix(tiny_api, tiny_params, sched):
+    """With an oracle drafter the EOS token arrives inside an accepted
+    multi-token prefix; the engine must emit it, stop the request there,
+    and not commit (or emit) anything past it."""
+    reqs = _workload(seed=9, n=3, max_new=12)
+    base = _run(_engine(tiny_api, tiny_params, sched), reqs)
+    # pick each request's 4th generated token as its EOS → EOS fires
+    # mid-run, never at the natural budget edge
+    eos = {r.uid: base[r.uid][3] for r in reqs}
+    assert all(base[u].count(t) for u, t in eos.items())
+
+    def with_eos(out, e):
+        return out[:out.index(e) + 1]
+
+    def reqs_eos():
+        return [Request(uid=r.uid, prompt=r.prompt, max_new_tokens=12,
+                        eos_id=eos[r.uid]) for r in _workload(seed=9, n=3)]
+
+    truth = _run(_engine(tiny_api, tiny_params, sched), reqs_eos())
+    assert truth == [with_eos(base[i], eos[i]) for i in range(3)]
+    refs = [(r.prompt, np.asarray(truth[r.uid], np.int32))
+            for r in reqs_eos()]
+    eng = _engine(tiny_api, tiny_params, sched, speculate_k=4,
+                  drafter=OracleDrafter(refs))
+    assert _run(eng, reqs_eos()) == truth
+    # the oracle forces multi-token accepts, so EOS really did land
+    # inside an accepted prefix at least once
+    assert max(eng.stats.accepted_lengths) > 1
+    assert eng.stats.acceptance_rate > 0.5
+
+
+# ======================================================== stats & bytes
+def test_speculative_stats_accounting(tiny_api, tiny_params, sched):
+    eng = _engine(tiny_api, tiny_params, sched, speculate_k=2)
+    outs = _run(eng, _workload(n=4))
+    s = eng.stats
+    total = sum(len(o) for o in outs)
+    assert s.generated_tokens == total
+    # each request's first token is emitted at admission (prefill); every
+    # later one is a decode commit — multi-token commits fully credited
+    assert s.decode_tokens == total - s.admitted
+    assert s.decode_steps == s.spec_steps
+    assert sum(s.accepted_lengths) == s.decode_tokens
+    assert s.accepted_tokens == s.decode_tokens - len(s.accepted_lengths)
+    assert s.accepted_tokens <= s.drafted_tokens
+    assert 1.0 <= s.accepted_len_p50 <= s.accepted_len_p95 <= 3.0
+
+
+def test_verify_stream_bytes_beats_serial_decode():
+    pool, pt, lens, _ = _pool_state()
+    k1 = 3
+    verify = pool.verify_stream_bytes(lens, k1)
+    serial = k1 * pool.decode_stream_bytes(lens)
+    assert 0 < verify < serial
+    # more verify lanes cost only the extra bf16 window, not more blocks
+    assert pool.verify_stream_bytes(lens, 5) - pool.verify_stream_bytes(
+        lens, 4) == pool.verify_stream_bytes(lens, 4) - verify != 0
+
+
+def test_speculate_knob_validation(tiny_api, tiny_params, sched):
+    with pytest.raises(ValueError, match="greedy"):
+        _engine(tiny_api, tiny_params, sched, speculate_k=2, greedy=False)
+    with pytest.raises(ValueError, match="group size"):
+        _engine(tiny_api, tiny_params, sched, speculate_k=R)
+    with pytest.raises(ValueError, match=">= 0"):
+        _engine(tiny_api, tiny_params, sched, speculate_k=-1)
