@@ -29,7 +29,7 @@ def main() -> None:
                             table3_output_error, table4_pruning,
                             table5_accuracy, table8_throughput,
                             table9_error, table10_clustering,
-                            table11_prefix, table12_offload)
+                            table11_prefix, table12_offload, table13_chaos)
 
     print("# KVTuner reproduction benchmarks (paper tables)", flush=True)
     ctx = common.get_bench_model(log=lambda *a: print(*a, flush=True))
@@ -57,6 +57,9 @@ def main() -> None:
         "t12_offload": lambda: table12_offload.run(
             ctx, per_template=2 if args.fast else 4,
             max_new=4 if args.fast else 8),
+        "t13_chaos": lambda: table13_chaos.run(
+            ctx, per_template=2 if args.fast else 4,
+            max_new=6 if args.fast else 10),
         "kernels_micro": lambda: kernels_micro.run(ctx),
         "kernels_paged": lambda: kernels_micro.run_paged(ctx),
         "kernels_prefill": lambda: kernels_micro.run_prefill(ctx),
@@ -73,6 +76,7 @@ def main() -> None:
         "t8_engines": table8_throughput.check_engine_claims,
         "t11_prefix": table11_prefix.check_paper_claims,
         "t12_offload": table12_offload.check_paper_claims,
+        "t13_chaos": table13_chaos.check_paper_claims,
         "kernels_micro": kernels_micro.check_paper_claims,
         "kernels_paged": kernels_micro.check_paged_claims,
         "kernels_prefill": kernels_micro.check_prefill_claims,

@@ -103,6 +103,7 @@ def run(ctx, n_templates: int = 3, per_template: int = 4,
                        "decode_steps": off.decode_steps,
                        "pool_utilization": off.pool_utilization,
                        "pool_high_watermark": off.pool_high_watermark,
+                       "terminal_counts": off.terminal_counts,
                        **_spec_fields(off)},
         "prefix_on": {"prefill_tokens": on.prefill_tokens,
                       "tokens_per_s": on.throughput,
@@ -117,6 +118,7 @@ def run(ctx, n_templates: int = 3, per_template: int = 4,
                       "decode_steps": on.decode_steps,
                       "pool_utilization": on.pool_utilization,
                       "pool_high_watermark": on.pool_high_watermark,
+                      "terminal_counts": on.terminal_counts,
                       "hits": on.prefix_hits, "misses": on.prefix_misses,
                       "hit_tokens": on.prefix_hit_tokens,
                       "evicted_blocks": on.prefix_evicted_blocks,

@@ -122,7 +122,8 @@ def run(ctx, n_templates: int = 3, per_template: int = 4,
                    "host_evicted_blocks": s.host_evicted_blocks,
                    "pool_high_watermark": s.pool_high_watermark,
                    "host_utilization": s.host_utilization,
-                   "host_resident_bytes": tier.host.stored_bytes()},
+                   "host_resident_bytes": tier.host.stored_bytes(),
+                   "terminal_counts": s.terminal_counts},
         "completed": {"unconstrained": sum(q.done for q in base_done),
                       "tiered": sum(q.done for q in tier_done),
                       "submitted": len(prompts)},

@@ -141,7 +141,8 @@ def run_engines(ctx, n_requests: int = 10, max_new: int = 8,
                        "pool_utilization": cont.stats.pool_utilization,
                        "pool_high_watermark":
                            cont.stats.pool_high_watermark,
-                       "decode_compilations": cont.decode_compilations},
+                       "decode_compilations": cont.decode_compilations,
+                       "terminal_counts": cont.stats.terminal_counts},
         "outputs_identical": all(
             w.output == c.output for w, c in zip(wave_done, cont_done)),
     }

@@ -33,6 +33,12 @@ import numpy as np
 LayerBlock = tuple
 
 
+class HostStoreError(RuntimeError):
+    """A host-tier transfer failed (injected or real): the requested bytes
+    could not be read back. Callers fall back — drop the unreachable prefix
+    chain, or demote the parked request to recompute-from-prompt."""
+
+
 def _live_pools(pools) -> list:
     return [p for p in pools if p is not None]
 
@@ -160,6 +166,12 @@ class HostBlockStore:
         self._store: dict[int, list[LayerBlock]] = {}
         self._refs: dict[int, int] = {}
         self._next = 0
+        #: fault-injection hook: ``hook(op, n) -> bool`` with ``op`` in
+        #: {"put", "get"}; True fails the call — ``put_blocks`` returns
+        #: ``None`` (the capacity-full signal every caller already handles)
+        #: and ``take_to_device`` raises :class:`HostStoreError`, both
+        #: BEFORE any bytes move or refcounts change
+        self.fault_hook = None
 
     def __len__(self) -> int:
         return len(self._store)
@@ -187,6 +199,8 @@ class HostBlockStore:
             return None
         if not bids:
             return []
+        if self.fault_hook is not None and self.fault_hook("put", len(bids)):
+            return None
         payloads = extract_blocks(pools, bids)
         handles = []
         for pl in payloads:
@@ -201,12 +215,21 @@ class HostBlockStore:
         """Swap host blocks back into device blocks ``dst_bids`` (one batched
         transfer); returns the new pools. Handles stay resident (and
         referenced) — the caller releases them once the swap-in is final."""
+        handles = list(handles)
+        if handles and self.fault_hook is not None \
+                and self.fault_hook("get", len(handles)):
+            raise HostStoreError(
+                f"injected host-tier read failure ({len(handles)} blocks)")
         payloads = [self._payload(h) for h in handles]
         return scatter_blocks(pools, payloads, dst_bids)
 
     # ------------------------------------------------------------ refcounts
     def refcount(self, handle: int) -> int:
         return self._refs.get(handle, 0)
+
+    def handle_refcounts(self) -> dict[int, int]:
+        """Snapshot of every live handle's refcount (audit hook)."""
+        return dict(self._refs)
 
     def ref(self, handles) -> None:
         for h in handles:

@@ -634,6 +634,11 @@ class BlockAllocator:
         self._free = list(range(num_blocks - 1, 0, -1))
         self._refs = [0] * num_blocks
         self.high_watermark = 0
+        #: fault-injection hook: ``hook(n) -> bool``; True makes this
+        #: ``alloc`` report exhaustion (``None``) without taking blocks —
+        #: the same signal a genuinely dry pool sends, so every caller's
+        #: backpressure path (eviction, preemption, stall) is exercised
+        self.fault_hook = None
 
     @property
     def free_blocks(self) -> int:
@@ -676,6 +681,8 @@ class BlockAllocator:
             return None
         if n == 0:
             return []
+        if self.fault_hook is not None and self.fault_hook(n):
+            return None
         taken = self._free[-n:][::-1]
         del self._free[len(self._free) - n:]
         for b in taken:

@@ -275,6 +275,25 @@ class PrefixCache:
             self._drop(node)
         return min(n, len(hst))
 
+    def iter_nodes(self):
+        """Iterate every cached node across both tiers, parents before
+        children (audit hook — the engine-wide invariant auditor walks the
+        tree to reconstruct expected block/handle refcounts)."""
+        stack = list(self.root.children.values())
+        while stack:
+            n = stack.pop()
+            yield n
+            stack.extend(n.children.values())
+
+    def drop_chain(self, node: PrefixNode) -> None:
+        """Unlink ``node`` and free its whole subtree immediately — the
+        failure path for a host-resident chain whose bytes became
+        unreachable (a faulted store read): the next longest-prefix match
+        then stops at the device-resident part instead of retrying the dead
+        handles forever. Host nodes never have device-resident descendants
+        (insert promotes ancestors first), so the cascade is tier-safe."""
+        self._drop(node)
+
     def evict_lru(self, pools=None) -> int:
         """Reclaim the least-recently-used evictable leaf's device block;
         1 if freed, else 0. Pass ``pools`` to spill it into an attached

@@ -391,10 +391,17 @@ def paged_decode_attention(params, cfg, x, pool, page_table, lengths, alive,
         valid = jnp.where(idx[None, :] < s_main,
                           idx[None, :] < n_main[:, None],
                           (idx[None, :] - s_main) < (eff_len - n_main)[:, None])
-        bias = jnp.where(valid, 0.0, NEG_INF)[:, None, None, :]  # [B,1,1,S']
-        s = _scores(q, k_full.transpose(0, 2, 1, 3), cfg) + bias
+        # select, don't add: a masked position must be inert even when the
+        # gathered bytes are non-finite (a freed slot's stale page-table
+        # entry may alias a block another request later corrupts; additive
+        # NEG_INF bias would propagate its NaN into this slot's softmax,
+        # and an unmasked NaN value row would poison the weighted sum)
+        s = jnp.where(valid[:, None, None, :],                    # [B,1,1,S']
+                      _scores(q, k_full.transpose(0, 2, 1, 3), cfg), NEG_INF)
         p = jax.nn.softmax(s, axis=-1)
-        out = _weighted_v(p, v_full.transpose(0, 2, 1, 3), cfg).astype(x.dtype)
+        v_t = jnp.where(valid[:, :, None, None],                # [B,S',1,1]
+                        v_full.transpose(0, 2, 1, 3), 0.0)
+        out = _weighted_v(p, v_t, cfg).astype(x.dtype)
 
     y = out.reshape(b, 1, cfg.num_heads * hd) @ params["wo"]
     return y, new_pool
@@ -459,10 +466,15 @@ def paged_verify_attention(params, cfg, x, pool, page_table, lengths, alive,
                       (ii - s_main) < n_res[:, None, None],
                       ((ii - s_main - r) <= qi)
                       & ((ii - s_main - r) < win_lens[:, None, None])))
-        bias = jnp.where(valid, 0.0, NEG_INF)[:, None]          # [S,1,K1,S']
-        sc = _scores(q, k_cat.transpose(0, 2, 1, 3), cfg) + bias
+        # select, don't add — see paged_decode_attention: masked positions
+        # must stay inert even over non-finite gathered bytes
+        sc = jnp.where(valid[:, None],                          # [S,1,K1,S']
+                       _scores(q, k_cat.transpose(0, 2, 1, 3), cfg), NEG_INF)
         p = jax.nn.softmax(sc, axis=-1)
-        out = _weighted_v(p, v_cat.transpose(0, 2, 1, 3), cfg).astype(x.dtype)
+        dead_key = ~valid.any(axis=1)                           # [S, S']
+        v_sel = jnp.where(dead_key[:, :, None, None],           # [S,S',1,1]
+                          0.0, v_cat.transpose(0, 2, 1, 3))
+        out = _weighted_v(p, v_sel, cfg).astype(x.dtype)
 
     y = out.reshape(s, k1, cfg.num_heads * hd) @ params["wo"]
     return y, (k_t, v_t)

@@ -1,0 +1,134 @@
+"""Engine-wide invariant auditor: leak & aliasing detection across tiers.
+
+``BlockAllocator.assert_consistent`` checks the allocator against itself
+(free list vs refcounts). This module extends that to the whole engine:
+it *reconstructs* the reference count every device block and host handle
+ought to have from the structures that are supposed to hold references —
+
+* live slots' page lists (own blocks + pinned prefix chains),
+* parked (preempted) requests' swap entries (device pins + host handles),
+* the prefix tree's device- and host-resident nodes,
+
+and cross-checks them against what the allocator and host store actually
+record, plus the host-side page-table mirror and the device cached-length
+row of every live slot. Any divergence is a leak (references the engine
+forgot to drop), an alias (two owners claiming the same exclusive
+reference, or a handle pointing at freed bytes), or a stale mapping — the
+failure classes that silently corrupt outputs long before they crash.
+
+Run it directly (``engine.audit()``), or at every host sync with
+``ContinuousEngine(audit=True)`` — cheap enough for tests: pure python over
+host-side bookkeeping plus one ``device_get`` of the lengths vector.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class AuditError(AssertionError):
+    """An engine invariant does not hold (leaked / aliased / stale state)."""
+
+
+def _fail(msg: str) -> None:
+    raise AuditError(msg)
+
+
+def audit_engine(engine) -> dict:
+    """Cross-check allocator refcounts vs page tables vs prefix chains vs
+    host-store entries. Returns a summary dict on success; raises
+    :class:`AuditError` naming the first violated invariant otherwise."""
+    alloc = engine.alloc
+    alloc.assert_consistent()
+
+    # -------- reconstruct expected device-block / host-handle refcounts
+    dev_expect = np.zeros(alloc.num_blocks, np.int64)
+    host_expect: dict[int, int] = {}
+    live_slots = 0
+    for slot, req in enumerate(engine._slots):
+        if req is None:
+            continue
+        live_slots += 1
+        for b in engine._slot_pages[slot]:
+            dev_expect[b] += 1
+    n_parked = 0
+    for uid, parked in engine._parked.items():
+        if parked.entries is None:
+            continue          # recompute-parked: holds no tier state
+        n_parked += 1
+        for kind, v in parked.entries:
+            if kind == "dev":
+                dev_expect[v] += 1
+            else:
+                host_expect[v] = host_expect.get(v, 0) + 1
+    tree_dev = tree_host = 0
+    if engine.prefix is not None:
+        for node in engine.prefix.iter_nodes():
+            if node.on_device:
+                tree_dev += 1
+                dev_expect[node.block] += 1
+            else:
+                tree_host += 1
+                if node.host is None:
+                    _fail(f"prefix node {node.key!r} is host-resident but "
+                          "has no host handle")
+                host_expect[node.host] = host_expect.get(node.host, 0) + 1
+
+    # ------------------------------------------------- device-block check
+    if dev_expect[0]:
+        _fail(f"scratch block 0 is referenced {dev_expect[0]}x (slots / "
+              "parked entries / prefix nodes must never hold it)")
+    for b in range(1, alloc.num_blocks):
+        actual = alloc.refcount(b)
+        if actual != dev_expect[b]:
+            kind = "leaked" if actual > dev_expect[b] else "aliased/dangling"
+            _fail(f"device block {b} {kind}: allocator refcount {actual}, "
+                  f"but slots+parked+prefix account for {dev_expect[b]} "
+                  "references")
+
+    # ------------------------------------------------- host-handle check
+    if engine.host is not None:
+        actual_refs = engine.host.handle_refcounts()
+        for h, n in host_expect.items():
+            if h not in actual_refs:
+                _fail(f"host handle {h} dangling: referenced {n}x by "
+                      "parked/prefix state but absent from the store")
+            if actual_refs[h] != n:
+                kind = "leaked" if actual_refs[h] > n else "aliased"
+                _fail(f"host handle {h} {kind}: store refcount "
+                      f"{actual_refs[h]}, engine accounts for {n}")
+        for h, n in actual_refs.items():
+            if h not in host_expect:
+                _fail(f"host handle {h} leaked: store refcount {n}, but no "
+                      "parked entry or prefix node references it")
+    elif host_expect:
+        _fail("engine has no host store, yet parked/prefix state holds "
+              f"host handles {sorted(host_expect)}")
+
+    # ------------------------------ page-table mirror + cached lengths
+    lengths = np.asarray(engine.state.lengths)
+    for slot, req in enumerate(engine._slots):
+        if req is None or slot in engine._reserved:
+            continue
+        pages = engine._slot_pages[slot]
+        row = engine._pt[slot, :len(pages)]
+        if list(row) != list(pages):
+            _fail(f"slot {slot} page-table row {list(row)} diverges from "
+                  f"its page list {list(pages)}")
+        if req.output:           # admitted and decoding: length invariant
+            want = len(req.prompt) + len(req.output) - 1
+            if int(lengths[slot]) != want:
+                _fail(f"slot {slot} cached length {int(lengths[slot])} != "
+                      f"prompt+output-1 ({want}) for request {req.uid}")
+            if want // engine.group_size + 1 > len(pages):
+                _fail(f"slot {slot} holds {len(pages)} blocks but needs "
+                      f"{want // engine.group_size + 1} for its cached "
+                      f"length {want}")
+
+    return {
+        "device_blocks_live": int(alloc.allocated_blocks),
+        "host_handles_live": 0 if engine.host is None else len(engine.host),
+        "live_slots": live_slots,
+        "swap_parked": n_parked,
+        "prefix_device_nodes": tree_dev,
+        "prefix_host_nodes": tree_host,
+    }

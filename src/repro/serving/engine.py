@@ -22,6 +22,19 @@ layer's cache ops lower with **static** per-layer precision ("no online
 decision overhead", paper §5). Throughput accounting mirrors the paper's
 Table 8 definition: generated tokens per second end-to-end, including
 quantization/dequantization work.
+
+The continuous engine additionally carries the **request-lifecycle /
+fault-tolerance layer** (see ``docs/paged_pool.md``, "Failure modes &
+request lifecycle"): per-request deadlines (``Request.deadline_step``),
+client cancellation (:meth:`ContinuousEngine.cancel`), graceful drain
+(:meth:`ContinuousEngine.drain`), bounded-queue overload shedding
+(``max_waiting``), NaN/Inf logit quarantine (``guard_nan``), deterministic
+fault injection (``faults`` — ``repro.serving.faults``) and an engine-wide
+invariant auditor (``audit`` — ``repro.serving.audit``). Every request ends
+in exactly one terminal status::
+
+    QUEUED -> PREFILLING -> DECODING -> {DONE, CANCELLED, TIMED_OUT,
+                                         SHED, FAILED}
 """
 from __future__ import annotations
 
@@ -37,6 +50,25 @@ import numpy as np
 from repro.core.precision import KVTunerSchedule
 
 
+class RequestStatus:
+    """Request lifecycle states. ``QUEUED -> PREFILLING -> DECODING`` while
+    in flight (preemption loops a request back to ``QUEUED``); exactly one
+    of the ``TERMINAL`` states ends it. ``DONE`` is the only terminal state
+    that also sets ``Request.done`` — everything else is a failure mode the
+    engine survived."""
+
+    QUEUED = "queued"
+    PREFILLING = "prefilling"
+    DECODING = "decoding"
+    DONE = "done"
+    CANCELLED = "cancelled"      # client cancel()
+    TIMED_OUT = "timed_out"      # deadline_step passed before completion
+    SHED = "shed"                # dropped by overload shedding or drain
+    FAILED = "failed"            # quarantined (NaN/corruption) or stalled
+
+    TERMINAL = frozenset({DONE, CANCELLED, TIMED_OUT, SHED, FAILED})
+
+
 @dataclasses.dataclass(eq=False)  # identity semantics: prompts are ndarrays
 class Request:
     uid: int
@@ -45,9 +77,19 @@ class Request:
     eos_id: int | None = None
     arrival_step: int = 0        # decode-step index when the request arrives
     priority: int = 0            # higher wins under the 'priority' scheduler
+    # absolute decode-step deadline (TTL): the request must COMPLETE before
+    # the engine's step counter reaches this value, or it is timed out at
+    # the next host sync and its blocks/host state released. None = no TTL.
+    deadline_step: int | None = None
     # filled by the engine:
     output: list = dataclasses.field(default_factory=list)
     done: bool = False
+    status: str = RequestStatus.QUEUED
+    error: str | None = None     # human-readable cause for non-DONE endings
+
+    @property
+    def terminal(self) -> bool:
+        return self.status in RequestStatus.TERMINAL
 
 
 @dataclasses.dataclass(eq=False)
@@ -72,6 +114,13 @@ class EngineStats:
     waves: int = 0
     decode_steps: int = 0
     admitted: int = 0
+    # request-lifecycle terminal accounting (see RequestStatus)
+    completed: int = 0           # reached DONE
+    cancelled: int = 0           # client cancel()
+    timed_out: int = 0           # deadline/TTL expiry
+    shed: int = 0                # overload shedding / drain
+    failed: int = 0              # FAILED for any reason (quarantine incl.)
+    quarantined: int = 0         # subset of failed: NaN/Inf logit isolation
     # prefix-cache accounting (continuous engine with prefix_cache=True)
     prefix_hits: int = 0
     prefix_misses: int = 0
@@ -131,11 +180,25 @@ class EngineStats:
     def record_admit_latency(self, seconds: float) -> None:
         self.admit_latency_times.append(seconds)
 
+    @property
+    def terminal_counts(self) -> dict:
+        """Terminal-status breakdown — the lifecycle scoreboard surfaced by
+        the table8/table11/table12/table13 reports."""
+        return {"done": self.completed, "cancelled": self.cancelled,
+                "timed_out": self.timed_out, "shed": self.shed,
+                "failed": self.failed, "quarantined": self.quarantined}
+
     @staticmethod
-    def _percentile_ms(values: list, q: float) -> float:
+    def _percentile(values: list, q: float) -> float:
+        """Percentile that is safe on empty samples (0.0, never a raise) so
+        reports from drained or all-shed runs don't crash."""
         if not values:
             return 0.0
-        return float(np.percentile(np.asarray(values), q) * 1e3)
+        return float(np.percentile(np.asarray(values), q))
+
+    @classmethod
+    def _percentile_ms(cls, values: list, q: float) -> float:
+        return cls._percentile(values, q) * 1e3
 
     @property
     def decode_p50_ms(self) -> float:
@@ -184,15 +247,11 @@ class EngineStats:
     @property
     def accepted_len_p50(self) -> float:
         """Median committed tokens per live slot per verify dispatch."""
-        if not self.accepted_lengths:
-            return 0.0
-        return float(np.percentile(np.asarray(self.accepted_lengths), 50))
+        return self._percentile(self.accepted_lengths, 50)
 
     @property
     def accepted_len_p95(self) -> float:
-        if not self.accepted_lengths:
-            return 0.0
-        return float(np.percentile(np.asarray(self.accepted_lengths), 95))
+        return self._percentile(self.accepted_lengths, 95)
 
 
 # ==================================================================== wave
@@ -286,6 +345,8 @@ class ServeEngine:
             self.stats.decode_steps += 1
         for r in wave:
             r.done = True
+            r.status = RequestStatus.DONE
+            self.stats.completed += 1
         self.stats.waves += 1
         self.stats.wall_s += time.time() - t0
 
@@ -370,6 +431,26 @@ class ContinuousEngine:
       decoding and ``speculate_k + 1 <= R`` (a commit flushes at most one
       quant group).
 
+    * **Request lifecycle / fault tolerance**: every request ends in exactly
+      one terminal :class:`RequestStatus`. ``Request.deadline_step`` is an
+      absolute decode-step TTL enforced at every host sync;
+      :meth:`cancel` aborts a request wherever it lives (queued, decoding,
+      swap-parked on the host tier, mid-speculation) releasing its blocks,
+      prefix pins and host handles without disturbing co-scheduled slots;
+      :meth:`drain` stops admission, sheds the waiting queue and finishes
+      live (slot-resident + preemption-parked) work; ``max_waiting`` bounds
+      the arrived-but-waiting queue, shedding the scheduler's worst-ranked
+      waiters (``SHED``) instead of queueing unboundedly; an admission that
+      can make no progress for ``stall_ticks`` consecutive no-live-slot
+      ticks fails THAT request (``FAILED``) instead of raising engine-wide.
+      ``guard_nan=True`` (greedy, ``decode_horizon=1``, no speculation)
+      checks sampled logits for NaN/Inf and quarantines only the poisoned
+      slot — survivors keep decoding token-identically. ``faults`` accepts
+      a :class:`repro.serving.faults.FaultInjector` for deterministic chaos
+      schedules; ``audit=True`` cross-checks allocator refcounts, page
+      tables, prefix chains and host-store entries at every host sync
+      (``repro.serving.audit``).
+
     Restrictions (v1): attention-only stacks with global (non-windowed)
     attention; see ``repro.cache.paged``.
     """
@@ -383,7 +464,9 @@ class ContinuousEngine:
                  batched_admission: bool = False,
                  scheduler="fcfs", host_blocks: int = 0,
                  preempt: bool | None = None, speculate_k: int = 0,
-                 drafter=None, fused_verify: bool = False):
+                 drafter=None, fused_verify: bool = False,
+                 max_waiting: int | None = None, stall_ticks: int = 200,
+                 guard_nan: bool = False, faults=None, audit: bool = False):
         cfg = api.cfg
         self.api = api
         self.params = params
@@ -498,8 +581,57 @@ class ContinuousEngine:
                     fused=fused_verify),
             donate_argnums=(1,))
 
+        # ---------------------------------------- lifecycle / fault layer
+        if max_waiting is not None and max_waiting < 1:
+            raise ValueError(f"max_waiting ({max_waiting}) must be >= 1")
+        if stall_ticks < 1:
+            raise ValueError(f"stall_ticks ({stall_ticks}) must be >= 1")
+        if guard_nan and (decode_horizon > 1 or speculate_k or not greedy):
+            raise ValueError(
+                "guard_nan requires greedy decoding with decode_horizon=1 "
+                "and speculate_k=0 (the quarantine check reads each "
+                "dispatch's logits on the host)")
+        self.max_waiting = max_waiting
+        self.stall_ticks = stall_ticks
+        self.guard_nan = guard_nan
+        self.audit_enabled = audit
+        self._draining = False
+        self._stall = 0                      # consecutive no-progress ticks
+        self._uids: set = set()              # every uid ever submitted
+        self._by_uid: dict[int, Request] = {}
+        self._done: list[Request] = []       # terminal requests, any status
+        self._poison_uids: set = set()       # pending NaN-poison injections
+        self.faults = faults
+        if faults is not None:
+            faults.attach(self)
+
     # ------------------------------------------------------------- intake
     def submit(self, req: Request) -> None:
+        """Validate and enqueue one request. Malformed requests are rejected
+        here with a precise message (never a mid-serve crash); requests
+        submitted while the engine is draining are SHED instead of queued."""
+        if req.uid in self._uids:
+            raise ValueError(
+                f"request {req.uid}: duplicate request id (a request with "
+                "this uid was already submitted to this engine)")
+        if len(req.prompt) == 0:
+            raise ValueError(f"request {req.uid}: empty prompt")
+        if req.max_new_tokens <= 0:
+            raise ValueError(
+                f"request {req.uid}: max_new_tokens "
+                f"({req.max_new_tokens}) must be positive")
+        if req.deadline_step is not None:
+            if req.deadline_step <= self._step_count:
+                raise ValueError(
+                    f"request {req.uid}: deadline_step "
+                    f"({req.deadline_step}) is already in the past — the "
+                    f"engine is at step {self._step_count}")
+            if req.deadline_step <= req.arrival_step:
+                raise ValueError(
+                    f"request {req.uid}: deadline_step "
+                    f"({req.deadline_step}) is at or before its "
+                    f"arrival_step ({req.arrival_step}); it can never "
+                    "complete in time")
         need = self._pages_needed(req)
         if need > self.max_pages:
             raise ValueError(
@@ -510,6 +642,13 @@ class ContinuousEngine:
             raise ValueError(
                 f"request {req.uid}: needs {need} blocks, pool has "
                 f"{self.num_blocks - 1}")
+        self._uids.add(req.uid)
+        self._by_uid[req.uid] = req
+        if self._draining:
+            self._finish(req, RequestStatus.SHED,
+                         "engine is draining: admission stopped")
+            return
+        req.status = RequestStatus.QUEUED
         self._pending.append(req)
 
     def _pages_needed(self, req: Request) -> int:
@@ -523,6 +662,151 @@ class ContinuousEngine:
             return int(self._step._cache_size())
         except AttributeError:  # older jax: one fixed-shape step → 1 compile
             return 1 if self.stats.decode_steps else 0
+
+    # ----------------------------------------------------- lifecycle layer
+    def _finish(self, req: Request, status: str,
+                error: str | None = None) -> None:
+        """Move ``req`` to terminal ``status`` and record it. The single
+        bookkeeping choke point: every request passes through here exactly
+        once, whatever ends it."""
+        req.status = status
+        req.error = error
+        if status == RequestStatus.DONE:
+            req.done = True
+            self.stats.completed += 1
+        elif status == RequestStatus.CANCELLED:
+            self.stats.cancelled += 1
+        elif status == RequestStatus.TIMED_OUT:
+            self.stats.timed_out += 1
+        elif status == RequestStatus.SHED:
+            self.stats.shed += 1
+        elif status == RequestStatus.FAILED:
+            self.stats.failed += 1
+        self._done.append(req)
+
+    def _release_slot(self, slot: int) -> None:
+        """Free a slot and every block reference it holds (own blocks AND
+        pinned prefix-chain blocks — the pin is just a refcount). Dead slots
+        are masked out of the next dispatch by ``alive``; the stale page-
+        table row is rewritten at the next admission into the slot."""
+        self.alloc.release(self._slot_pages[slot])
+        self._slot_pages[slot] = []
+        self._slots[slot] = None
+        self._note_pool()
+
+    def _drop_parked(self, req: Request) -> None:
+        """Release a parked request's tier state: host handles for swapped-
+        out blocks, device refs for shared blocks it kept pinned. A spilled
+        prefix chain whose only non-tree holder was this request becomes
+        evictable again (and cascade-drops with its ancestors later)."""
+        parked = self._parked.pop(req.uid, None)
+        if parked is None or parked.entries is None:
+            return
+        host = [v for kind, v in parked.entries if kind == "host"]
+        if host:
+            self.host.release(host)
+        self.alloc.release([v for kind, v in parked.entries
+                            if kind == "dev"])
+        self._note_pool()
+
+    def cancel(self, uid: int, status: str = RequestStatus.CANCELLED,
+               error: str | None = None) -> bool:
+        """Abort request ``uid`` wherever it currently lives — pending,
+        waiting, swap- or recompute-parked, or slot-resident mid-decode /
+        mid-speculation. Releases its blocks, prefix pins and host-tier
+        state; co-scheduled slots are untouched (their next dispatch just
+        masks the freed slot dead). Returns False when the uid is unknown
+        or already terminal. ``status``/``error`` let the lifecycle sweeps
+        reuse this path for TIMED_OUT / SHED endings."""
+        req = self._by_uid.get(uid)
+        if req is None or req.terminal:
+            return False
+        if req in self._slots:
+            slot = self._slots.index(req)
+            if slot in self._reserved:
+                # reserved mid-batched-admission: pages not yet attached to
+                # the slot — unreachable from host-sync hooks, guard anyway
+                return False
+            self._release_slot(slot)
+        else:
+            if req in self._pending:
+                self._pending.remove(req)
+            if req in self._ready:
+                self._ready.remove(req)
+            self._drop_parked(req)
+        self._poison_uids.discard(uid)
+        self._finish(req, status, error)
+        return True
+
+    def drain(self) -> None:
+        """Graceful drain: stop admission and finish live work. Waiting
+        requests that never started (pending arrivals + arrived-but-queued)
+        are SHED immediately; slot-resident requests and preemption-parked
+        requests (work in flight) run to completion. Later ``submit()``
+        calls are SHED on arrival. Idempotent."""
+        self._draining = True
+        for r in list(self._pending):
+            self.cancel(r.uid, RequestStatus.SHED,
+                        "engine drained before admission")
+        for r in list(self._ready):
+            if r.uid not in self._parked:
+                self.cancel(r.uid, RequestStatus.SHED,
+                            "engine drained before admission")
+
+    @property
+    def draining(self) -> bool:
+        return self._draining
+
+    def _shed_overflow(self) -> None:
+        """Bounded admission queue: while more than ``max_waiting`` fresh
+        (non-parked) requests wait, shed the scheduler's worst-ranked one.
+        Parked requests are work in flight and never count against the
+        bound (their state is already paid for)."""
+        if self.max_waiting is None:
+            return
+        while True:
+            fresh = [r for r in self._ready if r.uid not in self._parked]
+            if len(fresh) <= self.max_waiting:
+                return
+            victim = max(fresh,
+                         key=lambda r: self.sched.shed_key(r, self))
+            self.cancel(victim.uid, RequestStatus.SHED,
+                        f"admission queue over capacity "
+                        f"(max_waiting={self.max_waiting})")
+
+    def _lifecycle_tick(self) -> None:
+        """Host-sync lifecycle sweep, run once per serve-loop iteration:
+        fire the fault injector's scheduled actions, then time out every
+        non-terminal request whose ``deadline_step`` has passed (waiting or
+        running — blocks, pins and host state are released either way)."""
+        if self.faults is not None:
+            self.faults.on_tick(self)
+        expired = [r for r in (self._pending + self._ready
+                               + [s for s in self._slots if s is not None])
+                   if r.deadline_step is not None
+                   and self._step_count >= r.deadline_step]
+        for r in expired:
+            self.cancel(r.uid, RequestStatus.TIMED_OUT,
+                        f"deadline_step {r.deadline_step} passed at "
+                        f"engine step {self._step_count}")
+
+    def _quarantine(self, slot: int, reason: str) -> None:
+        """Isolate a poisoned slot: free its state and FAIL the request.
+        Slots never mix in attention (per-slot page tables), so survivors
+        of the same dispatch are token-identical to an unfaulted run."""
+        req = self._slots[slot]
+        self._release_slot(slot)
+        self._poison_uids.discard(req.uid)
+        self.stats.quarantined += 1
+        self._finish(req, RequestStatus.FAILED, reason)
+
+    def audit(self) -> dict:
+        """Run the engine-wide invariant auditor (leak/aliasing detector
+        across allocator, page tables, prefix chains and host store);
+        raises ``repro.serving.audit.AuditError`` on any violation."""
+        from repro.serving.audit import audit_engine
+
+        return audit_engine(self)
 
     # ---------------------------------------------------------- admission
     def _free_slot(self) -> int | None:
@@ -642,9 +926,23 @@ class ContinuousEngine:
                 self.host.release([n.host for n in hst])
             return None
         if hst:
+            from repro.cache.offload import HostStoreError
+
             handles = [n.host for n in hst]
             dst = pages[:len(hst)]
-            pools = self.host.take_to_device(self.state.pools, handles, dst)
+            try:
+                pools = self.host.take_to_device(self.state.pools, handles,
+                                                 dst)
+            except HostStoreError:
+                # host-tier read failure: unwind every pin taken above and
+                # drop the unreachable host chain from the tree so the next
+                # match stops at the device-resident prefix instead
+                if dev:
+                    self.alloc.release(dev)
+                self.host.release(handles)      # our shield
+                self.alloc.release(pages)
+                self.prefix.drop_chain(hst[0])
+                return None
             self.state = dataclasses.replace(self.state, pools=pools)
             self.alloc.ref(dst)            # the tree's reference moves tiers
             self.host.release(handles)     # ... so its host reference drops
@@ -753,6 +1051,7 @@ class ContinuousEngine:
         self.stats.preemptions += 1
         self._slots[slot] = None
         self._slot_pages[slot] = []
+        req.status = RequestStatus.QUEUED
         self._ready.append(req)
         # keep the waiting queue policy-ordered mid-pass: the victim must
         # not sit behind lower-ranked requests for the rest of this tick
@@ -780,7 +1079,23 @@ class ContinuousEngine:
                  for kind, v in parked.entries]
         pools = self.state.pools
         if handles:
-            pools = self.host.take_to_device(pools, handles, fresh)
+            from repro.cache.offload import HostStoreError
+
+            try:
+                pools = self.host.take_to_device(pools, handles, fresh)
+            except HostStoreError:
+                # host-tier read failure: the parked bytes are unreachable —
+                # demote this request to the recompute-from-prompt fallback
+                # (deterministic replay keeps it token-identical) and free
+                # everything the swap-in path had staged
+                self.alloc.release(fresh)
+                self.host.release(handles)
+                self.alloc.release([v for kind, v in parked.entries
+                                    if kind == "dev"])
+                parked.entries = None
+                parked.residuals = None
+                self._note_pool()
+                return False
             self.host.release(handles)
         pools = offload.scatter_residual(pools, parked.residuals, slot)
         self._pt[slot, :] = 0
@@ -793,6 +1108,7 @@ class ContinuousEngine:
         self._slots[slot] = req
         self._slot_pages[slot] = pages
         self._current[slot] = req.output[-1]
+        req.status = RequestStatus.DECODING
         del self._parked[req.uid]
         self.stats.swap_in_blocks += n_host
         self.stats.resumes += 1
@@ -841,6 +1157,7 @@ class ContinuousEngine:
     def _admit(self, req: Request, slot: int, pages: list[int],
                n_shared: int = 0, replay: bool = False) -> None:
         t0 = time.time()
+        req.status = RequestStatus.PREFILLING
         plen = len(req.prompt)
         self._pt[slot, :] = 0
         self._pt[slot, :len(pages)] = pages
@@ -859,9 +1176,6 @@ class ContinuousEngine:
             self.stats.record_prefill_wall(time.time() - ts)
             self.stats.prefill_dispatches += 1
             self.stats.prefill_tokens += plen - start
-            if self.prefix is not None:
-                # index the full-group chain (shared nodes just touch LRU)
-                self.prefix.insert(req.prompt, pages)
         else:
             toks = jnp.asarray(np.asarray(req.prompt)[None], jnp.int32)
             ts = time.time()
@@ -879,12 +1193,23 @@ class ContinuousEngine:
 
         self._slots[slot] = req
         self._slot_pages[slot] = pages
+        if self.guard_nan and not np.isfinite(np.asarray(last_logits)).all():
+            # poisoned admission: quarantine BEFORE the prefix tree adopts
+            # any of this prompt's blocks, so corruption never enters the
+            # shared cache
+            self._quarantine(slot, "non-finite prefill logits")
+            return
+        if self.prefill_paged and self.prefix is not None:
+            # index the full-group chain (shared nodes just touch LRU)
+            self.prefix.insert(req.prompt, pages)
         if replay:
             # recompute resume: the request already emitted tokens — rebuild
             # its decode-produced blocks/residual instead of sampling afresh
             self._replay(req, slot)
+            req.status = RequestStatus.DECODING
             return
         self.stats.admitted += 1
+        req.status = RequestStatus.DECODING
 
         tok = int(self._sample(last_logits)[0])
         self.stats.record_admit_latency(time.time() - t0)
@@ -902,6 +1227,7 @@ class ContinuousEngine:
         r = self.group_size
         c = self.prefill_chunk
         for req, slot, pages, _ in batch:
+            req.status = RequestStatus.PREFILLING
             self._pt[slot, :] = 0
             self._pt[slot, :len(pages)] = pages
         self.state = dataclasses.replace(
@@ -936,10 +1262,18 @@ class ContinuousEngine:
 
         for (req, slot, pages, n_shared), sfx in zip(batch, suffixes):
             self.stats.prefill_tokens += len(sfx)
+            self._slot_pages[slot] = pages
+            self._reserved.discard(slot)
+            if self.guard_nan and \
+                    not np.isfinite(last_logits[slot]).all():
+                # quarantine before the prefix tree adopts this prompt's
+                # blocks; burst mates are untouched (per-slot page tables)
+                self._quarantine(slot, "non-finite prefill logits")
+                continue
             if self.prefix is not None:
                 self.prefix.insert(req.prompt, pages)
             self.stats.admitted += 1
-            self._slot_pages[slot] = pages
+            req.status = RequestStatus.DECODING
             # sample in admission order so the non-greedy rng stream matches
             # the serial path's draw order
             tok = int(self._sample(jnp.asarray(last_logits[slot][None]))[0])
@@ -952,21 +1286,22 @@ class ContinuousEngine:
         self.stats.generated_tokens += 1
         if (req.eos_id is not None and tok == req.eos_id) or \
                 len(req.output) >= req.max_new_tokens:
-            req.done = True
-            self.alloc.release(self._slot_pages[slot])
-            self._slot_pages[slot] = []
-            self._slots[slot] = None
-            self._done.append(req)
-            self._note_pool()
+            self._release_slot(slot)
+            self._finish(req, RequestStatus.DONE)
         else:
             self._current[slot] = tok
 
     # ------------------------------------------------------------ serving
     def run(self) -> list[Request]:
-        """Drain pending+ready requests; returns completed requests."""
+        """Serve until no admissible work remains. Returns every request
+        that reached a terminal status since the engine was built — DONE
+        and failure endings alike (check ``req.status``); under faults,
+        survivors' greedy outputs are token-identical to a fault-free run."""
         t0 = time.time()
-        self._done: list[Request] = []
         while True:
+            # lifecycle sweep first: fault-injector actions fire, expired
+            # deadlines cancel, so this tick's admissions see the truth
+            self._lifecycle_tick()
             # deliver simulated arrivals, then admit into free slots
             arrived = [r for r in self._pending
                        if r.arrival_step <= self._step_count]
@@ -974,6 +1309,11 @@ class ContinuousEngine:
                 self._pending = [r for r in self._pending if r not in arrived]
                 self._ready.extend(sorted(arrived, key=lambda r: r.uid))
             self._try_admit()
+            # bound the waiting queue AFTER admission: only requests that
+            # actually failed to get a slot this tick count against it
+            self._shed_overflow()
+            if self.audit_enabled:
+                self.audit()
 
             live = [i for i, s in enumerate(self._slots) if s is not None]
             if not live:
@@ -983,20 +1323,32 @@ class ContinuousEngine:
                     # swap-parked requests pin their shared blocks and host
                     # handles; with no live slots that is the only thing
                     # that can still block the queue head — demote one to
-                    # recompute and retry. With nothing left to demote this
-                    # cannot happen: every slot is free, (post-eviction)
-                    # every pool block too, and submit() rejects requests
-                    # larger than the pool.
+                    # recompute and retry. Fault-free, nothing-to-demote
+                    # cannot happen (every slot and post-eviction block is
+                    # free, submit() rejects pool-oversized requests); with
+                    # an injected allocator fault it can, so instead of
+                    # crashing the engine, tick time forward (deadlines and
+                    # fault windows keep moving) and, if the stall outlives
+                    # ``stall_ticks``, fail the queue head and move on.
                     if self._demote_parked_lru():
                         continue
-                    raise RuntimeError(
-                        "admission stalled with no live slots")
+                    self._stall += 1
+                    self._step_count += 1
+                    if self._stall >= self.stall_ticks:
+                        head = min(self._ready, key=lambda r:
+                                   self.sched.admission_key(r, self))
+                        self.cancel(head.uid, RequestStatus.FAILED,
+                                    f"admission stalled for {self._stall} "
+                                    "ticks with no live slots")
+                        self._stall = 0
+                    continue
                 # nothing decodable yet: fast-forward straight to the next
                 # simulated arrival instead of ticking one step at a time
                 self._step_count = max(
                     self._step_count,
                     min(r.arrival_step for r in self._pending))
                 continue
+            self._stall = 0
 
             tokens = np.zeros(self.max_batch, np.int32)
             alive = np.zeros(self.max_batch, bool)
@@ -1010,17 +1362,45 @@ class ContinuousEngine:
                 logits, self.state = self._step(
                     self.params, self.state, jnp.asarray(tokens[:, None]),
                     jnp.asarray(alive))
-                nxt = np.asarray(self._sample(logits))
-                self.stats.record_step_wall(time.time() - ts)
-                self._step_count += 1
-                self.stats.decode_steps += 1
-                self.stats.decode_tokens += len(live)
-                for i in live:
-                    self._emit(i, self._slots[i], int(nxt[i]))
+                if self.guard_nan:
+                    self._step_guarded(live, logits, ts)
+                else:
+                    nxt = np.asarray(self._sample(logits))
+                    self.stats.record_step_wall(time.time() - ts)
+                    self._step_count += 1
+                    self.stats.decode_steps += 1
+                    self.stats.decode_tokens += len(live)
+                    for i in live:
+                        self._emit(i, self._slots[i], int(nxt[i]))
             else:
                 self._run_horizon(live, tokens, alive)
+        if self.audit_enabled:
+            self.audit()
         self.stats.wall_s += time.time() - t0
         return self._done
+
+    def _step_guarded(self, live, logits, ts: float) -> None:
+        """Host-side finish of one H=1 decode dispatch under ``guard_nan``:
+        apply any pending logit-poison injections, quarantine slots whose
+        logits went non-finite (corrupted block, poisoned activation), and
+        emit for the finite survivors. Greedy host ``np.argmax`` picks the
+        same token as the device ``jnp.argmax`` (first max wins in both),
+        so guarded and unguarded runs are token-identical."""
+        lg = np.array(logits)   # writable copy: poison injection edits rows
+        for i in live:
+            if self._slots[i].uid in self._poison_uids:
+                lg[i] = np.nan      # injected fault: poison this slot only
+        self.stats.record_step_wall(time.time() - ts)
+        self._step_count += 1
+        self.stats.decode_steps += 1
+        nxt = np.argmax(np.nan_to_num(lg, nan=0.0, posinf=0.0, neginf=0.0),
+                        axis=-1).astype(np.int32)
+        for i in live:
+            if not np.isfinite(lg[i]).all():
+                self._quarantine(i, "non-finite decode logits")
+            else:
+                self.stats.decode_tokens += 1
+                self._emit(i, self._slots[i], int(nxt[i]))
 
     def _run_horizon(self, live, tokens, alive) -> None:
         """One device dispatch of ``decode_horizon`` steps; the host then

@@ -1,0 +1,201 @@
+"""Deterministic fault injection for ``ContinuousEngine``.
+
+Chaos testing for the serving stack: a :class:`FaultInjector` is handed to
+the engine (``ContinuousEngine(faults=...)``) and wires itself into the
+seams where real deployments fail —
+
+* **allocator exhaustion** — ``BlockAllocator.fault_hook`` makes ``alloc``
+  report a dry pool, exercising eviction / preemption / stall-shed paths;
+* **host-tier failures** — ``HostBlockStore.fault_hook`` fails swap-outs
+  (``put`` → the capacity-full ``None`` every caller already handles) and
+  swap-ins (``get`` → :class:`~repro.cache.offload.HostStoreError`, which
+  the engine converts to chain-drop or recompute fallbacks);
+* **client churn** — scheduled ``cancel``/``drain`` calls at given engine
+  steps, mid-prefill / mid-decode / mid-preemption;
+* **data corruption** — NaN written into a live, exclusively-owned packed
+  block's scales, or a slot's logits poisoned directly; with
+  ``guard_nan=True`` the engine quarantines exactly the poisoned slot.
+
+Everything is seeded and replayable: the same injector config against the
+same workload fires the same faults at the same points. Probabilistic hooks
+draw from one ``numpy`` generator in engine-call order (which is itself
+deterministic); scheduled actions key on ``engine._step_count``.
+
+The acceptance property this enables (see ``tests/test_chaos.py`` and
+``benchmarks/table13_chaos.py``): under any fault schedule, every request
+ends in a terminal status (nothing hangs, the engine never crashes), every
+survivor's greedy output is token-identical to an unfaulted run, and the
+invariant auditor finds zero leaked or aliased blocks afterwards.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+class FaultInjector:
+    """Seeded fault schedule for one engine run.
+
+    Probabilistic knobs (fire independently on every call, optionally
+    budget-capped):
+
+    * ``p_alloc_fail`` — probability one ``BlockAllocator.alloc`` call
+      reports exhaustion (``max_alloc_faults`` caps the total).
+    * ``p_host_put_fail`` / ``p_host_get_fail`` — probability one host-tier
+      swap-out / swap-in fails (``max_host_faults`` caps the total).
+
+    Scheduled actions (fire at the first lifecycle tick whose engine step is
+    ``>= step``):
+
+    * ``cancel_at`` — iterable of ``(step, uid)``: client cancellation.
+    * ``poison_at`` — iterable of ``(step, uid)``: force that request's next
+      decode logits to NaN (requires ``guard_nan``; models a poisoned
+      activation).
+    * ``corrupt_at`` — iterable of steps: write NaN into one randomly chosen
+      live, exclusively-owned packed pool block (retries each tick until a
+      victim exists); the owner's uid lands in :attr:`corrupted_uids`.
+    * ``call_at`` — iterable of ``(step, fn)``: arbitrary host-sync action,
+      ``fn(engine)`` — e.g. ``lambda e: e.drain()``.
+    """
+
+    def __init__(self, seed: int = 0, p_alloc_fail: float = 0.0,
+                 p_host_put_fail: float = 0.0, p_host_get_fail: float = 0.0,
+                 max_alloc_faults: int | None = None,
+                 max_host_faults: int | None = None,
+                 cancel_at=(), poison_at=(), corrupt_at=(), call_at=()):
+        for name, p in (("p_alloc_fail", p_alloc_fail),
+                        ("p_host_put_fail", p_host_put_fail),
+                        ("p_host_get_fail", p_host_get_fail)):
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"{name} ({p}) must be in [0, 1]")
+        self.rng = np.random.default_rng(seed)
+        self.p_alloc_fail = p_alloc_fail
+        self.p_host_put_fail = p_host_put_fail
+        self.p_host_get_fail = p_host_get_fail
+        self.max_alloc_faults = max_alloc_faults
+        self.max_host_faults = max_host_faults
+        self._cancel = sorted(cancel_at)
+        self._poison = sorted(poison_at)
+        self._corrupt = sorted(corrupt_at)
+        self._call = sorted(call_at, key=lambda sf: sf[0])
+        # fired-fault counters (chaos tests assert each class actually fired)
+        self.alloc_faults = 0
+        self.host_put_faults = 0
+        self.host_get_faults = 0
+        self.cancels_fired = 0
+        self.poisons_fired = 0
+        self.corruptions_fired = 0
+        self.calls_fired = 0
+        self.corrupted_uids: set = set()
+
+    # ------------------------------------------------------------- wiring
+    def attach(self, engine) -> None:
+        """Wire the probabilistic hooks into ``engine``'s allocator and
+        host store (called by ``ContinuousEngine.__init__``)."""
+        engine.alloc.fault_hook = self._alloc_hook
+        if engine.host is not None:
+            engine.host.fault_hook = self._host_hook
+
+    def _alloc_hook(self, n: int) -> bool:
+        if self.max_alloc_faults is not None \
+                and self.alloc_faults >= self.max_alloc_faults:
+            return False
+        if self.p_alloc_fail and self.rng.random() < self.p_alloc_fail:
+            self.alloc_faults += 1
+            return True
+        return False
+
+    def _host_hook(self, op: str, n: int) -> bool:
+        if self.max_host_faults is not None and \
+                self.host_put_faults + self.host_get_faults \
+                >= self.max_host_faults:
+            return False
+        p = self.p_host_put_fail if op == "put" else self.p_host_get_fail
+        if p and self.rng.random() < p:
+            if op == "put":
+                self.host_put_faults += 1
+            else:
+                self.host_get_faults += 1
+            return True
+        return False
+
+    # ----------------------------------------------------- scheduled fire
+    def on_tick(self, engine) -> None:
+        """Fire every scheduled action whose step has arrived (called by
+        the engine's lifecycle sweep, once per serve-loop iteration)."""
+        step = engine._step_count
+        while self._call and self._call[0][0] <= step:
+            _, fn = self._call.pop(0)
+            fn(engine)
+            self.calls_fired += 1
+        while self._cancel and self._cancel[0][0] <= step:
+            _, uid = self._cancel.pop(0)
+            if engine.cancel(uid):
+                self.cancels_fired += 1
+        while self._poison and self._poison[0][0] <= step:
+            _, uid = self._poison.pop(0)
+            req = engine._by_uid.get(uid)
+            if req is not None and not req.terminal:
+                engine._poison_uids.add(uid)
+                self.poisons_fired += 1
+        # corruption retries until a live exclusively-owned block exists
+        remaining = []
+        for s in self._corrupt:
+            if s <= step and self._corrupt_one(engine):
+                self.corruptions_fired += 1
+            elif s <= step:
+                remaining.append(s)      # no victim yet: retry next tick
+            else:
+                remaining.append(s)
+        self._corrupt = remaining
+
+    def _corrupt_one(self, engine) -> bool:
+        """Write NaN into one live slot's exclusively-owned packed block
+        (within its already-written groups, so decode actually reads it).
+        Exclusive ownership (refcount 1) keeps the blast radius to exactly
+        one request — shared prefix blocks are never corrupted."""
+        import jax.numpy as jnp
+
+        cands = []
+        for slot, req in enumerate(engine._slots):
+            if req is None or slot in engine._reserved:
+                continue
+            n_full = (len(req.prompt) + len(req.output) - 1) \
+                // engine.group_size
+            for b in engine._slot_pages[slot][:n_full]:
+                if engine.alloc.refcount(b) == 1:
+                    cands.append(b)
+        if not cands:
+            return False
+        b = cands[int(self.rng.integers(len(cands)))]
+        owner = next(req for slot, req in enumerate(engine._slots)
+                     if req is not None
+                     and b in engine._slot_pages[slot])
+        pools = list(engine.state.pools)
+        li, p = next((i, p) for i, p in enumerate(pools) if p is not None)
+        if p.codec.k.quantized:
+            # flip the block's key scales to NaN: dequantized keys go NaN,
+            # attention scores go NaN, the owner's logits go NaN
+            pools[li] = dataclasses.replace(
+                p, k_scale=p.k_scale.at[b].set(jnp.nan))
+        else:
+            # unquantized key segment: the codes array holds raw values
+            pools[li] = dataclasses.replace(
+                p, k_codes=p.k_codes.at[b].set(jnp.nan))
+        engine.state = dataclasses.replace(engine.state, pools=pools)
+        self.corrupted_uids.add(owner.uid)
+        return True
+
+    # ------------------------------------------------------------ reporting
+    def summary(self) -> dict:
+        """Fired-fault counts by class (chaos tests assert coverage)."""
+        return {
+            "alloc_faults": self.alloc_faults,
+            "host_put_faults": self.host_put_faults,
+            "host_get_faults": self.host_get_faults,
+            "cancels_fired": self.cancels_fired,
+            "poisons_fired": self.poisons_fired,
+            "corruptions_fired": self.corruptions_fired,
+            "calls_fired": self.calls_fired,
+        }

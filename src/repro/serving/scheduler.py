@@ -56,6 +56,13 @@ class SchedulerPolicy:
         """Sort key over eligible victims; smallest is preempted first."""
         raise NotImplementedError
 
+    def shed_key(self, req, engine):
+        """Sort key over waiting requests under overload; the LARGEST is
+        shed first. Defaults to the policy's own admission ranking, so the
+        request the policy would admit last is the one dropped when the
+        bounded queue overflows."""
+        return self.admission_key(req, engine)
+
     # ------------------------------------------------------------- shared
     @staticmethod
     def remaining_work(req, engine) -> int:

