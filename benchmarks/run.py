@@ -29,7 +29,8 @@ def main() -> None:
                             table3_output_error, table4_pruning,
                             table5_accuracy, table8_throughput,
                             table9_error, table10_clustering,
-                            table11_prefix, table12_offload, table13_chaos)
+                            table11_prefix, table12_offload, table13_chaos,
+                            table14_sharded)
 
     print("# KVTuner reproduction benchmarks (paper tables)", flush=True)
     ctx = common.get_bench_model(log=lambda *a: print(*a, flush=True))
@@ -60,6 +61,10 @@ def main() -> None:
         "t13_chaos": lambda: table13_chaos.run(
             ctx, per_template=2 if args.fast else 4,
             max_new=6 if args.fast else 10),
+        # runs in a subprocess: the 8-device host flag must be set before
+        # jax initializes, and this parent already initialized it
+        "t14_sharded": lambda: table14_sharded.run_subprocess(
+            tiny=args.fast),
         "kernels_micro": lambda: kernels_micro.run(ctx),
         "kernels_paged": lambda: kernels_micro.run_paged(ctx),
         "kernels_prefill": lambda: kernels_micro.run_prefill(ctx),
@@ -77,6 +82,7 @@ def main() -> None:
         "t11_prefix": table11_prefix.check_paper_claims,
         "t12_offload": table12_offload.check_paper_claims,
         "t13_chaos": table13_chaos.check_paper_claims,
+        "t14_sharded": table14_sharded.check_paper_claims,
         "kernels_micro": kernels_micro.check_paper_claims,
         "kernels_paged": kernels_micro.check_paged_claims,
         "kernels_prefill": kernels_micro.check_prefill_claims,

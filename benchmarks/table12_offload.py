@@ -121,6 +121,8 @@ def run(ctx, n_templates: int = 3, per_template: int = 4,
                    "prefix_dropped_blocks": s.prefix_dropped_blocks,
                    "host_evicted_blocks": s.host_evicted_blocks,
                    "pool_high_watermark": s.pool_high_watermark,
+                   "n_shards": s.n_shards,
+                   "shard_pool_high_watermark": s.shard_pool_high_watermark,
                    "host_utilization": s.host_utilization,
                    "host_resident_bytes": tier.host.stored_bytes(),
                    "terminal_counts": s.terminal_counts},

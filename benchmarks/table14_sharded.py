@@ -1,0 +1,228 @@
+"""Table 14 (systems extension): multi-device paged serving on a mesh.
+
+The quantized paged pool (packed codes + scales + bf16 residual windows)
+shards by KV head over the ``model`` mesh axis; page table, lengths,
+weights and the block allocator replicate. Attention runs embarrassingly
+parallel per KV-head shard — the only collective on the serving path is
+the all-gather of the per-token attention output — so sharding changes
+*where bytes live*, never *which tokens come out*.
+
+This benchmark runs the table8 engine workload twice — single-device vs a
+forced-8-device CPU mesh (``--xla_force_host_platform_device_count``) —
+and gates the two acceptance properties:
+
+* greedy outputs token-identical across the mesh boundary, with the
+  fused pallas kernels both off and on;
+* per-shard analytic KV stream bytes exactly 1/N of the global counters
+  (each shard streams only its own heads; no KV all-gather anywhere).
+
+The model uses ``num_kv_heads=8`` (one head per device) — the bench model
+has 2 KV heads, which does not divide an 8-wide axis and would exercise
+only the replicated fallback.
+
+Standalone: ``PYTHONPATH=src python -m benchmarks.table14_sharded [--tiny]``
+(the 8-device flag is set automatically before jax initializes). Via
+``benchmarks.run`` — where the parent process already initialized jax with
+one device — it transparently re-invokes itself in a subprocess.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.precision import KVTunerSchedule, PrecisionPair
+from repro.models.registry import ModelApi, build_model
+from repro.serving.engine import ContinuousEngine, Request
+
+N_DEV = 8
+
+
+@dataclasses.dataclass
+class ShardedCtx:
+    api: ModelApi
+    params: dict
+
+
+def sharded_serving_ctx(tiny: bool = False) -> ShardedCtx:
+    """Random-weight model whose KV heads divide the 8-wide mesh axis
+    (token identity and byte accounting do not depend on trained
+    weights — same rationale as ``tiny_serving_ctx``)."""
+    import jax
+
+    if tiny:
+        cfg = ModelConfig(name="t14-tiny", family="dense", num_layers=2,
+                          d_model=64, num_heads=16, num_kv_heads=N_DEV,
+                          d_ff=128, vocab_size=61, q_chunk=16,
+                          kv_group_size=8)
+    else:
+        cfg = ModelConfig(name="t14-sharded", family="dense", num_layers=4,
+                          d_model=128, num_heads=16, num_kv_heads=N_DEV,
+                          d_ff=256, vocab_size=64, q_chunk=32,
+                          kv_group_size=8)
+    api = build_model(cfg)
+    return ShardedCtx(api=api, params=api.init(jax.random.PRNGKey(0)))
+
+
+def run(ctx, n_requests: int = 6, max_new: int = 8, max_batch: int = 2,
+        seed: int = 0) -> dict:
+    """Single-device vs 8-device mesh on the table8 Poisson workload."""
+    import jax
+
+    from benchmarks.common import poisson_arrivals
+    from repro.launch.mesh import make_test_mesh
+
+    cfg = ctx.api.cfg
+    sched = KVTunerSchedule.uniform(len(cfg.attention_layers()),
+                                    PrecisionPair(8, 4))
+    rng = np.random.default_rng(seed)
+    plens = rng.choice([32, 48, 64], size=n_requests)
+    arrivals = poisson_arrivals(n_requests, 1.5, rng)
+    prompts = [rng.integers(0, cfg.vocab_size, int(n)) for n in plens]
+    max_seq = int(plens.max()) + max_new
+
+    def drive(**kw):
+        eng = ContinuousEngine(ctx.api, ctx.params, sched,
+                               max_batch=max_batch, max_seq=max_seq,
+                               seed=seed, **kw)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=p, max_new_tokens=max_new,
+                               arrival_step=int(arrivals[i])))
+        done = sorted(eng.run(), key=lambda r: r.uid)
+        eng.alloc.assert_consistent()
+        return [list(r.output) for r in done], eng
+
+    base_out, base = drive()
+    mesh = make_test_mesh(N_DEV)
+    variants = {"xla": {}, "pallas": {"use_pallas": True}}
+    sharded, identical = {}, {}
+    for name, kw in variants.items():
+        # the gated property is "sharding changes nothing": compare against
+        # the single-device engine with the SAME kernel setting (kernel
+        # on/off parity is its own suite — tests/test_qdecode_fused.py)
+        ref_out = base_out if not kw else drive(**kw)[0]
+        out, eng = drive(mesh=mesh, **kw)
+        identical[name] = out == ref_out
+        s = eng.stats
+        sharded[name] = {
+            "tokens_per_s": s.throughput,
+            "decode_tokens_per_s": s.decode_tokens_per_s,
+            "decode_steps": s.decode_steps,
+            "decode_compilations": eng.decode_compilations,
+            "n_shards": s.n_shards,
+            "shard_pool_utilization": s.shard_pool_utilization,
+            "shard_pool_high_watermark": s.shard_pool_high_watermark,
+        }
+
+    # analytic KV traffic: every counter is proportional to Hkv, so one
+    # shard of the final request lengths streams EXACTLY total/N
+    pool = base.state.pools[0]
+    final_lens = [int(n) + max_new for n in plens]
+    bytes_global = {
+        "block_bytes": pool.block_bytes(),
+        "decode_stream_bytes": pool.decode_stream_bytes(final_lens),
+    }
+    bytes_shard = {
+        "block_bytes": pool.block_bytes(n_shards=N_DEV),
+        "decode_stream_bytes": pool.decode_stream_bytes(final_lens,
+                                                        n_shards=N_DEV),
+    }
+
+    return {
+        "workload": {"n_requests": n_requests, "max_new": max_new,
+                     "max_batch": max_batch, "seed": seed,
+                     "prompt_lens": plens.tolist(),
+                     "arrival_steps": list(arrivals)},
+        "mesh": {"n_devices": len(jax.devices()), "axis": "model",
+                 "kv_heads": cfg.num_kv_heads,
+                 "heads_per_shard": cfg.num_kv_heads // N_DEV},
+        "single": {"tokens_per_s": base.stats.throughput,
+                   "decode_compilations": base.decode_compilations,
+                   "n_shards": base.stats.n_shards},
+        "sharded": sharded,
+        "bytes": {"global": bytes_global, "per_shard": bytes_shard},
+        "outputs_identical": identical,
+    }
+
+
+def check_paper_claims(result: dict) -> dict[str, bool]:
+    sh, bg, bs = result["sharded"], result["bytes"]["global"], \
+        result["bytes"]["per_shard"]
+    return {
+        "mesh outputs token-identical to single-device (xla)":
+            result["outputs_identical"]["xla"],
+        "mesh outputs token-identical to single-device (pallas)":
+            result["outputs_identical"]["pallas"],
+        "pool sharded across all 8 devices":
+            all(v["n_shards"] == N_DEV for v in sh.values()),
+        "per-shard KV bytes exactly 1/8 of global":
+            all(bs[k] * N_DEV == bg[k] for k in bg),
+        "decode step compiles once on the mesh":
+            sh["xla"]["decode_compilations"] == 1,
+    }
+
+
+def run_subprocess(tiny: bool = False) -> dict:
+    """Entry point for ``benchmarks.run``: the parent process has already
+    initialized jax (usually with one CPU device), and
+    ``--xla_force_host_platform_device_count`` cannot take effect after
+    backend init — so re-invoke this module in a fresh interpreter and
+    parse its ``--json`` output."""
+    import jax
+
+    if len(jax.devices()) >= N_DEV:
+        ctx = sharded_serving_ctx(tiny=tiny)
+        return run(ctx, **({"n_requests": 4, "max_new": 6} if tiny else {}))
+    env = dict(os.environ)
+    root = os.path.join(os.path.dirname(__file__), "..")
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(root, "src"), root,
+                    env.get("PYTHONPATH")) if p)
+    env.pop("XLA_FLAGS", None)       # child sets its own device count
+    cmd = [sys.executable, "-m", "benchmarks.table14_sharded", "--json"]
+    if tiny:
+        cmd.append("--tiny")
+    out = subprocess.run(cmd, env=env, cwd=root, capture_output=True,
+                         text=True, timeout=1800)
+    if out.returncode != 0:
+        raise RuntimeError(f"table14 subprocess failed:\n{out.stderr[-4000:]}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def main() -> None:
+    import argparse
+
+    from repro.launch.mesh import force_host_device_count
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="small random model + short workload (CI smoke)")
+    ap.add_argument("--json", action="store_true",
+                    help="print the result dict as a single JSON line")
+    args = ap.parse_args()
+
+    # before any jax backend init — this is why model construction lives
+    # inside main-time helpers, not at module import
+    force_host_device_count(N_DEV)
+    ctx = sharded_serving_ctx(tiny=args.tiny)
+    result = run(ctx, **({"n_requests": 4, "max_new": 6} if args.tiny else {}))
+
+    claims = check_paper_claims(result)
+    if args.json:
+        print(json.dumps(result, default=str))
+    else:
+        print(json.dumps(result, indent=2, default=str))
+    for claim, passed in claims.items():
+        print(f"# [{'PASS' if passed else 'FAIL'}] {claim}",
+              file=sys.stderr if args.json else sys.stdout, flush=True)
+    if not all(claims.values()):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

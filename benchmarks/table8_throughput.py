@@ -141,6 +141,11 @@ def run_engines(ctx, n_requests: int = 10, max_new: int = 8,
                        "pool_utilization": cont.stats.pool_utilization,
                        "pool_high_watermark":
                            cont.stats.pool_high_watermark,
+                       "n_shards": cont.stats.n_shards,
+                       "shard_pool_utilization":
+                           cont.stats.shard_pool_utilization,
+                       "shard_pool_high_watermark":
+                           cont.stats.shard_pool_high_watermark,
                        "decode_compilations": cont.decode_compilations,
                        "terminal_counts": cont.stats.terminal_counts},
         "outputs_identical": all(

@@ -495,8 +495,24 @@ class PagedKVPool:
         return k, v
 
     # --------------------------------------------------------------- sizes
-    def block_bytes(self) -> int:
-        """Packed bytes of ONE block (codes + scales, K and V)."""
+    def _per_shard(self, n_bytes: int, n_shards: int) -> int:
+        """Divide a pool-byte total across ``n_shards`` KV-head shards.
+        Every byte counter below is proportional to Hkv (codes, scales,
+        residual windows and fp tiles all carry the head dim), so a
+        head-sharded mesh engine streams EXACTLY total/N bytes per device —
+        the "no KV all-gather on the decode path" invariant in a number."""
+        if n_shards == 1:
+            return n_bytes
+        hkv = self.k_res.shape[1]
+        if n_shards < 1 or hkv % n_shards:
+            raise ValueError(
+                f"n_shards ({n_shards}) must divide the pool's KV head "
+                f"count ({hkv})")
+        return n_bytes // n_shards
+
+    def block_bytes(self, n_shards: int = 1) -> int:
+        """Packed bytes of ONE block (codes + scales, K and V); with
+        ``n_shards`` > 1, the bytes of one shard's slice of that block."""
         import numpy as np
 
         total = 0
@@ -504,7 +520,7 @@ class PagedKVPool:
                     self.v_scale, self.v_zero):
             n = int(np.prod(arr.shape)) * arr.dtype.itemsize
             total += n // self.num_blocks if arr.ndim > 1 else 0
-        return total
+        return self._per_shard(total, n_shards)
 
     def pool_bytes(self) -> int:
         import numpy as np
@@ -515,13 +531,15 @@ class PagedKVPool:
             total += int(np.prod(arr.shape)) * arr.dtype.itemsize
         return total
 
-    def decode_stream_bytes(self, lengths) -> int:
+    def decode_stream_bytes(self, lengths, n_shards: int = 1) -> int:
         """Analytic HBM bytes ONE length-aware fused decode launch streams
         for per-slot token counts ``lengths`` (host ints/array): live packed
         blocks (out-of-range grid steps alias an already-resident block and
         DMA nothing, but a fully dead slot still fetches one aliased block
         on its first grid step) plus every slot's residual window. The work-
-        proportionality metric reported by ``benchmarks/kernels_micro``."""
+        proportionality metric reported by ``benchmarks/kernels_micro``.
+        ``n_shards`` > 1 gives the PER-DEVICE bytes of a KV-head-sharded
+        mesh launch (each shard streams only its own heads' slice)."""
         import numpy as np
 
         lens = np.asarray(lengths)
@@ -531,10 +549,12 @@ class PagedKVPool:
         fetched = int(np.sum(np.maximum(lens // r, 1)))
         res_bytes = int(np.prod(self.k_res.shape[1:])) * \
             self.k_res.dtype.itemsize
-        return fetched * self.block_bytes() + 2 * len(lens) * res_bytes
+        return self._per_shard(
+            fetched * self.block_bytes() + 2 * len(lens) * res_bytes,
+            n_shards)
 
     def verify_stream_bytes(self, lengths, n_tokens: int,
-                            q_tiles: int = 1) -> int:
+                            q_tiles: int = 1, n_shards: int = 1) -> int:
         """Analytic HBM bytes ONE fused decode-verify launch streams for
         per-slot committed token counts ``lengths`` and ``n_tokens``
         (= speculate_k + 1) query/window tokens per slot: live packed
@@ -554,11 +574,12 @@ class PagedKVPool:
         res_bytes = int(np.prod(self.k_res.shape[1:])) * \
             self.k_res.dtype.itemsize
         win = hkv * n_tokens * self.head_dim * self.k_res.dtype.itemsize
-        return q_tiles * (fetched * self.block_bytes()
-                          + 2 * len(lens) * (res_bytes + win))
+        return self._per_shard(
+            q_tiles * (fetched * self.block_bytes()
+                       + 2 * len(lens) * (res_bytes + win)), n_shards)
 
     def prefill_stream_bytes(self, ctx_lens, chunk: int,
-                             q_tiles: int = 1) -> int:
+                             q_tiles: int = 1, n_shards: int = 1) -> int:
         """Analytic HBM bytes ONE fused prefill wave streams for per-slot
         context token counts ``ctx_lens`` (host ints/array) and a
         ``chunk``-token wave: live packed context blocks (out-of-range grid
@@ -581,8 +602,9 @@ class PagedKVPool:
         fetched = int(np.sum(np.maximum(lens // r, 1)))
         hkv = self.k_res.shape[1]
         tile = hkv * chunk * self.head_dim * self.k_res.dtype.itemsize
-        return q_tiles * (fetched * self.block_bytes()
-                          + 2 * len(lens) * tile)
+        return self._per_shard(
+            q_tiles * (fetched * self.block_bytes()
+                       + 2 * len(lens) * tile), n_shards)
 
 
 def init_model_pools(cfg, schedule, max_slots: int, num_blocks: int) -> list:

@@ -47,9 +47,16 @@ class ShardingRules:
     table: dict[str, tuple[str, ...]]
 
     def axes(self, logical: str, dim_size: int | None = None):
-        names = [a for a in self.table.get(logical, ()) if a in self.mesh.axis_names]
+        # names absent from the mesh drop out (a table written for the
+        # multi-pod mesh still works on a (data, model) mesh); a repeated
+        # mesh axis within one entry collapses to its first occurrence
+        # (P(("model","model")) would double-count the axis size)
+        names = list(dict.fromkeys(
+            a for a in self.table.get(logical, ()) if a in self.mesh.axis_names))
         if not names:
             return None
+        if dim_size is not None and dim_size <= 0:
+            return None  # degenerate dim: nothing to shard
         # greedy longest prefix that divides the dim (JAX rejects uneven shards)
         if dim_size is not None:
             kept = []
@@ -78,17 +85,19 @@ class ShardingRules:
                     ax = ax[0]
             elif ax in used:
                 ax = None
-            if isinstance(ax, tuple):
-                used.update(ax)
-            elif ax:
-                used.add(ax)
-            # re-check divisibility after dedup pruning
+            # re-check divisibility after dedup pruning BEFORE marking axes
+            # used: a dim that falls back to replication here must not
+            # block a later dim from taking those mesh axes
             if ax is not None and dim is not None:
                 total = 1
                 for a in (ax if isinstance(ax, tuple) else (ax,)):
                     total *= self.mesh.shape[a]
                 if dim % total:
                     ax = None
+            if isinstance(ax, tuple):
+                used.update(ax)
+            elif ax:
+                used.add(ax)
             parts.append(ax)
         return P(*parts)
 

@@ -6,7 +6,48 @@ XLA_FLAGS before any jax initialization.
 """
 from __future__ import annotations
 
+import os
+
 import jax
+
+_HOST_COUNT_FLAG = "--xla_force_host_platform_device_count"
+
+
+def force_host_device_count(n: int = 8) -> None:
+    """Emulate ``n`` CPU devices by extending ``XLA_FLAGS`` — the knob that
+    lets multi-device code paths (sharded paged pool, mesh engine) run on a
+    laptop or CI runner. Must be called BEFORE the jax backend initializes;
+    this module's no-device-state-at-import contract exists exactly so
+    callers (tests/conftest.py, benchmark ``__main__``s) can sequence it.
+    No-op when the flag is already set (e.g. CI exports it globally), so the
+    environment always wins over the in-process default."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if _HOST_COUNT_FLAG in flags:
+        return
+    os.environ["XLA_FLAGS"] = f"{flags} {_HOST_COUNT_FLAG}={n}".strip()
+
+
+def make_test_mesh(n_devices: int = 8, axes: tuple = ("data", "model")):
+    """Small mesh for CPU multi-device tests: all ``n_devices`` land on the
+    LAST axis (``model`` by default — the axis the paged pool shards KV
+    heads over), leading axes are size 1. Pair with
+    :func:`force_host_device_count` (or the tests/ conftest, or
+    ``XLA_FLAGS`` in CI) so the devices exist."""
+    if len(axes) < 1:
+        raise ValueError("make_test_mesh needs at least one axis name")
+    avail = len(jax.devices())
+    if avail < n_devices:
+        raise RuntimeError(
+            f"make_test_mesh({n_devices}) but only {avail} devices are "
+            "visible — call launch.mesh.force_host_device_count() before "
+            "jax initializes (or export XLA_FLAGS="
+            f"{_HOST_COUNT_FLAG}={n_devices})")
+    shape = (1,) * (len(axes) - 1) + (n_devices,)
+    try:
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except (AttributeError, TypeError):  # jax < 0.5: no AxisType knob
+        return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -8,6 +8,7 @@ decode path consumes a ``LayerKVCache`` (packed mixed-precision segments).
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -63,10 +64,14 @@ def qkv(params, cfg, x, positions, theta):
 
 
 def _scores(q, k, cfg):
-    """q [B,Sq,H,hd] × k [B,Sk,Hkv,hd] → [B,H,Sq,Sk] (GQA via reshape)."""
+    """q [B,Sq,H,hd] × k [B,Sk,Hkv,hd] → [B,H,Sq,Sk] (GQA via reshape).
+
+    Head counts derive from the operand shapes, not cfg: inside a
+    head-sharded shard_map body q/k carry the LOCAL head slice while cfg
+    still describes the global model (q_per_kv is shard-invariant)."""
     b, sq, h, hd = q.shape
-    g = cfg.q_per_kv
-    qg = q.reshape(b, sq, cfg.num_kv_heads, g, hd)
+    g = h // k.shape[2]
+    qg = q.reshape(b, sq, k.shape[2], g, hd)
     s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
                    preferred_element_type=jnp.float32)
     return s.reshape(b, h, sq, k.shape[1]) / jnp.sqrt(hd).astype(jnp.float32)
@@ -81,8 +86,8 @@ def _weighted_v(probs, v, cfg):
     of f32, halving attention HBM traffic and reshard collective bytes.
     """
     b, h, sq, sk = probs.shape
-    g = cfg.q_per_kv
-    pg = probs.reshape(b, cfg.num_kv_heads, g, sq, sk)
+    g = h // v.shape[2]       # shape-derived: shard-safe (see _scores)
+    pg = probs.reshape(b, v.shape[2], g, sq, sk)
     if getattr(cfg, "attn_probs_bf16", False):
         pg = pg.astype(v.dtype)
         o = jnp.einsum("bkgqs,bskh->bqkgh", pg, v,
@@ -347,6 +352,99 @@ def _concrete_live_pages(lengths, r: int) -> int | None:
     return int(lens.max() // r)
 
 
+# --------------------------------------------- KV-head-sharded paged attend
+def _paged_head_shard(pool):
+    """(rules, mesh_axis) when ambient sharding rules shard the paged pool
+    by KV head — every pool array (packed codes, scales/zeros, bf16
+    residual windows) carries Hkv at dim 1, so one axis name covers the
+    whole pytree. None → single-device path (no rules active, KV heads not
+    divisible by the axis, or multi-axis kv_heads rules, which the gather
+    tile order does not support)."""
+    from repro.distributed.sharding import active_rules
+
+    rules = active_rules()
+    if rules is None:
+        return None
+    ax = rules.axes("kv_heads", pool.k_res.shape[1])
+    if ax is None or isinstance(ax, tuple):
+        return None
+    return rules, ax
+
+
+def _head_sharded_call(core, rules, ax, q, pool, extras, extra_specs):
+    """Run ``core(q_local, pool_local, *extras)`` under shard_map with q
+    (dim 2 = query heads) and every pool array (dim 1 = KV heads) split
+    over mesh axis ``ax``. GQA lays q heads out KV-major (h = kv·g + gi),
+    so the contiguous per-device head slice is exactly the local KV heads'
+    query group — attention is embarrassingly parallel over KV heads and
+    NO collective runs inside the attend. The single wire crossing is the
+    O(B·T·H·D) all-gather of per-head outputs; every device then computes
+    the ``out @ wo`` reduction on identical replicated data, which keeps
+    mesh-engine greedy outputs token-identical to the single-device engine
+    (same algebra as the issue's "only the final per-token output
+    reduction" — gathering activations instead of psum-ing partial matmul
+    products avoids cross-device reduction-order drift)."""
+    try:
+        from jax import shard_map
+    except ImportError:  # jax < 0.5
+        from jax.experimental.shard_map import shard_map
+
+    P = jax.sharding.PartitionSpec
+    pool_specs = jax.tree.map(
+        lambda a: P(None, ax) if jnp.ndim(a) >= 2 else P(), pool)
+
+    def body(q_l, pool_l, *ex):
+        out = core(q_l, pool_l, *ex)
+        return jax.lax.all_gather(out, ax, axis=2, tiled=True)
+
+    kw = dict(mesh=rules.mesh,
+              in_specs=(P(None, None, ax, None), pool_specs, *extra_specs),
+              out_specs=P())
+    try:
+        f = shard_map(body, check_vma=False, **kw)
+    except TypeError:  # jax < 0.5 spells it check_rep
+        f = shard_map(body, check_rep=False, **kw)
+    return f(q, pool, *extras)
+
+
+def _paged_decode_core(q, pool, page_table, eff_len, alive, *, cfg,
+                       use_pallas):
+    """Attend-only body of :func:`paged_decode_attention` (post-append,
+    pre-``wo``): runs unchanged on the full pool or on a per-device KV-head
+    slice inside :func:`_head_sharded_call`."""
+    if use_pallas:
+        from repro.kernels import ops as kops
+        # dead slots get zero live length: the length-aware kernel then
+        # streams no blocks for them at all, instead of scoring stale pages
+        live_len = jnp.where(alive, eff_len, 0)
+        return kops.qdecode_paged_attention(q, pool, page_table, live_len)
+    r = pool.group_size
+    # gather only the batch's max live page count when lengths are
+    # concrete; the full page-table width is pool capacity, not work
+    live = _concrete_live_pages(eff_len, r)
+    pt = page_table if live is None else page_table[:, :live]
+    k_all, v_all = pool.gather_dequant(pt, q.dtype)
+    k_full = jnp.concatenate([k_all, pool.k_res.astype(q.dtype)], axis=2)
+    v_full = jnp.concatenate([v_all, pool.v_res.astype(q.dtype)], axis=2)
+    s_main = k_all.shape[2]
+    n_main = eff_len // r * r
+    idx = jnp.arange(s_main + r)
+    valid = jnp.where(idx[None, :] < s_main,
+                      idx[None, :] < n_main[:, None],
+                      (idx[None, :] - s_main) < (eff_len - n_main)[:, None])
+    # select, don't add: a masked position must be inert even when the
+    # gathered bytes are non-finite (a freed slot's stale page-table
+    # entry may alias a block another request later corrupts; additive
+    # NEG_INF bias would propagate its NaN into this slot's softmax,
+    # and an unmasked NaN value row would poison the weighted sum)
+    s = jnp.where(valid[:, None, None, :],                    # [B,1,1,S']
+                  _scores(q, k_full.transpose(0, 2, 1, 3), cfg), NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    v_t = jnp.where(valid[:, :, None, None],                # [B,S',1,1]
+                    v_full.transpose(0, 2, 1, 3), 0.0)
+    return _weighted_v(p, v_t, cfg).astype(q.dtype)
+
+
 def paged_decode_attention(params, cfg, x, pool, page_table, lengths, alive,
                            theta: float, use_pallas: bool = False):
     """One-token decode over the shared paged pool for every serving slot.
@@ -370,44 +468,63 @@ def paged_decode_attention(params, cfg, x, pool, page_table, lengths, alive,
                            lengths, alive, page_table)
     eff_len = lengths + alive.astype(jnp.int32)
 
-    if use_pallas:
-        from repro.kernels import ops as kops
-        # dead slots get zero live length: the length-aware kernel then
-        # streams no blocks for them at all, instead of scoring stale pages
-        live_len = jnp.where(alive, eff_len, 0)
-        out = kops.qdecode_paged_attention(q, new_pool, page_table, live_len)
+    core = functools.partial(_paged_decode_core, cfg=cfg,
+                             use_pallas=use_pallas)
+    shard = _paged_head_shard(new_pool)
+    if shard is not None:
+        rules, ax = shard
+        P = jax.sharding.PartitionSpec
+        out = _head_sharded_call(core, rules, ax, q, new_pool,
+                                 (page_table, eff_len, alive),
+                                 (P(), P(), P()))
     else:
-        r = new_pool.group_size
-        # gather only the batch's max live page count when lengths are
-        # concrete; the full page-table width is pool capacity, not work
-        live = _concrete_live_pages(eff_len, r)
-        pt = page_table if live is None else page_table[:, :live]
-        k_all, v_all = new_pool.gather_dequant(pt, x.dtype)
-        k_full = jnp.concatenate([k_all, new_pool.k_res.astype(x.dtype)], axis=2)
-        v_full = jnp.concatenate([v_all, new_pool.v_res.astype(x.dtype)], axis=2)
-        s_main = k_all.shape[2]
-        n_main = eff_len // r * r
-        idx = jnp.arange(s_main + r)
-        valid = jnp.where(idx[None, :] < s_main,
-                          idx[None, :] < n_main[:, None],
-                          (idx[None, :] - s_main) < (eff_len - n_main)[:, None])
-        # select, don't add: a masked position must be inert even when the
-        # gathered bytes are non-finite (a freed slot's stale page-table
-        # entry may alias a block another request later corrupts; additive
-        # NEG_INF bias would propagate its NaN into this slot's softmax,
-        # and an unmasked NaN value row would poison the weighted sum)
-        s = jnp.where(valid[:, None, None, :],                    # [B,1,1,S']
-                      _scores(q, k_full.transpose(0, 2, 1, 3), cfg), NEG_INF)
-        p = jax.nn.softmax(s, axis=-1)
-        v_t = jnp.where(valid[:, :, None, None],                # [B,S',1,1]
-                        v_full.transpose(0, 2, 1, 3), 0.0)
-        out = _weighted_v(p, v_t, cfg).astype(x.dtype)
+        out = core(q, new_pool, page_table, eff_len, alive)
 
     y = out.reshape(b, 1, cfg.num_heads * hd) @ params["wo"]
     return y, new_pool
 
 
 # ------------------------------------------------------------ paged verify
+def _paged_verify_core(q, pool, page_table, live_len, win_lens, k_att, v_att,
+                       *, cfg, use_pallas):
+    """Attend-only body of :func:`paged_verify_attention`: candidate window
+    K/V ride along as extra per-KV-head-sharded operands (dim 1 = Hkv)."""
+    k1 = q.shape[1]
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return kops.qverify_paged_attention(
+            q, pool, page_table, live_len, k_att, v_att,
+            win_lens).astype(q.dtype)
+    r = pool.group_size
+    live = _concrete_live_pages(live_len, r)
+    pt = page_table if live is None else page_table[:, :live]
+    k_ctx, v_ctx = pool.gather_dequant(pt, q.dtype)
+    k_cat = jnp.concatenate([k_ctx, pool.k_res.astype(q.dtype),
+                             k_att.astype(q.dtype)], axis=2)
+    v_cat = jnp.concatenate([v_ctx, pool.v_res.astype(q.dtype),
+                             v_att.astype(q.dtype)], axis=2)
+    s_main = k_ctx.shape[2]
+    n_main = live_len // r * r
+    n_res = live_len - n_main
+    ii = jnp.arange(s_main + r + k1)[None, None, :]
+    qi = jnp.arange(k1)[None, :, None]
+    valid = jnp.where(
+        ii < s_main, ii < n_main[:, None, None],
+        jnp.where(ii < s_main + r,
+                  (ii - s_main) < n_res[:, None, None],
+                  ((ii - s_main - r) <= qi)
+                  & ((ii - s_main - r) < win_lens[:, None, None])))
+    # select, don't add — see paged_decode_attention: masked positions
+    # must stay inert even over non-finite gathered bytes
+    sc = jnp.where(valid[:, None],                          # [S,1,K1,S']
+                   _scores(q, k_cat.transpose(0, 2, 1, 3), cfg), NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    dead_key = ~valid.any(axis=1)                           # [S, S']
+    v_sel = jnp.where(dead_key[:, :, None, None],           # [S,S',1,1]
+                      0.0, v_cat.transpose(0, 2, 1, 3))
+    return _weighted_v(p, v_sel, cfg).astype(q.dtype)
+
+
 def paged_verify_attention(params, cfg, x, pool, page_table, lengths, alive,
                            theta: float, use_pallas: bool = False):
     """Speculative-verify attention: score K1 = speculate_k + 1 candidate
@@ -441,46 +558,54 @@ def paged_verify_attention(params, cfg, x, pool, page_table, lengths, alive,
     live_len = jnp.where(alive, lengths, 0)
     win_lens = jnp.where(alive, k1, 0).astype(jnp.int32)
 
-    if use_pallas:
-        from repro.kernels import ops as kops
-        out = kops.qverify_paged_attention(
-            q, pool, page_table, live_len, k_att, v_att,
-            win_lens).astype(x.dtype)
+    core = functools.partial(_paged_verify_core, cfg=cfg,
+                             use_pallas=use_pallas)
+    shard = _paged_head_shard(pool)
+    if shard is not None:
+        rules, ax = shard
+        P = jax.sharding.PartitionSpec
+        out = _head_sharded_call(
+            core, rules, ax, q, pool,
+            (page_table, live_len, win_lens, k_att, v_att),
+            (P(), P(), P(), P(None, ax, None, None),
+             P(None, ax, None, None)))
     else:
-        r = pool.group_size
-        live = _concrete_live_pages(live_len, r)
-        pt = page_table if live is None else page_table[:, :live]
-        k_ctx, v_ctx = pool.gather_dequant(pt, x.dtype)
-        k_cat = jnp.concatenate([k_ctx, pool.k_res.astype(x.dtype),
-                                 k_att.astype(x.dtype)], axis=2)
-        v_cat = jnp.concatenate([v_ctx, pool.v_res.astype(x.dtype),
-                                 v_att.astype(x.dtype)], axis=2)
-        s_main = k_ctx.shape[2]
-        n_main = live_len // r * r
-        n_res = live_len - n_main
-        ii = jnp.arange(s_main + r + k1)[None, None, :]
-        qi = jnp.arange(k1)[None, :, None]
-        valid = jnp.where(
-            ii < s_main, ii < n_main[:, None, None],
-            jnp.where(ii < s_main + r,
-                      (ii - s_main) < n_res[:, None, None],
-                      ((ii - s_main - r) <= qi)
-                      & ((ii - s_main - r) < win_lens[:, None, None])))
-        # select, don't add — see paged_decode_attention: masked positions
-        # must stay inert even over non-finite gathered bytes
-        sc = jnp.where(valid[:, None],                          # [S,1,K1,S']
-                       _scores(q, k_cat.transpose(0, 2, 1, 3), cfg), NEG_INF)
-        p = jax.nn.softmax(sc, axis=-1)
-        dead_key = ~valid.any(axis=1)                           # [S, S']
-        v_sel = jnp.where(dead_key[:, :, None, None],           # [S,S',1,1]
-                          0.0, v_cat.transpose(0, 2, 1, 3))
-        out = _weighted_v(p, v_sel, cfg).astype(x.dtype)
+        out = core(q, pool, page_table, live_len, win_lens, k_att, v_att)
 
     y = out.reshape(s, k1, cfg.num_heads * hd) @ params["wo"]
     return y, (k_t, v_t)
 
 
 # ------------------------------------------------------------ paged prefill
+def _paged_prefill_core(q, pool, pt_row, k_t, v_t, *, ctx_len, cfg,
+                        use_pallas):
+    """Attend-only body of :func:`paged_prefill_attention` (static batch-1
+    chunk). Pool writes stay OUTSIDE: they are per-KV-head elementwise
+    scatters GSPMD keeps shard-local on its own."""
+    c_len = q.shape[1]
+    r = pool.group_size
+    n_ctx = ctx_len // r
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return kops.qprefill_paged_attention(
+            q, pool, pt_row[None], jnp.full((1,), ctx_len, jnp.int32),
+            k_t, v_t, jnp.full((1,), c_len, jnp.int32)).astype(q.dtype)
+    # reference: live pool context [ctx_len] + causal fp intra-chunk [C]
+    k_cat, v_cat = k_t.astype(q.dtype), v_t.astype(q.dtype)
+    if n_ctx:
+        k_ctx, v_ctx = pool.gather_dequant(pt_row[None, :n_ctx], q.dtype)
+        k_cat = jnp.concatenate([k_ctx, k_cat], axis=2)
+        v_cat = jnp.concatenate([v_ctx, v_cat], axis=2)
+    i = jnp.arange(c_len)
+    allowed = jnp.concatenate(
+        [jnp.ones((c_len, ctx_len), bool),       # context: fully live
+         i[None, :] <= i[:, None]], axis=1)      # intra-chunk: causal
+    bias = jnp.where(allowed, 0.0, NEG_INF)[None, None]     # [1,1,C,S']
+    s = _scores(q, k_cat.transpose(0, 2, 1, 3), cfg) + bias
+    p = jax.nn.softmax(s, axis=-1)
+    return _weighted_v(p, v_cat.transpose(0, 2, 1, 3), cfg).astype(q.dtype)
+
+
 def paged_prefill_attention(params, cfg, x, pool, pt_row, slot, ctx_len: int,
                             positions, theta: float,
                             use_pallas: bool = False):
@@ -509,26 +634,17 @@ def paged_prefill_attention(params, cfg, x, pool, pt_row, slot, ctx_len: int,
     k_t = k_new.transpose(0, 2, 1, 3)   # [1, Hkv, C, D]
     v_t = v_new.transpose(0, 2, 1, 3)
 
-    if use_pallas:
-        from repro.kernels import ops as kops
-        out = kops.qprefill_paged_attention(
-            q, pool, pt_row[None], jnp.full((1,), ctx_len, jnp.int32),
-            k_t, v_t, jnp.full((1,), c_len, jnp.int32)).astype(x.dtype)
+    core = functools.partial(_paged_prefill_core, ctx_len=ctx_len, cfg=cfg,
+                             use_pallas=use_pallas)
+    shard = _paged_head_shard(pool)
+    if shard is not None:
+        rules, ax = shard
+        P = jax.sharding.PartitionSpec
+        out = _head_sharded_call(
+            core, rules, ax, q, pool, (pt_row, k_t, v_t),
+            (P(), P(None, ax, None, None), P(None, ax, None, None)))
     else:
-        # reference: live pool context [ctx_len] + causal fp intra-chunk [C]
-        k_cat, v_cat = k_t.astype(x.dtype), v_t.astype(x.dtype)
-        if n_ctx:
-            k_ctx, v_ctx = pool.gather_dequant(pt_row[None, :n_ctx], x.dtype)
-            k_cat = jnp.concatenate([k_ctx, k_cat], axis=2)
-            v_cat = jnp.concatenate([v_ctx, v_cat], axis=2)
-        i = jnp.arange(c_len)
-        allowed = jnp.concatenate(
-            [jnp.ones((c_len, ctx_len), bool),       # context: fully live
-             i[None, :] <= i[:, None]], axis=1)      # intra-chunk: causal
-        bias = jnp.where(allowed, 0.0, NEG_INF)[None, None]     # [1,1,C,S']
-        s = _scores(q, k_cat.transpose(0, 2, 1, 3), cfg) + bias
-        p = jax.nn.softmax(s, axis=-1)
-        out = _weighted_v(p, v_cat.transpose(0, 2, 1, 3), cfg).astype(x.dtype)
+        out = core(q, pool, pt_row, k_t, v_t)
     y = out.reshape(b, c_len, cfg.num_heads * hd) @ params["wo"]
 
     # writes: full groups → pool blocks, trailing partial group → residual
@@ -542,6 +658,36 @@ def paged_prefill_attention(params, cfg, x, pool, pt_row, slot, ctx_len: int,
         new_pool = new_pool.write_residual(
             slot, k_t[:, :, n_full:], v_t[:, :, n_full:])
     return y, new_pool
+
+
+def _paged_prefill_wave_core(q, pool, page_table, ctx_lens, chunk_lens, k_t,
+                             v_t, *, cfg, use_pallas):
+    """Attend-only body of :func:`paged_prefill_wave_attention`; the
+    ``write_wave`` scatter stays outside (elementwise per KV head)."""
+    c_len = q.shape[1]
+    r = pool.group_size
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return kops.qprefill_paged_attention(
+            q, pool, page_table, ctx_lens, k_t, v_t,
+            chunk_lens).astype(q.dtype)
+    live = _concrete_live_pages(ctx_lens, r)
+    pt = page_table if live is None else page_table[:, :live]
+    k_ctx, v_ctx = pool.gather_dequant(pt, q.dtype)  # [S,Hkv,P'·R,D]
+    k_cat = jnp.concatenate([k_ctx, k_t.astype(q.dtype)], axis=2)
+    v_cat = jnp.concatenate([v_ctx, v_t.astype(q.dtype)], axis=2)
+    s_ctx = k_ctx.shape[2]
+    i = jnp.arange(c_len)
+    kidx = jnp.arange(s_ctx + c_len)
+    valid = jnp.where(
+        kidx[None, None, :] < s_ctx,
+        kidx[None, None, :] < ctx_lens[:, None, None],
+        ((kidx[None, None, :] - s_ctx) <= i[None, :, None])
+        & ((kidx[None, None, :] - s_ctx) < chunk_lens[:, None, None]))
+    bias = jnp.where(valid, 0.0, NEG_INF)[:, None]          # [S,1,C,S']
+    sc = _scores(q, k_cat.transpose(0, 2, 1, 3), cfg) + bias
+    p = jax.nn.softmax(sc, axis=-1)
+    return _weighted_v(p, v_cat.transpose(0, 2, 1, 3), cfg).astype(q.dtype)
 
 
 def paged_prefill_wave_attention(params, cfg, x, pool, page_table, ctx_lens,
@@ -577,29 +723,19 @@ def paged_prefill_wave_attention(params, cfg, x, pool, page_table, ctx_lens,
     k_t = k_new.transpose(0, 2, 1, 3)   # [S, Hkv, C, D]
     v_t = v_new.transpose(0, 2, 1, 3)
 
-    if use_pallas:
-        from repro.kernels import ops as kops
-        out = kops.qprefill_paged_attention(
-            q, pool, page_table, ctx_lens, k_t, v_t,
-            chunk_lens).astype(x.dtype)
+    core = functools.partial(_paged_prefill_wave_core, cfg=cfg,
+                             use_pallas=use_pallas)
+    shard = _paged_head_shard(pool)
+    if shard is not None:
+        rules, ax = shard
+        P = jax.sharding.PartitionSpec
+        out = _head_sharded_call(
+            core, rules, ax, q, pool,
+            (page_table, ctx_lens, chunk_lens, k_t, v_t),
+            (P(), P(), P(), P(None, ax, None, None),
+             P(None, ax, None, None)))
     else:
-        live = _concrete_live_pages(ctx_lens, r)
-        pt = page_table if live is None else page_table[:, :live]
-        k_ctx, v_ctx = pool.gather_dequant(pt, x.dtype)  # [S,Hkv,P'·R,D]
-        k_cat = jnp.concatenate([k_ctx, k_t.astype(x.dtype)], axis=2)
-        v_cat = jnp.concatenate([v_ctx, v_t.astype(x.dtype)], axis=2)
-        s_ctx = k_ctx.shape[2]
-        i = jnp.arange(c_len)
-        kidx = jnp.arange(s_ctx + c_len)
-        valid = jnp.where(
-            kidx[None, None, :] < s_ctx,
-            kidx[None, None, :] < ctx_lens[:, None, None],
-            ((kidx[None, None, :] - s_ctx) <= i[None, :, None])
-            & ((kidx[None, None, :] - s_ctx) < chunk_lens[:, None, None]))
-        bias = jnp.where(valid, 0.0, NEG_INF)[:, None]          # [S,1,C,S']
-        sc = _scores(q, k_cat.transpose(0, 2, 1, 3), cfg) + bias
-        p = jax.nn.softmax(sc, axis=-1)
-        out = _weighted_v(p, v_cat.transpose(0, 2, 1, 3), cfg).astype(x.dtype)
+        out = core(q, pool, page_table, ctx_lens, chunk_lens, k_t, v_t)
 
     y = out.reshape(s, c_len, cfg.num_heads * hd) @ params["wo"]
     new_pool = pool.write_wave(k_t, v_t, page_table, ctx_lens, chunk_lens)

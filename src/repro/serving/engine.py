@@ -142,6 +142,16 @@ class EngineStats:
     pool_utilization: float = 0.0   # at the last allocator event
     pool_high_watermark: float = 0.0
     host_utilization: float = 0.0   # host-tier fill at the last event
+    # mesh sharding (continuous engine with mesh=...): the pool's packed
+    # bytes split over the kv_heads mesh axis into n_shards slices. The
+    # allocator stays global — one decision, every shard holds the same
+    # block SET — so per-shard occupancy is uniform by construction; the
+    # lists make that invariant visible (and auditable) in the reports
+    n_shards: int = 1
+    shard_pool_utilization: list = dataclasses.field(default_factory=list,
+                                                     repr=False)
+    shard_pool_high_watermark: list = dataclasses.field(default_factory=list,
+                                                        repr=False)
     # device round-trips spent admitting requests: dense prefill + adopt
     # count one each; serial paged prefill one per request; batched
     # admission one per chunk wave (the number the batched path shrinks)
@@ -466,7 +476,8 @@ class ContinuousEngine:
                  preempt: bool | None = None, speculate_k: int = 0,
                  drafter=None, fused_verify: bool = False,
                  max_waiting: int | None = None, stall_ticks: int = 200,
-                 guard_nan: bool = False, faults=None, audit: bool = False):
+                 guard_nan: bool = False, faults=None, audit: bool = False,
+                 mesh=None, sharding_rules=None):
         cfg = api.cfg
         self.api = api
         self.params = params
@@ -501,6 +512,36 @@ class ContinuousEngine:
 
         self.state = api.init_paged_state(
             schedule, max_batch, self.num_blocks, self.max_pages)
+
+        # ------------------------------------------------- mesh sharding
+        # mesh=None keeps the classic single-device engine byte-for-byte.
+        # With a mesh, the pool's packed codes/scales and residual windows
+        # split over the `kv_heads` rules axis (one slice of every block
+        # per device); page table, lengths, weights and the allocator stay
+        # logically global — replicated tables, ONE allocation decision.
+        # Greedy outputs are token-identical to single-device: attention is
+        # embarrassingly parallel over KV heads and all replicated compute
+        # is bitwise the same on every device (see models/attention.py
+        # ``_head_sharded_call``).
+        self.mesh = mesh
+        self._rules = None
+        self._shard_axis = None
+        self._n_shards = 1
+        if mesh is not None:
+            from repro.distributed.sharding import make_rules
+            self._rules = sharding_rules if sharding_rules is not None \
+                else make_rules(mesh)
+            ax = self._rules.axes("kv_heads", cfg.num_kv_heads)
+            if isinstance(ax, str):
+                self._shard_axis = ax
+                self._n_shards = mesh.shape[ax]
+            self.state = dataclasses.replace(
+                self.state, pools=self._place_pools(self.state.pools),
+                page_table=self._to_dev(self.state.page_table),
+                lengths=self._to_dev(self.state.lengths))
+            self.params = jax.device_put(self.params, self._replicated())
+        self.stats.n_shards = self._n_shards
+
         self.alloc = BlockAllocator(self.num_blocks)
         # host tier: one capacity knob shared by prefix spills and
         # preemption parking — the host-RAM mirror of num_blocks
@@ -533,31 +574,37 @@ class ContinuousEngine:
         self.decode_horizon = decode_horizon
         # donate the state: the pool is sized to fill HBM, so the step must
         # update it in place rather than hold old+new copies (no-op on CPU)
-        self._step = jax.jit(
+        # (`_with_rules` makes the engine's sharding rules ambient while a
+        # jitted callable traces/runs, so attention picks the shard_map
+        # path; identity when mesh is None — `_step_jit` keeps the raw jit
+        # for the `decode_compilations` cache-size probe)
+        self._step_jit = jax.jit(
             partial(api.paged_decode_step, use_pallas=use_pallas),
             donate_argnums=(1,))
-        self._loop = jax.jit(
+        self._step = self._with_rules(self._step_jit)
+        self._loop = self._with_rules(jax.jit(
             partial(api.paged_decode_loop, horizon=decode_horizon,
                     use_pallas=use_pallas, greedy=greedy),
-            donate_argnums=(1,))
+            donate_argnums=(1,)))
         # NOTE: adoption (like any prefill) traces per distinct prompt-group
         # count — that is admission cost, paid once per request; the decode
         # step above stays single-compile for the whole run.
-        self._adopt = jax.jit(api.paged_adopt, donate_argnums=(0,))
+        self._adopt = self._with_rules(
+            jax.jit(api.paged_adopt, donate_argnums=(0,)))
         # chunked in-pool prefill: retraces once per distinct
         # (suffix length, shared-prefix length) pair — `start` is static so
         # each chunk attends only the live context blocks, not max_pages
-        self._prefill = jax.jit(
+        self._prefill = self._with_rules(jax.jit(
             partial(api.prefill_paged, chunk=self.prefill_chunk,
                     use_pallas=use_pallas),
-            static_argnums=(4,), donate_argnums=(1,))
+            static_argnums=(4,), donate_argnums=(1,)))
         # batched admission wave: per-slot context/chunk lengths are traced
         # (the fused prefill kernel is length-aware), so this compiles ONCE
         # and serves every burst composition — one device round-trip per
         # chunk wave instead of per request
-        self._wave = jax.jit(
+        self._wave = self._with_rules(jax.jit(
             partial(api.prefill_paged_wave, use_pallas=use_pallas),
-            donate_argnums=(1,))
+            donate_argnums=(1,)))
         # speculative decode: acceptance is greedy-consistency, and the
         # single-flush rollback bound requires a whole speculative commit
         # (k accepted drafts + 1 bonus token) to fit in one quant group
@@ -576,10 +623,10 @@ class ContinuousEngine:
         self.fused_verify = fused_verify
         from repro.serving.draft import PromptLookupDrafter
         self.drafter = drafter if drafter is not None else PromptLookupDrafter()
-        self._spec = jax.jit(
+        self._spec = self._with_rules(jax.jit(
             partial(api.paged_spec_step, use_pallas=use_pallas,
                     fused=fused_verify),
-            donate_argnums=(1,))
+            donate_argnums=(1,)))
 
         # ---------------------------------------- lifecycle / fault layer
         if max_waiting is not None and max_waiting < 1:
@@ -659,9 +706,56 @@ class ContinuousEngine:
         """Distinct decode-step compilations (the acceptance metric): stays
         at 1 for any mix of prompt lengths and admission points."""
         try:
-            return int(self._step._cache_size())
+            return int(self._step_jit._cache_size())
         except AttributeError:  # older jax: one fixed-shape step → 1 compile
             return 1 if self.stats.decode_steps else 0
+
+    # ------------------------------------------------------- mesh plumbing
+    def _replicated(self):
+        from jax.sharding import NamedSharding, PartitionSpec
+        return NamedSharding(self.mesh, PartitionSpec())
+
+    def _to_dev(self, x):
+        """Host array → device. Single-device: plain (uncommitted) upload.
+        Mesh: commit replicated, so page-table/length pushes never hand the
+        jitted step an array whose placement disagrees with the sharded
+        pools (mixing differently-committed inputs is a jit error)."""
+        x = jnp.asarray(x)
+        if self.mesh is None:
+            return x
+        return jax.device_put(x, self._replicated())
+
+    def _place_pools(self, pools: list) -> list:
+        """Commit every pool array to the mesh: arrays with the KV-head dim
+        (always dim 1: packed codes, scales/zeros, residual windows) split
+        over the kv_heads axis, dummy 1-D scale placeholders replicated.
+        Also the re-placement point after host-tier swap-ins, whose eager
+        scatters may lose the sharding layout."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        ax = self._shard_axis
+
+        def place(a):
+            spec = P(None, ax) if ax is not None and jnp.ndim(a) >= 2 \
+                else P()
+            return jax.device_put(a, NamedSharding(self.mesh, spec))
+
+        return [jax.tree.map(place, p) if p is not None else None
+                for p in pools]
+
+    def _with_rules(self, fn):
+        """Wrap a jitted callable so the engine's sharding rules are the
+        ambient rules while it traces and runs (attention consults
+        ``active_rules()`` to pick the KV-head shard_map path). Identity
+        when the engine has no mesh."""
+        if self._rules is None:
+            return fn
+        from repro.distributed.sharding import use_rules
+        rules = self._rules
+
+        def run(*args):
+            with use_rules(rules):
+                return fn(*args)
+        return run
 
     # ----------------------------------------------------- lifecycle layer
     def _finish(self, req: Request, status: str,
@@ -991,6 +1085,13 @@ class ContinuousEngine:
         self.stats.pool_utilization = self.alloc.utilization
         self.stats.pool_high_watermark = \
             self.alloc.high_watermark / max(self.num_blocks - 1, 1)
+        # per-shard occupancy: allocation is global (one decision covers
+        # every shard's slice of a block), so each shard's fill equals the
+        # global fill — recorded per shard to keep reports honest about it
+        self.stats.shard_pool_utilization = \
+            [self.stats.pool_utilization] * self._n_shards
+        self.stats.shard_pool_high_watermark = \
+            [self.stats.pool_high_watermark] * self._n_shards
         if self.host is not None and self.host.capacity:
             self.stats.host_utilization = len(self.host) / self.host.capacity
 
@@ -1098,13 +1199,18 @@ class ContinuousEngine:
                 return False
             self.host.release(handles)
         pools = offload.scatter_residual(pools, parked.residuals, slot)
+        if self.mesh is not None:
+            # host-tier scatters run eagerly and may hand back arrays with
+            # a propagated (not committed-by-rule) layout; re-commit so the
+            # jitted step's input shardings never drift mid-run
+            pools = self._place_pools(pools)
         self._pt[slot, :] = 0
         self._pt[slot, :len(pages)] = pages
         lengths = self.state.lengths.at[slot].set(
             len(req.prompt) + len(req.output) - 1)
         self.state = dataclasses.replace(
             self.state, pools=pools, lengths=lengths,
-            page_table=jnp.asarray(self._pt))
+            page_table=self._to_dev(self._pt))
         self._slots[slot] = req
         self._slot_pages[slot] = pages
         self._current[slot] = req.output[-1]
@@ -1162,7 +1268,7 @@ class ContinuousEngine:
         self._pt[slot, :] = 0
         self._pt[slot, :len(pages)] = pages
         self.state = dataclasses.replace(
-            self.state, page_table=jnp.asarray(self._pt))
+            self.state, page_table=self._to_dev(self._pt))
 
         if self.prefill_paged:
             # chunked in-pool prefill of the non-cached suffix only
@@ -1231,7 +1337,7 @@ class ContinuousEngine:
             self._pt[slot, :] = 0
             self._pt[slot, :len(pages)] = pages
         self.state = dataclasses.replace(
-            self.state, page_table=jnp.asarray(self._pt))
+            self.state, page_table=self._to_dev(self._pt))
 
         suffixes = [np.asarray(req.prompt)[n_shared * r:]
                     for req, _, _, n_shared in batch]

@@ -1,0 +1,13 @@
+"""Force 8 virtual CPU devices BEFORE the jax backend initializes, so
+multi-device paths (the shard_map-sharded paged pool, ``ContinuousEngine``
+with a mesh, SPMD parity) are testable in-process on any machine.
+
+pytest imports conftest before any test module, and ``repro.launch.mesh``
+keeps its no-device-state-at-import contract, so setting ``XLA_FLAGS`` here
+is early enough. Single-device tests are unaffected: default placement is
+still device 0, and an externally exported ``XLA_FLAGS`` with the flag
+already present wins over this default.
+"""
+from repro.launch.mesh import force_host_device_count
+
+force_host_device_count(8)

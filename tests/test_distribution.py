@@ -47,6 +47,79 @@ def test_spec_dedup_one_axis_one_dim():
     assert len(flat) == len(set(flat))  # no duplicate mesh axes
 
 
+def test_rules_missing_mesh_axis_drops_out():
+    """A table written for the multi-pod mesh still resolves on a
+    (data, model) mesh: names absent from the mesh silently drop."""
+    rules = make_rules(abstract_mesh())        # no "pod" axis
+    assert rules.axes("batch", 256) == "data"  # ("pod","data") → data only
+    only_pod = make_rules(abstract_mesh(), {"weird": ("pod",)})
+    assert only_pod.axes("weird", 256) is None
+    assert only_pod.spec("weird", shape=(256,)) == \
+        jax.sharding.PartitionSpec(None)
+
+
+def test_rules_repeated_axis_collapses():
+    """("model", "model") in one entry must not double-count the axis —
+    it collapses to a single occurrence."""
+    rules = make_rules(abstract_mesh(), {"dup": ("model", "model")})
+    assert rules.axes("dup", 32) == "model"
+    # P(("model","model")) would claim 256 shards; the dedup keeps 16
+    assert rules.spec("dup", shape=(32,)) == \
+        jax.sharding.PartitionSpec("model")
+
+
+def test_rules_degenerate_dim_replicates():
+    rules = make_rules(abstract_mesh())
+    assert rules.axes("heads", 0) is None
+    assert rules.axes("heads", -4) is None
+
+
+def test_spec_same_logical_twice_earlier_dim_wins():
+    """One mesh axis shards at most one dim: the second `heads` dim (e.g.
+    q heads and kv heads of one fused tensor) falls back to replication."""
+    rules = make_rules(abstract_mesh())
+    spec = rules.spec("heads", "kv_heads", shape=(32, 32))
+    assert spec == jax.sharding.PartitionSpec("model", None)
+
+
+def test_spec_pruned_dim_frees_axes_for_later_dims():
+    """A dim whose post-dedup divisibility fails must fall back to
+    replication WITHOUT claiming the axes it could not use — a later dim
+    with a compatible shape still gets them."""
+    rules = make_rules(abstract_mesh(), {"a": ("data", "model"),
+                                         "b": ("model",)})
+    # dim0: data(16) fits 16 but data*model(256) doesn't divide 16 → data
+    # only; dim1 takes model — the greedy prefix never blocks it here
+    spec = rules.spec("a", "b", shape=(16, 32))
+    assert spec == jax.sharding.PartitionSpec("data", "model")
+    # dim0 claims nothing at all when even its first axis fails; dim1 must
+    # still see every axis free
+    spec = rules.spec("a", "b", shape=(7, 32))
+    assert spec == jax.sharding.PartitionSpec(None, "model")
+
+
+# ----------------------------------------------------------- test mesh
+def test_make_test_mesh_shape_and_axes():
+    """conftest forces 8 host devices, so the test mesh builds in-process;
+    all devices land on the LAST axis (the one the paged pool shards)."""
+    from repro.launch.mesh import make_test_mesh
+
+    mesh = make_test_mesh(8)
+    assert mesh.axis_names == ("data", "model")
+    assert mesh.shape["data"] == 1 and mesh.shape["model"] == 8
+    single = make_test_mesh(1, axes=("model",))
+    assert single.shape["model"] == 1
+
+
+def test_make_test_mesh_validates():
+    from repro.launch.mesh import make_test_mesh
+
+    with pytest.raises(ValueError):
+        make_test_mesh(8, axes=())
+    with pytest.raises(RuntimeError, match="devices are visible"):
+        make_test_mesh(len(jax.devices()) + 1)
+
+
 # ----------------------------------------------------------------- specs
 @pytest.mark.parametrize("arch", sorted(ARCH_CONFIGS))
 def test_param_specs_all_archs_valid(arch):

@@ -1,0 +1,220 @@
+"""Multi-device paged serving tests (8 forced host CPU devices — see
+``tests/conftest.py``).
+
+Covers the mesh-sharded serving stack end-to-end: the paged pool's packed
+codes/scales and residual windows split by KV head over the ``model`` mesh
+axis while page table, lengths and weights replicate; greedy outputs of
+``ContinuousEngine(mesh=...)`` are token-identical to the single-device
+engine across kernel on/off × decode horizon × speculative decode (plain
+and fused verify) and under the full feature composition (prefix cache,
+batched admission, host-tier preemption, audit); per-shard analytic KV
+stream bytes are exactly 1/N of the global counters (no KV all-gather on
+the decode path); and the infeasible-shard fallback (KV heads not
+divisible by the mesh axis) degrades to replicated, still-identical
+serving instead of crashing.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.cache.paged import PagedKVPool
+from repro.configs.base import ModelConfig
+from repro.core.precision import KVTunerSchedule, PrecisionPair
+from repro.launch.mesh import make_test_mesh
+from repro.models.registry import build_model
+from repro.serving.engine import ContinuousEngine, Request
+
+jax.config.update("jax_platform_name", "cpu")
+
+R = 8
+N_DEV = 8
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < N_DEV,
+    reason="needs 8 host devices (tests/conftest.py sets XLA_FLAGS before "
+           "jax init; something initialized jax earlier)")
+
+
+# =========================================================== fixtures
+@pytest.fixture(scope="module")
+def tiny_api():
+    # num_kv_heads=8 divides the 8-wide model axis exactly (1 KV head per
+    # device); num_heads=16 keeps GQA (2 q heads per KV head) in play
+    cfg = ModelConfig(name="sharded-tiny", family="dense", num_layers=2,
+                      d_model=64, num_heads=16, num_kv_heads=8, d_ff=128,
+                      vocab_size=61, q_chunk=16, kv_group_size=R)
+    return build_model(cfg)
+
+
+@pytest.fixture(scope="module")
+def tiny_params(tiny_api):
+    return tiny_api.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def sched():
+    return KVTunerSchedule.uniform(2, PrecisionPair(8, 4))
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_test_mesh(N_DEV)
+
+
+def _workload(seed=1, n=4, max_new=8):
+    rng = np.random.default_rng(seed)
+    tpl = rng.integers(1, 60, 16)
+    prompts = [np.concatenate([tpl, rng.integers(1, 60, 1 + i % 4)])
+               for i in range(n)]
+    return [Request(uid=i, prompt=p.astype(np.int32), max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+
+
+def _run(engine, reqs):
+    for r in reqs:
+        engine.submit(r)
+    done = sorted(engine.run(), key=lambda r: r.uid)
+    engine.alloc.assert_consistent()
+    return [list(r.output) for r in done]
+
+
+def _engine(api, params, sched, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_seq", 64)
+    return ContinuousEngine(api, params, sched, **kw)
+
+
+@pytest.fixture(scope="module")
+def reference(tiny_api, tiny_params, sched):
+    """Single-device greedy outputs every mesh config must reproduce."""
+    return _run(_engine(tiny_api, tiny_params, sched), _workload())
+
+
+# ====================================================== state placement
+def test_pool_arrays_sharded_by_kv_head(tiny_api, tiny_params, sched, mesh):
+    """Packed codes/scales and residual windows split Hkv over `model`
+    (one head per device here); page table and lengths replicate."""
+    eng = _engine(tiny_api, tiny_params, sched, mesh=mesh)
+    assert eng.stats.n_shards == N_DEV
+    pool = eng.state.pools[0]
+    hkv = tiny_api.cfg.num_kv_heads
+    for name in ("k_codes", "v_codes", "k_res", "v_res"):
+        arr = getattr(pool, name)
+        spec = arr.sharding.spec
+        assert spec[1] == "model", (name, spec)
+        local = arr.addressable_shards[0].data.shape
+        assert local[1] == hkv // N_DEV, (name, local)
+    # quantized scales shard too (dim 1 is Hkv whenever ndim >= 2)
+    if pool.k_scale.ndim >= 2:
+        assert pool.k_scale.sharding.spec[1] == "model"
+    for name in ("page_table", "lengths"):
+        spec = getattr(eng.state, name).sharding.spec
+        assert all(p is None for p in spec), (name, spec)
+
+
+def test_infeasible_heads_fall_back_replicated(sched, mesh):
+    """KV heads not divisible by the axis (2 % 8): the engine serves
+    replicated (n_shards=1) instead of crashing, outputs unchanged."""
+    cfg = ModelConfig(name="sharded-odd", family="dense", num_layers=2,
+                      d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+                      vocab_size=61, q_chunk=16, kv_group_size=R)
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    sch = KVTunerSchedule.uniform(2, PrecisionPair(8, 4))
+    ref = _run(_engine(api, params, sch), _workload())
+    eng = _engine(api, params, sch, mesh=mesh)
+    assert eng.stats.n_shards == 1
+    assert _run(eng, _workload()) == ref
+
+
+# ================================================== greedy token identity
+@pytest.mark.parametrize("kw", [
+    dict(),
+    dict(use_pallas=True),
+    dict(decode_horizon=3),
+    dict(use_pallas=True, decode_horizon=3),
+    dict(speculate_k=2),
+    dict(speculate_k=2, fused_verify=True),
+    dict(speculate_k=2, use_pallas=True),
+], ids=["xla", "pallas", "horizon3", "pallas-h3", "spec2", "spec2-fused",
+        "spec2-pallas"])
+def test_mesh_token_identity(tiny_api, tiny_params, sched, mesh, reference,
+                             kw):
+    """The acceptance property: sharding the pool over 8 devices changes
+    where bytes live, never which tokens come out — across kernel on/off ×
+    decode horizon × speculative decode (plain + fused verify)."""
+    eng = _engine(tiny_api, tiny_params, sched, mesh=mesh, **kw)
+    assert _run(eng, _workload()) == reference
+    assert eng.stats.n_shards == N_DEV
+    # the decode step still compiles exactly once on the mesh
+    if not kw.get("speculate_k") and kw.get("decode_horizon", 1) == 1:
+        assert eng.decode_compilations == 1
+
+
+def test_mesh_full_composition_with_preemption(tiny_api, tiny_params, sched,
+                                               mesh):
+    """Prefix cache + batched admission path + priority scheduler +
+    undersized pool forcing host-tier swap-out/swap-in, auditor on: the
+    mesh engine survives the same gauntlet as the single-device engine,
+    token-identically."""
+    def work():
+        rng = np.random.default_rng(5)
+        tpl = rng.integers(1, 60, 24)
+        prompts = [np.concatenate([tpl, rng.integers(1, 60, 5)])
+                   for _ in range(6)]
+        return [Request(uid=i, prompt=p.astype(np.int32),
+                        max_new_tokens=[12, 12, 6, 6, 5, 5][i],
+                        arrival_step=[0, 0, 3, 5, 8, 11][i],
+                        priority=[0, 0, 2, 3, 4, 5][i])
+                for i, p in enumerate(prompts)]
+
+    base = _run(_engine(tiny_api, tiny_params, sched, prefix_cache=True,
+                        prefill_chunk=16, scheduler="priority"), work())
+    eng = _engine(tiny_api, tiny_params, sched, mesh=mesh, prefix_cache=True,
+                  prefill_chunk=16, scheduler="priority", num_blocks=14,
+                  host_blocks=10, audit=True)
+    assert _run(eng, work()) == base
+    assert eng.stats.preemptions > 0 and eng.stats.resumes > 0
+    assert eng.stats.swap_out_blocks > 0
+
+
+def test_mesh_batched_admission_identity(tiny_api, tiny_params, sched, mesh,
+                                         reference):
+    eng = _engine(tiny_api, tiny_params, sched, mesh=mesh,
+                  prefix_cache=True, batched_admission=True)
+    assert _run(eng, _workload()) == reference
+    assert eng.stats.prefix_hits + eng.stats.prefix_misses > 0
+
+
+# ===================================================== per-shard accounting
+def test_per_shard_stream_bytes_exact_fraction():
+    """Every analytic byte counter is proportional to Hkv, so a KV-head
+    shard streams EXACTLY total/N — the "no KV all-gather" invariant."""
+    pool = PagedKVPool.init(num_blocks=10, max_slots=2, kv_heads=8,
+                            head_dim=16, pair=PrecisionPair(8, 4),
+                            group_size=R)
+    lens = [37, 12]
+    for n in (2, 4, 8):
+        assert pool.block_bytes(n_shards=n) * n == pool.block_bytes()
+        assert pool.decode_stream_bytes(lens, n_shards=n) * n == \
+            pool.decode_stream_bytes(lens)
+        assert pool.verify_stream_bytes(lens, 3, n_shards=n) * n == \
+            pool.verify_stream_bytes(lens, 3)
+        assert pool.prefill_stream_bytes(lens, 16, n_shards=n) * n == \
+            pool.prefill_stream_bytes(lens, 16)
+    with pytest.raises(ValueError):
+        pool.decode_stream_bytes(lens, n_shards=3)   # 8 % 3 != 0
+
+
+def test_engine_shard_stats(tiny_api, tiny_params, sched, mesh):
+    eng = _engine(tiny_api, tiny_params, sched, mesh=mesh)
+    _run(eng, _workload())
+    s = eng.stats
+    assert s.n_shards == N_DEV
+    assert len(s.shard_pool_utilization) == N_DEV
+    assert len(s.shard_pool_high_watermark) == N_DEV
+    # allocation is global: per-shard occupancy is uniform and matches it
+    assert all(u == s.pool_utilization for u in s.shard_pool_utilization)
+    assert all(w == s.pool_high_watermark
+               for w in s.shard_pool_high_watermark)
+    assert max(s.shard_pool_high_watermark) > 0
