@@ -91,6 +91,63 @@ def ppl_from_nll(nll: float) -> float:
     return float(np.exp(min(nll, 30.0)))
 
 
+# -------------------------------------------------- machine-readable output
+BENCH_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                         "artifacts")
+BENCH_SCHEMA_KEYS = ("bench", "passed", "claims", "result", "config", "seed")
+
+
+def write_bench_json(name: str, result, claims: dict, config: dict | None =
+                     None, seed: int | None = None, out_dir: str | None =
+                     None) -> str:
+    """Write one benchmark entry's machine-readable record
+    (``BENCH_<name>.json``): its claim checks with overall pass/fail, the
+    measured result payload, and the run's config + seed — the perf
+    trajectory across PRs lives in these files, not in stdout. Returns the
+    path written."""
+    import json
+
+    out_dir = BENCH_DIR if out_dir is None else out_dir
+    os.makedirs(out_dir, exist_ok=True)
+    doc = {
+        "bench": name,
+        "passed": all(claims.values()) if claims else True,
+        "claims": {k: bool(v) for k, v in claims.items()},
+        "result": result,
+        "config": config or {},
+        "seed": seed,
+    }
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, default=str)
+    return path
+
+
+def validate_bench_json(path: str) -> dict:
+    """Schema-check one ``BENCH_<name>.json`` file (CI gate); returns the
+    parsed document or raises ``ValueError`` listing every violation."""
+    import json
+
+    with open(path) as f:
+        doc = json.load(f)
+    issues = [f"missing key {k!r}" for k in BENCH_SCHEMA_KEYS if k not in doc]
+    if not issues:
+        if not isinstance(doc["bench"], str):
+            issues.append("'bench' is not a string")
+        if not isinstance(doc["passed"], bool):
+            issues.append("'passed' is not a bool")
+        if not isinstance(doc["claims"], dict) or \
+                not all(isinstance(v, bool) for v in doc["claims"].values()):
+            issues.append("'claims' is not a {name: bool} map")
+        if not isinstance(doc["config"], dict):
+            issues.append("'config' is not an object")
+        if doc["claims"] and doc["passed"] != all(doc["claims"].values()):
+            issues.append("'passed' disagrees with the claim values")
+    if issues:
+        raise ValueError(f"{path}: " + "; ".join(issues))
+    return doc
+
+
 # ------------------------------------------------------- serving workloads
 # Every serving benchmark builds its request stream through these helpers
 # with an EXPLICIT seed (no module-level RNG state anywhere on the path), so

@@ -30,7 +30,7 @@ def main() -> None:
                             table5_accuracy, table8_throughput,
                             table9_error, table10_clustering,
                             table11_prefix, table12_offload, table13_chaos,
-                            table14_sharded)
+                            table14_sharded, table15_telemetry)
 
     print("# KVTuner reproduction benchmarks (paper tables)", flush=True)
     ctx = common.get_bench_model(log=lambda *a: print(*a, flush=True))
@@ -65,6 +65,9 @@ def main() -> None:
         # jax initializes, and this parent already initialized it
         "t14_sharded": lambda: table14_sharded.run_subprocess(
             tiny=args.fast),
+        "t15_telemetry": lambda: table15_telemetry.run(
+            ctx, per_template=2 if args.fast else 3,
+            max_new=8 if args.fast else 16),
         "kernels_micro": lambda: kernels_micro.run(ctx),
         "kernels_paged": lambda: kernels_micro.run_paged(ctx),
         "kernels_prefill": lambda: kernels_micro.run_prefill(ctx),
@@ -88,6 +91,7 @@ def main() -> None:
         "kernels_prefill": kernels_micro.check_prefill_claims,
         "kernels_verify": kernels_micro.check_verify_claims,
         "t8_speculative": table8_throughput.check_speculative_claims,
+        "t15_telemetry": table15_telemetry.check_paper_claims,
     }
     wanted = set(tables) if args.tables == "all" else \
         set(args.tables.split(","))
@@ -108,6 +112,13 @@ def main() -> None:
         print(f"{name},{us:.0f},claims_pass={ok}/{len(claims)}", flush=True)
         for claim, passed in claims.items():
             print(f"#   [{'PASS' if passed else 'FAIL'}] {claim}", flush=True)
+        # one machine-readable record per entry: the perf trajectory across
+        # PRs is tracked from these files, not stdout
+        common.write_bench_json(
+            name, result, claims,
+            config={"fast": args.fast,
+                    "seed_note": "workload seeds are fixed per table"},
+            seed=result.get("seed") if isinstance(result, dict) else None)
 
     os.makedirs(os.path.dirname(RESULTS_PATH), exist_ok=True)
     with open(RESULTS_PATH, "w") as f:

@@ -125,6 +125,7 @@ def run(ctx, n_templates: int = 3, per_template: int = 4,
                       **_spec_fields(on)},
         "prefill_tokens_saved_frac": saved,
         "outputs_identical": out_on == out_off,
+        "metrics": on.registry.snapshot(),
     }
 
 

@@ -131,6 +131,7 @@ def run(ctx, n_templates: int = 3, per_template: int = 4,
                       "submitted": len(prompts)},
         "outputs_identical": [q.output for q in tier_done]
                              == [q.output for q in base_done],
+        "metrics": s.registry.snapshot(),
     }
 
 

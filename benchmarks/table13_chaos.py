@@ -90,10 +90,23 @@ def run(ctx, n_templates: int = 3, per_template: int = 4,
                         p_host_put_fail=0.3, p_host_get_fail=0.3,
                         cancel_at=[(4, mid[0]), (11, mid[1])],
                         poison_at=[(6, (n // 2))], corrupt_at=[9])
+    # the chaos run is TRACED: the observability claims below assert every
+    # injected fault is visible from the telemetry layer alone
     chaos_done, chaos = drive(
         inj, guard_nan=True, audit=True, stall_ticks=40, max_waiting=2 * n,
-        num_blocks=1 + (max_batch + 1) * pages_per_req)
+        num_blocks=1 + (max_batch + 1) * pages_per_req, trace=True)
     audit_summary = chaos.audit()
+
+    from repro.serving.trace import validate_trace
+    trace_summary = validate_trace(chaos.tracer)
+    reg = chaos.metrics
+    fault_counters = {name: reg.counter(name).value
+                      for name in reg.names() if name.startswith("faults.")}
+    fault_events = [name for _, name, _ in chaos.tracer.engine_events
+                    if name.startswith("fault.")]
+    quarantine_events = sum(
+        1 for rt in chaos.tracer.requests.values()
+        for _, name, _ in rt.events if name == "quarantine")
 
     clean_out = {q.uid: list(q.output) for q in clean_done}
     survivors = [q for q in chaos_done if q.status == RequestStatus.DONE]
@@ -109,7 +122,12 @@ def run(ctx, n_templates: int = 3, per_template: int = 4,
                   "quarantined": chaos.stats.quarantined,
                   "faults_fired": inj.summary(),
                   "corrupted_uids": sorted(inj.corrupted_uids),
-                  "audit": audit_summary},
+                  "audit": audit_summary,
+                  "trace": trace_summary,
+                  "fault_counters": fault_counters,
+                  "fault_events": sorted(fault_events),
+                  "quarantine_events": quarantine_events,
+                  "metrics": reg.snapshot()},
         "all_terminal": all(q.terminal for q in chaos_done)
                         and len(chaos_done) == n,
         "survivors": len(survivors),
@@ -140,6 +158,26 @@ def check_paper_claims(result: dict) -> dict[str, bool]:
             c["quarantined"] == 2,
         "auditor clean at drain (zero leaked/aliased blocks)":
             c["audit"]["live_slots"] == 0 and c["audit"]["swap_parked"] == 0,
+        # observability: the faults are visible from telemetry alone
+        "fault counters match the injector's fired counts":
+            c["fault_counters"].get("faults.alloc", 0)
+            == fired["alloc_faults"]
+            and c["fault_counters"].get("faults.host_put", 0)
+            == fired["host_put_faults"]
+            and c["fault_counters"].get("faults.host_get", 0)
+            == fired["host_get_faults"]
+            and c["fault_counters"].get("faults.cancel", 0)
+            == fired["cancels_fired"]
+            and c["fault_counters"].get("faults.poison", 0)
+            == fired["poisons_fired"]
+            and c["fault_counters"].get("faults.corrupt", 0)
+            == fired["corruptions_fired"],
+        "every fired fault left a trace event":
+            len(c["fault_events"]) == sum(fired.values()),
+        "quarantines visible as trace events":
+            c["quarantine_events"] == c["quarantined"],
+        "chaos trace complete (every request a gap-free terminal tree)":
+            c["trace"]["terminal"] == result["workload"]["n_requests"],
     }
 
 

@@ -147,6 +147,7 @@ def run(ctx, n_requests: int = 6, max_new: int = 8, max_batch: int = 2,
         "sharded": sharded,
         "bytes": {"global": bytes_global, "per_shard": bytes_shard},
         "outputs_identical": identical,
+        "metrics": eng.metrics.snapshot(),
     }
 
 

@@ -1,0 +1,305 @@
+"""Table 15 (systems extension): serving telemetry — trace completeness,
+tracing overhead, and the online quant-quality probe vs the offline
+sensitivity table.
+
+Three gated properties of the telemetry layer (ISSUE 10):
+
+* **Completeness** — a traced run covering admission, prefix hits,
+  cancellation and deadline expiry yields, for every submitted request, a
+  gap-free properly-nested span tree ending in a terminal status; the
+  Perfetto export round-trips through JSON and validates against the
+  trace-event schema.
+* **Overhead** — the tracer-gated per-dispatch hook path, measured
+  directly (best-of-R microbenchmark) and amortized against the measured
+  per-dispatch decode-wall floor, costs <3% decode tokens/s; and traced
+  greedy outputs are token-identical to untraced ones (interleaved A/B
+  rounds on warmed engines, so jit never lands in a timed round).
+* **Probe fidelity** — the online per-layer e_k/e_v probe (sampled from
+  live pool blocks during serving) orders layers consistently with the
+  offline ``core/sensitivity.py`` table computed on the same prompts at
+  the same reference precision — KVTuner's layer-sensitivity story,
+  measured from the serving pool instead of calibration captures.
+
+Standalone: ``PYTHONPATH=src python -m benchmarks.table15_telemetry
+[--tiny]`` — writes ``experiments/artifacts/trace_t15.json`` (open in
+https://ui.perfetto.dev) and ``BENCH_t15_telemetry.json``.
+"""
+from __future__ import annotations
+
+import gc
+import json
+import time
+
+import numpy as np
+
+from repro.core.precision import KVTunerSchedule, PrecisionPair
+from repro.core.quant import MODE_PER_TOKEN
+from repro.core.sensitivity import capture_activations, layer_errors
+from repro.serving.engine import ContinuousEngine, EngineStats, Request
+from repro.serving.faults import FaultInjector
+from repro.serving.trace import (Tracer, to_perfetto, validate_perfetto,
+                                 validate_trace)
+
+OVERHEAD_BUDGET = 0.03     # tracing may cost at most 3% decode tokens/s
+ORDER_TIE_REL = 0.05       # offline errors within 5% count as a tie
+
+
+def _order_consistent(offline, online, tie_rel: float = ORDER_TIE_REL) -> bool:
+    """True when every layer pair the OFFLINE table separates by more than
+    ``tie_rel`` relative error is ordered the same way by the online probe
+    (near-ties are unconstrained — both tables estimate the same quantity
+    from different samples)."""
+    off = np.asarray(offline, float)
+    on = np.asarray(online, float)
+    for i in range(len(off)):
+        for j in range(i + 1, len(off)):
+            if abs(off[i] - off[j]) <= tie_rel * max(off[i], off[j]):
+                continue
+            if (off[i] - off[j]) * (on[i] - on[j]) < 0:
+                return False
+    return True
+
+
+def run(ctx, n_templates: int = 3, per_template: int = 3,
+        template_len: int = 32, suffix_len: int = 8, max_new: int = 16,
+        max_batch: int = 3, seed: int = 0, pair: tuple = (8, 4),
+        probe_bits: tuple = (2, 2), probe_every: int = 2,
+        rounds: int = 5, prefill_chunk: int | None = None,
+        trace_path: str | None = None) -> dict:
+    from benchmarks.common import poisson_arrivals, shared_template_prompts
+
+    cfg = ctx.api.cfg
+    # uniform schedule: the probe/offline comparison needs one (mode, bits)
+    # story across layers, and probe_bits must sit strictly below the
+    # stored pair (RTN re-quantization at the stored bits is lossless)
+    sched = KVTunerSchedule.uniform(cfg.num_layers, PrecisionPair(*pair),
+                                    mode=MODE_PER_TOKEN)
+    r = cfg.kv_group_size
+    if prefill_chunk is None:
+        prefill_chunk = 2 * r
+    max_seq = template_len + suffix_len + max_new + r
+
+    def make_prompts():
+        rng = np.random.default_rng(seed)
+        prompts = shared_template_prompts(cfg.vocab_size, n_templates,
+                                          per_template, template_len,
+                                          suffix_len, rng)
+        arrivals = poisson_arrivals(len(prompts), 2.0, rng)
+        return prompts, arrivals
+
+    prompts, arrivals = make_prompts()
+    n = len(prompts)
+
+    def build(uid0: int = 0, lifecycle: bool = False, **kw):
+        eng = kw.pop("engine", None)
+        if eng is None:
+            eng = ContinuousEngine(
+                ctx.api, ctx.params, sched, max_batch=max_batch,
+                max_seq=max_seq, prefix_cache=True,
+                prefill_chunk=prefill_chunk, seed=seed, **kw)
+        for i, p in enumerate(prompts):
+            # lifecycle coverage: one request times out mid-run; a second
+            # is cancelled by the injector's scheduled client churn
+            deadline = arrivals[i] + 2 if lifecycle and i == n - 1 else None
+            eng.submit(Request(uid=uid0 + i, prompt=p,
+                               max_new_tokens=max_new,
+                               arrival_step=arrivals[i],
+                               deadline_step=deadline))
+        done = sorted(eng.run(), key=lambda q: q.uid)
+        return done, eng
+
+    # ---- phase 1: coverage run (traced + probed + lifecycle endings) ----
+    inj = FaultInjector(seed=seed, cancel_at=[(3, n // 2)])
+    cov_done, cov = build(lifecycle=True, trace=True, faults=inj,
+                          probe_every=probe_every,
+                          probe_blocks=2 * max_batch,
+                          probe_bits=probe_bits)
+    trace_summary = validate_trace(cov.tracer)
+    doc = to_perfetto(cov.tracer)
+    round_trip = json.loads(json.dumps(doc))
+    perfetto_counts = validate_perfetto(round_trip)
+    if trace_path is not None:
+        with open(trace_path, "w") as f:
+            json.dump(doc, f)
+    probe_summary = cov.probe.summary()
+
+    # offline reference on the same prompts at the probe's reference pair
+    # (prompts are equal-length → stackable into one capture batch)
+    captures = capture_activations(
+        ctx.api, ctx.params,
+        [{"tokens": np.stack(prompts).astype(np.int32)}])
+    offline = layer_errors(captures, cfg, MODE_PER_TOKEN,
+                           pairs=[PrecisionPair(*probe_bits)])
+
+    # ---- phase 2: overhead (direct hook-path cost / dispatch floor) ------
+    # the <3% gate covers TRACING; the probe is a separately-knobbed
+    # sampler whose cost scales with 1/probe_every (documented in
+    # docs/observability.md, not gated here). Tracing adds no device work
+    # and no extra dispatches (the token-identity claim proves semantics
+    # unchanged), so its entire decode cost is the tracer-gated host hook
+    # on each dispatch: ``_ctx_lens`` + analytic bytes + ``_note_dispatch``,
+    # plus a handful of per-request span ops amortized over that request's
+    # dispatches. Differencing two wall-clock runs cannot resolve that
+    # ~10us effect here — host speed drifts several percent on sub-second
+    # timescales, swamping A/B medians, per-round pairs AND best-of-N
+    # floors — so the gate measures the hook path DIRECTLY (best-of-R
+    # microbench, stable to ~1%) and divides by the measured per-dispatch
+    # decode-wall floor of the untraced engine. The interleaved A/B rounds
+    # still run for the identity claim and the reported (noisy) floors.
+    engines: dict = {}
+    outputs: dict = {}
+    for mode, kw in (("off", {}), ("on", {"trace": True})):
+        done, engines[mode] = build(**kw)    # warm round: jit compiles here
+        outputs[mode] = [list(q.output) for q in done]
+    walls: dict = {"off": [], "on": []}
+    rates: dict = {"off": [], "on": []}
+    for rd in range(1, rounds + 1):
+        order = ("off", "on") if rd % 2 else ("on", "off")
+        for mode in order:
+            eng = engines[mode]
+            eng.stats = EngineStats()
+            if eng.tracer is not None:
+                eng.tracer = Tracer()       # bound tracer state per round
+            gc.collect()
+            gc.disable()                    # no gen2 pauses inside a round
+            try:
+                build(uid0=rd * n, engine=eng)
+            finally:
+                gc.enable()
+            walls[mode].append(list(eng.stats.step_wall_times))
+            rates[mode].append(eng.stats.decode_tokens_per_s)
+    floor = {}
+    for mode, per_round in walls.items():
+        depth = min(len(r) for r in per_round)
+        floor[mode] = np.array([r[:depth] for r in per_round]).min(axis=0)
+    per_mode = {m: float(np.median(v)) for m, v in rates.items()}
+
+    eng = engines["on"]
+    n_disp = len(floor["on"])
+    lens = np.full(max_batch, max_seq - 1)
+
+    def _best_of(fn, reps: int = 7, iters: int = 500) -> float:
+        best = float("inf")
+        for _ in range(reps):
+            eng.tracer = Tracer()
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                fn()
+            best = min(best, (time.perf_counter() - t0) / iters)
+        return best
+
+    def _dispatch_hook():
+        eng._ctx_lens()
+        eng._note_dispatch("decode", 0.0, 1e-3, eng._decode_bytes(lens),
+                           slots=max_batch)
+
+    def _request_hook():
+        eng.tracer.begin(0)
+        eng.tracer.phase(0, "prefill")
+        eng.tracer.phase(0, "decode")
+        eng.tracer.finish(0, "done")
+
+    hook_cost = _best_of(_dispatch_hook)
+    req_cost = _best_of(_request_hook)
+    eng.tracer = Tracer()
+    per_dispatch = hook_cost + req_cost * n / max(n_disp, 1)
+    floor_mean = float(floor["off"].mean())
+    overhead = per_dispatch / max(floor_mean, 1e-12)
+    ab_ratio = float(floor["on"].sum()) / max(float(floor["off"].sum()),
+                                              1e-12) - 1.0
+
+    return {
+        "workload": {"n_requests": n, "n_templates": n_templates,
+                     "template_len": template_len, "suffix_len": suffix_len,
+                     "max_new": max_new, "seed": seed, "pair": list(pair),
+                     "probe_bits": list(probe_bits), "rounds": rounds},
+        "trace": trace_summary,
+        "statuses": trace_summary["statuses"],
+        "perfetto": perfetto_counts,
+        "probe": probe_summary,
+        "offline": {"e_k": offline.e_k[:, 0].tolist(),
+                    "e_v": offline.e_v[:, 0].tolist()},
+        "order_consistent": {
+            "e_k": _order_consistent(offline.e_k[:, 0], probe_summary["e_k"]),
+            "e_v": _order_consistent(offline.e_v[:, 0], probe_summary["e_v"]),
+        },
+        "bandwidth": {
+            name: cov.metrics.gauge(f"engine.{name}_achieved_gbps").value
+            for name in ("decode", "prefill")},
+        "decode_tokens_per_s": per_mode,
+        "decode_dispatch_floor_ms": {m: float(v.sum()) * 1e3
+                                     for m, v in floor.items()},
+        "hook_cost_us": hook_cost * 1e6,
+        "request_hook_cost_us": req_cost * 1e6,
+        "ab_floor_ratio": ab_ratio,
+        "trace_overhead_frac": overhead,
+        "outputs_identical": outputs["on"] == outputs["off"],
+    }
+
+
+def check_paper_claims(result: dict) -> dict[str, bool]:
+    tr = result["trace"]
+    return {
+        "every request traced to a gap-free terminal span tree":
+            tr["terminal"] == result["workload"]["n_requests"],
+        "trace covers done + cancelled + timed-out endings":
+            {"done", "cancelled", "timed_out"} <= set(tr["statuses"]),
+        "perfetto export round-trips and validates":
+            result["perfetto"]["X"] > 0 and result["perfetto"]["M"] > 0,
+        "probe sampled live pool blocks on every layer":
+            result["probe"]["samples"] > 0
+            and len(result["probe"]["layers"]) > 0
+            and all(np.isfinite(result["probe"]["e_k"]))
+            and all(np.isfinite(result["probe"]["e_v"])),
+        "online probe orders layers like the offline table (e_k)":
+            result["order_consistent"]["e_k"],
+        "online probe orders layers like the offline table (e_v)":
+            result["order_consistent"]["e_v"],
+        "achieved-bandwidth gauges populated":
+            result["bandwidth"]["decode"] > 0
+            and result["bandwidth"]["prefill"] > 0,
+        "traced outputs token-identical to untraced":
+            result["outputs_identical"],
+        f"tracing overhead < {OVERHEAD_BUDGET:.0%} decode tokens/s":
+            result["trace_overhead_frac"] < OVERHEAD_BUDGET,
+    }
+
+
+def main() -> None:
+    import argparse
+    import os
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="random tiny model + small workload (CI smoke)")
+    args = ap.parse_args()
+
+    from benchmarks.common import BENCH_DIR, write_bench_json
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    trace_path = os.path.join(BENCH_DIR, "trace_t15.json")
+
+    if args.tiny:
+        from benchmarks.common import tiny_serving_ctx
+        ctx = tiny_serving_ctx("t15-tiny")
+        result = run(ctx, n_templates=2, per_template=4, template_len=24,
+                     suffix_len=8, max_new=24, max_batch=3, rounds=7,
+                     prefill_chunk=16, trace_path=trace_path)
+    else:
+        from benchmarks.common import get_bench_model
+        ctx = get_bench_model(log=lambda *a: print(*a, flush=True))
+        result = run(ctx, trace_path=trace_path)
+
+    claims = check_paper_claims(result)
+    print(json.dumps(result, indent=2, default=str))
+    for claim, passed in claims.items():
+        print(f"# [{'PASS' if passed else 'FAIL'}] {claim}", flush=True)
+    path = write_bench_json("t15_telemetry", result, claims,
+                            config={"tiny": args.tiny},
+                            seed=result["workload"]["seed"])
+    print(f"# trace: {trace_path}\n# bench record: {path}", flush=True)
+    if not all(claims.values()):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

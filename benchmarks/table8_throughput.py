@@ -150,6 +150,7 @@ def run_engines(ctx, n_requests: int = 10, max_new: int = 8,
                        "terminal_counts": cont.stats.terminal_counts},
         "outputs_identical": all(
             w.output == c.output for w, c in zip(wave_done, cont_done)),
+        "metrics": cont.metrics.snapshot(),
     }
 
 

@@ -48,6 +48,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.precision import KVTunerSchedule
+from repro.serving.telemetry import MetricsRegistry, QuantProbe
+from repro.serving.trace import Tracer
 
 
 class RequestStatus:
@@ -105,84 +107,120 @@ class _Parked:
     residuals: list | None       # per-layer (k_res, v_res) host rows
 
 
-@dataclasses.dataclass
-class EngineStats:
-    generated_tokens: int = 0
-    decode_tokens: int = 0       # subset emitted by decode steps (the first
-    prefill_tokens: int = 0      # token per request samples prefill logits)
-    wall_s: float = 0.0
-    waves: int = 0
-    decode_steps: int = 0
-    admitted: int = 0
+# EngineStats facade routing: every int counter lives in the metrics
+# registry as "engine.<field>" (so `stats.completed += 1` and a registry
+# export see the same number), float occupancy/wall fields are gauges, and
+# the old ad-hoc sample lists are bounded-reservoir histograms that iterate
+# exactly like the lists they replace (see repro.serving.telemetry).
+_STAT_COUNTERS = frozenset({
+    "generated_tokens", "decode_tokens", "prefill_tokens", "waves",
+    "decode_steps", "decode_dispatches", "admitted",
     # request-lifecycle terminal accounting (see RequestStatus)
-    completed: int = 0           # reached DONE
-    cancelled: int = 0           # client cancel()
-    timed_out: int = 0           # deadline/TTL expiry
-    shed: int = 0                # overload shedding / drain
-    failed: int = 0              # FAILED for any reason (quarantine incl.)
-    quarantined: int = 0         # subset of failed: NaN/Inf logit isolation
+    "completed", "cancelled", "timed_out", "shed", "failed", "quarantined",
     # prefix-cache accounting (continuous engine with prefix_cache=True)
-    prefix_hits: int = 0
-    prefix_misses: int = 0
-    prefix_hit_tokens: int = 0      # prompt tokens served from cached blocks
-    prefix_evicted_blocks: int = 0
+    "prefix_hits", "prefix_misses", "prefix_hit_tokens",
+    "prefix_evicted_blocks",
     # tiered-store accounting (host_blocks > 0 and/or preemption enabled)
-    preemptions: int = 0
-    resumes: int = 0                # swap-in resumes (token-identical)
-    recompute_resumes: int = 0      # host tier was full: replayed instead
-    replay_steps: int = 0           # decode steps spent rebuilding state
-    swap_out_blocks: int = 0        # device -> host (preemption parking)
-    swap_in_blocks: int = 0         # host -> device (resume + prefix hits)
-    host_prefix_hits: int = 0       # admissions served from a spilled chain
-    host_prefix_hit_tokens: int = 0
-    prefix_spilled_blocks: int = 0  # evictions that spilled instead of drop
-    prefix_dropped_blocks: int = 0  # evictions that really dropped
-    host_evicted_blocks: int = 0    # host-tier LRU drops
-    # pool occupancy (allocated fraction of usable device blocks)
-    pool_utilization: float = 0.0   # at the last allocator event
-    pool_high_watermark: float = 0.0
-    host_utilization: float = 0.0   # host-tier fill at the last event
-    # mesh sharding (continuous engine with mesh=...): the pool's packed
-    # bytes split over the kv_heads mesh axis into n_shards slices. The
-    # allocator stays global — one decision, every shard holds the same
-    # block SET — so per-shard occupancy is uniform by construction; the
-    # lists make that invariant visible (and auditable) in the reports
-    n_shards: int = 1
-    shard_pool_utilization: list = dataclasses.field(default_factory=list,
-                                                     repr=False)
-    shard_pool_high_watermark: list = dataclasses.field(default_factory=list,
-                                                        repr=False)
+    "preemptions", "resumes", "recompute_resumes", "replay_steps",
+    "swap_out_blocks", "swap_in_blocks", "host_prefix_hits",
+    "host_prefix_hit_tokens", "prefix_spilled_blocks",
+    "prefix_dropped_blocks", "host_evicted_blocks",
     # device round-trips spent admitting requests: dense prefill + adopt
     # count one each; serial paged prefill one per request; batched
     # admission one per chunk wave (the number the batched path shrinks)
-    prefill_dispatches: int = 0
+    "prefill_dispatches",
     # speculative decode accounting (continuous engine, speculate_k > 0):
     # a verify dispatch commits a VARIABLE number of tokens, so throughput
     # math must count committed tokens, never dispatches × slots
-    spec_steps: int = 0             # draft→verify→commit dispatches
-    drafted_tokens: int = 0         # candidate tokens proposed by the drafter
-    accepted_tokens: int = 0        # drafted tokens that were committed
-    # committed tokens per live slot per spec dispatch (>= 1 each: the
-    # verify of position 0 is a normal decode step) — p50/p95 below
-    accepted_lengths: list = dataclasses.field(default_factory=list,
-                                               repr=False)
-    # per-decode-step wall clock (seconds); multi-step horizons contribute
-    # their per-step average so percentiles stay per-token-step
-    step_wall_times: list = dataclasses.field(default_factory=list,
-                                              repr=False)
+    "spec_steps", "drafted_tokens", "accepted_tokens",
+})
+_STAT_GAUGES = frozenset({
+    "wall_s",
+    # pool occupancy (allocated fraction of usable device blocks) at the
+    # last allocator event; host-tier fill likewise
+    "pool_utilization", "pool_high_watermark", "host_utilization",
+})
+_STAT_HISTS = {
+    # per-DISPATCH decode wall clock (seconds): one real sample per device
+    # round-trip, whatever its step count — percentiles are over dispatches
+    "step_wall_times": "engine.decode_dispatch_wall_s",
     # per-prefill-dispatch wall clock and per-request admission-start →
     # first-token latency (seconds)
-    prefill_wall_times: list = dataclasses.field(default_factory=list,
-                                                 repr=False)
-    admit_latency_times: list = dataclasses.field(default_factory=list,
-                                                  repr=False)
+    "prefill_wall_times": "engine.prefill_dispatch_wall_s",
+    "admit_latency_times": "engine.admit_latency_s",
+    # committed tokens per live slot per spec dispatch (>= 1 each: the
+    # verify of position 0 is a normal decode step) — p50/p95 below
+    "accepted_lengths": "engine.accepted_len",
+}
+
+
+class EngineStats:
+    """Engine accounting, as a facade over one
+    :class:`~repro.serving.telemetry.MetricsRegistry`.
+
+    Every public field keeps its historical name and semantics —
+    ``generated_tokens``, ``decode_tokens`` (subset emitted by decode
+    steps; the first token per request samples prefill logits), terminal
+    counts, prefix/tier/speculation accounting, per-shard occupancy lists
+    — but counters and gauges are registry-backed (``engine.<field>``) and
+    the wall-time/accepted-length sample lists are bounded-reservoir
+    histograms, so ``stats.registry.snapshot()`` /
+    ``stats.registry.to_prometheus()`` export the whole surface. Plain
+    attribute reads/writes (``stats.completed += 1``) route through
+    ``__getattr__``/``__setattr__``; ``n_shards`` and the per-shard
+    occupancy lists stay ordinary attributes (the mesh allocator is
+    global, so each shard's fill equals the global fill — the lists keep
+    that invariant visible in reports)."""
+
+    def __init__(self, registry: MetricsRegistry | None = None):
+        d = self.__dict__
+        d["registry"] = MetricsRegistry() if registry is None else registry
+        for n in sorted(_STAT_COUNTERS):
+            self.registry.counter("engine." + n)
+        for n in sorted(_STAT_GAUGES):
+            self.registry.gauge("engine." + n)
+        for m in _STAT_HISTS.values():
+            self.registry.histogram(m)
+        self.registry.histogram("engine.decode_dispatch_steps")
+        d["n_shards"] = 1
+        d["shard_pool_utilization"] = []
+        d["shard_pool_high_watermark"] = []
+
+    def __getattr__(self, name):
+        reg = self.__dict__.get("registry")
+        if reg is not None:
+            if name in _STAT_COUNTERS:
+                return reg.counter("engine." + name).value
+            if name in _STAT_GAUGES:
+                return reg.gauge("engine." + name).value
+            if name in _STAT_HISTS:
+                return reg.histogram(_STAT_HISTS[name])
+        raise AttributeError(
+            f"{type(self).__name__} has no attribute {name!r}")
+
+    def __setattr__(self, name, value):
+        if name in _STAT_COUNTERS:
+            self.registry.counter("engine." + name).set(value)
+        elif name in _STAT_GAUGES:
+            self.registry.gauge("engine." + name).set(value)
+        elif name in _STAT_HISTS:
+            raise AttributeError(
+                f"{name} is a histogram — append/extend it instead")
+        else:
+            object.__setattr__(self, name, value)
 
     @property
     def throughput(self) -> float:
         return self.generated_tokens / max(self.wall_s, 1e-9)
 
     def record_step_wall(self, seconds: float, steps: int = 1) -> None:
-        self.step_wall_times.extend([seconds / steps] * steps)
+        """Record ONE decode dispatch: its real wall time plus its step
+        count (no per-step smearing — a ``decode_horizon=4`` dispatch is
+        one 4-step sample, so tail percentiles see true dispatch walls)."""
+        self.step_wall_times.append(seconds)
+        self.registry.histogram("engine.decode_dispatch_steps") \
+            .observe(steps)
+        self.decode_dispatches += 1
 
     def record_prefill_wall(self, seconds: float) -> None:
         self.prefill_wall_times.append(seconds)
@@ -199,19 +237,24 @@ class EngineStats:
                 "failed": self.failed, "quarantined": self.quarantined}
 
     @staticmethod
-    def _percentile(values: list, q: float) -> float:
+    def _percentile(values, q: float) -> float:
         """Percentile that is safe on empty samples (0.0, never a raise) so
-        reports from drained or all-shed runs don't crash."""
-        if not values:
+        reports from drained or all-shed runs don't crash. Accepts the
+        registry histograms (iterated as their sample reservoirs) and
+        plain lists alike."""
+        vals = list(values)
+        if not vals:
             return 0.0
-        return float(np.percentile(np.asarray(values), q))
+        return float(np.percentile(np.asarray(vals), q))
 
     @classmethod
-    def _percentile_ms(cls, values: list, q: float) -> float:
+    def _percentile_ms(cls, values, q: float) -> float:
         return cls._percentile(values, q) * 1e3
 
     @property
     def decode_p50_ms(self) -> float:
+        """Median decode DISPATCH wall time (one sample per device
+        round-trip — a multi-step horizon dispatch is one sample)."""
         return self._percentile_ms(self.step_wall_times, 50)
 
     @property
@@ -244,10 +287,12 @@ class EngineStats:
         (prefill-sampled admission tokens and host scheduling excluded — the
         kernel-facing throughput number). ``decode_tokens`` counts actual
         committed tokens, so multi-token speculative commits are credited
-        at their true count, not one-per-step-per-slot."""
-        if not self.step_wall_times:
+        at their true count, not one-per-step-per-slot. Uses the dispatch
+        histogram's exact running total (not the bounded reservoir)."""
+        wall = self.step_wall_times
+        if wall.count == 0:
             return 0.0
-        return self.decode_tokens / max(sum(self.step_wall_times), 1e-9)
+        return self.decode_tokens / max(wall.total, 1e-9)
 
     @property
     def acceptance_rate(self) -> float:
@@ -477,7 +522,9 @@ class ContinuousEngine:
                  drafter=None, fused_verify: bool = False,
                  max_waiting: int | None = None, stall_ticks: int = 200,
                  guard_nan: bool = False, faults=None, audit: bool = False,
-                 mesh=None, sharding_rules=None):
+                 mesh=None, sharding_rules=None, trace: bool = False,
+                 probe_every: int = 0, probe_blocks: int = 4,
+                 probe_bits: tuple = (2, 2)):
         cfg = api.cfg
         self.api = api
         self.params = params
@@ -648,9 +695,100 @@ class ContinuousEngine:
         self._by_uid: dict[int, Request] = {}
         self._done: list[Request] = []       # terminal requests, any status
         self._poison_uids: set = set()       # pending NaN-poison injections
+
+        # ------------------------------------------------ telemetry layer
+        # tracer=None keeps every hook site a dead `is not None` check —
+        # a tracing-off run executes no telemetry code at all. Tracing adds
+        # no device syncs (it reuses the walls the engine already measures
+        # around host-synced dispatches), so traced greedy outputs are
+        # token-identical to untraced ones. The quant-quality probe fires
+        # every `probe_every` host syncs (0 = off) and only READS pool
+        # state — see repro.serving.telemetry.QuantProbe.
+        self.tracer = Tracer() if trace else None
+        self.probe = QuantProbe(probe_every, probe_blocks, probe_bits,
+                                seed=seed) if probe_every else None
+        self._stream_cache = None
+
         self.faults = faults
         if faults is not None:
             faults.attach(self)
+
+    @property
+    def metrics(self) -> MetricsRegistry:
+        """The engine's metrics registry (owned by ``stats`` — resetting
+        ``eng.stats`` starts a fresh registry, as the warm-round
+        benchmarks rely on)."""
+        return self.stats.registry
+
+    # --------------------------------------------------- telemetry helpers
+    def _ctx_lens(self) -> np.ndarray:
+        """Per-slot cached KV lengths (tokens) for live, non-reserved
+        slots — the input to the pool's analytic byte counters."""
+        lens = np.zeros(self.max_batch, np.int64)
+        for i, req in enumerate(self._slots):
+            if req is None or i in self._reserved:
+                continue
+            lens[i] = len(req.prompt) + len(req.output) - 1
+        return lens[lens > 0]
+
+    def _stream_const(self) -> tuple:
+        """Per-shard byte constants of the pools' analytic stream counters
+        (``repro.cache.paged``), summed over layers and cached: pool shapes
+        never change mid-run, and recomputing them per dispatch costs more
+        than a tiny model's dispatch itself. ``(block, residual,
+        per-token fp unit)`` bytes."""
+        if self._stream_cache is None:
+            ns = self._n_shards
+            blk = res = unit = 0
+            for p in self.state.pools:
+                if p is None:
+                    continue
+                blk += p.block_bytes(ns)
+                rb = int(np.prod(p.k_res.shape[1:])) * p.k_res.dtype.itemsize
+                res += rb // ns
+                unit += p.k_res.shape[1] * p.head_dim \
+                    * p.k_res.dtype.itemsize // ns
+            self._stream_cache = (blk, res, unit)
+        return self._stream_cache
+
+    def _fetched(self, lens) -> int:
+        # lengths floor to full groups; a zero-context slot still fetches
+        # one aliased block (same rule as the pool counters)
+        if len(lens) == 0:
+            return 0
+        return int(np.sum(np.maximum(np.asarray(lens) // self.group_size,
+                                     1)))
+
+    def _decode_bytes(self, lens, steps: int = 1) -> int:
+        """Analytic per-device HBM bytes of ``steps`` fused decode launches
+        at pre-dispatch lengths ``lens`` (a horizon's later steps stream a
+        group more at most — the counters floor to full groups anyway)."""
+        blk, res, _ = self._stream_const()
+        return steps * (self._fetched(lens) * blk + 2 * len(lens) * res)
+
+    def _verify_bytes(self, lens, n_tokens: int) -> int:
+        blk, res, unit = self._stream_const()
+        return self._fetched(lens) * blk \
+            + 2 * len(lens) * (res + unit * n_tokens)
+
+    def _prefill_bytes(self, ctx_lens, chunk: int) -> int:
+        blk, _, unit = self._stream_const()
+        return self._fetched(ctx_lens) * blk \
+            + 2 * len(ctx_lens) * unit * chunk
+
+    def _note_dispatch(self, kind: str, t0: float, t1: float, n_bytes: int,
+                       span: str | None = None, **args) -> None:
+        """Record one device dispatch in the telemetry layer: cumulative
+        analytic stream-bytes counter, achieved-bandwidth gauge (analytic
+        bytes over the measured host-synced wall — the serve-time number
+        roofline.py's peak-bandwidth model is compared against), and an
+        engine-track trace span. Only called when tracing is on."""
+        reg = self.stats.registry
+        reg.counter(f"engine.{kind}_stream_bytes").inc(n_bytes)
+        reg.gauge(f"engine.{kind}_achieved_gbps").set(
+            n_bytes / max(t1 - t0, 1e-9) / 1e9)
+        self.tracer.engine_span(span or f"{kind}_dispatch", t0, t1,
+                                bytes=n_bytes, **args)
 
     # ------------------------------------------------------------- intake
     def submit(self, req: Request) -> None:
@@ -691,6 +829,8 @@ class ContinuousEngine:
                 f"{self.num_blocks - 1}")
         self._uids.add(req.uid)
         self._by_uid[req.uid] = req
+        if self.tracer is not None:
+            self.tracer.begin(req.uid)
         if self._draining:
             self._finish(req, RequestStatus.SHED,
                          "engine is draining: admission stopped")
@@ -776,6 +916,8 @@ class ContinuousEngine:
             self.stats.shed += 1
         elif status == RequestStatus.FAILED:
             self.stats.failed += 1
+        if self.tracer is not None:
+            self.tracer.finish(req.uid, status, error)
         self._done.append(req)
 
     def _release_slot(self, slot: int) -> None:
@@ -892,15 +1034,25 @@ class ContinuousEngine:
         self._release_slot(slot)
         self._poison_uids.discard(req.uid)
         self.stats.quarantined += 1
+        if self.tracer is not None:
+            self.tracer.event(req.uid, "quarantine", reason=reason)
         self._finish(req, RequestStatus.FAILED, reason)
 
     def audit(self) -> dict:
         """Run the engine-wide invariant auditor (leak/aliasing detector
         across allocator, page tables, prefix chains and host store);
-        raises ``repro.serving.audit.AuditError`` on any violation."""
-        from repro.serving.audit import audit_engine
+        raises ``repro.serving.audit.AuditError`` on any violation — after
+        recording it in the telemetry layer, so violations are observable
+        even when the caller swallows the exception."""
+        from repro.serving.audit import AuditError, audit_engine
 
-        return audit_engine(self)
+        try:
+            return audit_engine(self)
+        except AuditError as e:
+            self.stats.registry.counter("faults.audit_violations").inc()
+            if self.tracer is not None:
+                self.tracer.engine_event("audit_violation", error=str(e))
+            raise
 
     # ---------------------------------------------------------- admission
     def _free_slot(self) -> int | None:
@@ -1052,6 +1204,11 @@ class ContinuousEngine:
             if chain:
                 self.stats.prefix_hits += 1
                 self.stats.prefix_hit_tokens += len(chain) * self.group_size
+                if self.tracer is not None:
+                    self.tracer.event(
+                        req.uid, "prefix_match",
+                        tokens=len(chain) * self.group_size,
+                        host_blocks=len(hst))
             else:
                 self.stats.prefix_misses += 1
         self._note_pool()
@@ -1150,6 +1307,12 @@ class ContinuousEngine:
                                             residuals=residuals)
             self.stats.swap_out_blocks += len(excl)
         self.stats.preemptions += 1
+        if self.tracer is not None:
+            self.tracer.event(
+                req.uid, "preempt",
+                mode="recompute" if handles is None else "swap",
+                blocks=len(excl))
+            self.tracer.phase(req.uid, "queued")
         self._slots[slot] = None
         self._slot_pages[slot] = []
         req.status = RequestStatus.QUEUED
@@ -1218,6 +1381,9 @@ class ContinuousEngine:
         del self._parked[req.uid]
         self.stats.swap_in_blocks += n_host
         self.stats.resumes += 1
+        if self.tracer is not None:
+            self.tracer.event(req.uid, "swap_in", blocks=n_host)
+            self.tracer.phase(req.uid, "decode")
         self._note_pool()
         return True
 
@@ -1259,11 +1425,16 @@ class ContinuousEngine:
         self._current[slot] = out[-1]
         del self._parked[req.uid]
         self.stats.recompute_resumes += 1
+        if self.tracer is not None:
+            self.tracer.event(req.uid, "recompute_replay",
+                              steps=max(len(out) - 1, 0))
 
     def _admit(self, req: Request, slot: int, pages: list[int],
                n_shared: int = 0, replay: bool = False) -> None:
         t0 = time.time()
         req.status = RequestStatus.PREFILLING
+        if self.tracer is not None:
+            self.tracer.phase(req.uid, "prefill")
         plen = len(req.prompt)
         self._pt[slot, :] = 0
         self._pt[slot, :len(pages)] = pages
@@ -1279,9 +1450,16 @@ class ContinuousEngine:
             last_logits, self.state = self._prefill(
                 self.params, self.state, toks, jnp.int32(slot), start)
             np.asarray(last_logits)  # sync so the wall time is real
-            self.stats.record_prefill_wall(time.time() - ts)
+            now = time.time()
+            self.stats.record_prefill_wall(now - ts)
             self.stats.prefill_dispatches += 1
             self.stats.prefill_tokens += plen - start
+            if self.tracer is not None:
+                c = self.prefill_chunk
+                nb = sum(self._prefill_bytes([start + j * c], c)
+                         for j in range(-(-(plen - start) // c)))
+                self._note_dispatch("prefill", ts, now, nb,
+                                    uid=req.uid, tokens=plen - start)
         else:
             toks = jnp.asarray(np.asarray(req.prompt)[None], jnp.int32)
             ts = time.time()
@@ -1294,8 +1472,15 @@ class ContinuousEngine:
                 self.state, dense.caches, jnp.int32(slot),
                 jnp.asarray(pages[:n_groups], jnp.int32), jnp.int32(plen))
             np.asarray(last_logits)  # sync so the wall time is real
-            self.stats.record_prefill_wall(time.time() - ts)
+            now = time.time()
+            self.stats.record_prefill_wall(now - ts)
             self.stats.prefill_dispatches += 2  # dense prefill + adopt
+            if self.tracer is not None:
+                # dense prefill + adopt: the paged byte counters do not
+                # model this path, so the span carries no bandwidth gauge
+                self.tracer.engine_span("prefill_dispatch", ts, now,
+                                        uid=req.uid, tokens=plen,
+                                        dense=True)
 
         self._slots[slot] = req
         self._slot_pages[slot] = pages
@@ -1313,9 +1498,13 @@ class ContinuousEngine:
             # its decode-produced blocks/residual instead of sampling afresh
             self._replay(req, slot)
             req.status = RequestStatus.DECODING
+            if self.tracer is not None:
+                self.tracer.phase(req.uid, "decode")
             return
         self.stats.admitted += 1
         req.status = RequestStatus.DECODING
+        if self.tracer is not None:
+            self.tracer.phase(req.uid, "decode")
 
         tok = int(self._sample(last_logits)[0])
         self.stats.record_admit_latency(time.time() - t0)
@@ -1334,6 +1523,8 @@ class ContinuousEngine:
         c = self.prefill_chunk
         for req, slot, pages, _ in batch:
             req.status = RequestStatus.PREFILLING
+            if self.tracer is not None:
+                self.tracer.phase(req.uid, "prefill")
             self._pt[slot, :] = 0
             self._pt[slot, :len(pages)] = pages
         self.state = dataclasses.replace(
@@ -1360,8 +1551,14 @@ class ContinuousEngine:
                 self.params, self.state, jnp.asarray(tokens),
                 jnp.asarray(ctx), jnp.asarray(clen))
             logits = np.asarray(logits)  # host sync: wall time is real
-            self.stats.record_prefill_wall(time.time() - ts)
+            now = time.time()
+            self.stats.record_prefill_wall(now - ts)
             self.stats.prefill_dispatches += 1
+            if self.tracer is not None:
+                self._note_dispatch(
+                    "prefill", ts, now, self._prefill_bytes(ctx[clen > 0], c),
+                    span="prefill_wave", wave=w,
+                    lanes=int((clen > 0).sum()))
             for (req, slot, _, _), sfx in zip(batch, suffixes):
                 if w == (len(sfx) - 1) // c:  # this member's final wave
                     last_logits[slot] = logits[slot]
@@ -1380,6 +1577,8 @@ class ContinuousEngine:
                 self.prefix.insert(req.prompt, pages)
             self.stats.admitted += 1
             req.status = RequestStatus.DECODING
+            if self.tracer is not None:
+                self.tracer.phase(req.uid, "decode")
             # sample in admission order so the non-greedy rng stream matches
             # the serial path's draw order
             tok = int(self._sample(jnp.asarray(last_logits[slot][None]))[0])
@@ -1408,6 +1607,8 @@ class ContinuousEngine:
             # lifecycle sweep first: fault-injector actions fire, expired
             # deadlines cancel, so this tick's admissions see the truth
             self._lifecycle_tick()
+            if self.probe is not None:
+                self.probe.on_sync(self)
             # deliver simulated arrivals, then admit into free slots
             arrived = [r for r in self._pending
                        if r.arrival_step <= self._step_count]
@@ -1464,15 +1665,21 @@ class ContinuousEngine:
             if self.speculate_k:
                 self._run_spec(live, tokens, alive)
             elif self.decode_horizon == 1:
+                lens = self._ctx_lens() if self.tracer is not None else None
                 ts = time.time()
                 logits, self.state = self._step(
                     self.params, self.state, jnp.asarray(tokens[:, None]),
                     jnp.asarray(alive))
                 if self.guard_nan:
-                    self._step_guarded(live, logits, ts)
+                    self._step_guarded(live, logits, ts, lens)
                 else:
                     nxt = np.asarray(self._sample(logits))
-                    self.stats.record_step_wall(time.time() - ts)
+                    now = time.time()
+                    self.stats.record_step_wall(now - ts)
+                    if self.tracer is not None:
+                        self._note_dispatch("decode", ts, now,
+                                            self._decode_bytes(lens),
+                                            steps=1, slots=len(live))
                     self._step_count += 1
                     self.stats.decode_steps += 1
                     self.stats.decode_tokens += len(live)
@@ -1485,7 +1692,7 @@ class ContinuousEngine:
         self.stats.wall_s += time.time() - t0
         return self._done
 
-    def _step_guarded(self, live, logits, ts: float) -> None:
+    def _step_guarded(self, live, logits, ts: float, lens=None) -> None:
         """Host-side finish of one H=1 decode dispatch under ``guard_nan``:
         apply any pending logit-poison injections, quarantine slots whose
         logits went non-finite (corrupted block, poisoned activation), and
@@ -1496,7 +1703,11 @@ class ContinuousEngine:
         for i in live:
             if self._slots[i].uid in self._poison_uids:
                 lg[i] = np.nan      # injected fault: poison this slot only
-        self.stats.record_step_wall(time.time() - ts)
+        now = time.time()
+        self.stats.record_step_wall(now - ts)
+        if self.tracer is not None:
+            self._note_dispatch("decode", ts, now, self._decode_bytes(lens),
+                                steps=1, slots=len(live))
         self._step_count += 1
         self.stats.decode_steps += 1
         nxt = np.argmax(np.nan_to_num(lg, nan=0.0, posinf=0.0, neginf=0.0),
@@ -1520,13 +1731,19 @@ class ContinuousEngine:
             remaining[i] = req.max_new_tokens - len(req.output)
             if req.eos_id is not None:
                 eos[i] = req.eos_id
+        lens = self._ctx_lens() if self.tracer is not None else None
         ts = time.time()
         self.state, toks, emitted, self.rng = self._loop(
             self.params, self.state, jnp.asarray(tokens), jnp.asarray(alive),
             jnp.asarray(remaining), jnp.asarray(eos), self.rng)
         toks = np.asarray(toks)          # [H, max_batch]
         emitted = np.asarray(emitted)
-        self.stats.record_step_wall(time.time() - ts, h)
+        now = time.time()
+        self.stats.record_step_wall(now - ts, h)
+        if self.tracer is not None:
+            self._note_dispatch("decode", ts, now,
+                                self._decode_bytes(lens, steps=h),
+                                steps=h, slots=len(live))
         self._step_count += h
         self.stats.decode_steps += h
         self.stats.decode_tokens += int(emitted.sum())
@@ -1561,6 +1778,7 @@ class ContinuousEngine:
                                np.int32).ravel()[:k]
                 drafts[i, :len(d)] = d
                 n_draft[i] = len(d)
+            lens = self._ctx_lens() if self.tracer is not None else None
             ts = time.time()
             self.state, toks, emitted = self._spec(
                 self.params, self.state, jnp.asarray(tokens),
@@ -1568,8 +1786,13 @@ class ContinuousEngine:
                 jnp.asarray(alive), jnp.asarray(remaining), jnp.asarray(eos))
             toks = np.asarray(toks)          # [max_batch, k+1]
             emitted = np.asarray(emitted)    # [max_batch, k+1] bool
-            self.stats.record_step_wall(time.time() - ts)
+            now = time.time()
+            self.stats.record_step_wall(now - ts)
             counts = emitted.sum(axis=1)
+            if self.tracer is not None:
+                self._note_dispatch("spec", ts, now,
+                                    self._verify_bytes(lens, k + 1),
+                                    span="spec_dispatch", slots=len(live))
             self._step_count += 1
             self.stats.decode_steps += 1
             self.stats.spec_steps += 1
@@ -1578,6 +1801,10 @@ class ContinuousEngine:
                 self.stats.drafted_tokens += int(n_draft[i])
                 self.stats.accepted_tokens += int(counts[i]) - 1
                 self.stats.accepted_lengths.append(int(counts[i]))
+                if self.tracer is not None:
+                    self.tracer.event(self._slots[i].uid, "spec_commit",
+                                      drafted=int(n_draft[i]),
+                                      accepted=int(counts[i]) - 1)
                 for t in range(int(counts[i])):
                     self._emit(i, self._slots[i], int(toks[i, t]))
                     if self._slots[i] is None:

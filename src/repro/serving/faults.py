@@ -88,14 +88,28 @@ class FaultInjector:
         self.corruptions_fired = 0
         self.calls_fired = 0
         self.corrupted_uids: set = set()
+        self._engine = None
 
     # ------------------------------------------------------------- wiring
     def attach(self, engine) -> None:
         """Wire the probabilistic hooks into ``engine``'s allocator and
         host store (called by ``ContinuousEngine.__init__``)."""
+        self._engine = engine
         engine.alloc.fault_hook = self._alloc_hook
         if engine.host is not None:
             engine.host.fault_hook = self._host_hook
+
+    def _observe(self, kind: str, **args) -> None:
+        """Mirror one fired fault into the attached engine's telemetry:
+        a ``faults.<kind>`` counter always, plus an engine-track trace
+        event when tracing is on — chaos runs assert faults are
+        *observable* from the telemetry alone, not just survived."""
+        eng = self._engine
+        if eng is None:
+            return
+        eng.stats.registry.counter(f"faults.{kind}").inc()
+        if eng.tracer is not None:
+            eng.tracer.engine_event(f"fault.{kind}", **args)
 
     def _alloc_hook(self, n: int) -> bool:
         if self.max_alloc_faults is not None \
@@ -103,6 +117,7 @@ class FaultInjector:
             return False
         if self.p_alloc_fail and self.rng.random() < self.p_alloc_fail:
             self.alloc_faults += 1
+            self._observe("alloc", blocks=n)
             return True
         return False
 
@@ -117,6 +132,7 @@ class FaultInjector:
                 self.host_put_faults += 1
             else:
                 self.host_get_faults += 1
+            self._observe(f"host_{op}", blocks=n)
             return True
         return False
 
@@ -129,16 +145,19 @@ class FaultInjector:
             _, fn = self._call.pop(0)
             fn(engine)
             self.calls_fired += 1
+            self._observe("call", step=step)
         while self._cancel and self._cancel[0][0] <= step:
             _, uid = self._cancel.pop(0)
             if engine.cancel(uid):
                 self.cancels_fired += 1
+                self._observe("cancel", uid=uid, step=step)
         while self._poison and self._poison[0][0] <= step:
             _, uid = self._poison.pop(0)
             req = engine._by_uid.get(uid)
             if req is not None and not req.terminal:
                 engine._poison_uids.add(uid)
                 self.poisons_fired += 1
+                self._observe("poison", uid=uid, step=step)
         # corruption retries until a live exclusively-owned block exists
         remaining = []
         for s in self._corrupt:
@@ -185,6 +204,7 @@ class FaultInjector:
                 p, k_codes=p.k_codes.at[b].set(jnp.nan))
         engine.state = dataclasses.replace(engine.state, pools=pools)
         self.corrupted_uids.add(owner.uid)
+        self._observe("corrupt", uid=owner.uid, block=int(b))
         return True
 
     # ------------------------------------------------------------ reporting

@@ -1,0 +1,330 @@
+"""Serving metrics: counters, gauges, bounded-reservoir histograms, and the
+online quantization-quality probe.
+
+The :class:`MetricsRegistry` is the single metrics surface of the serving
+stack. ``EngineStats`` (``repro.serving.engine``) is a *facade* over one —
+every counter the engine bumps (``stats.completed += 1``) and every wall-
+time sample it records lands in a named registry metric, so one
+``registry.snapshot()`` / ``registry.to_prometheus()`` call exports the
+whole engine state without a second bookkeeping system. Metric names are
+dotted (``engine.completed``, ``engine.decode_dispatch_wall_s``,
+``faults.alloc``, ``probe.e_k.layer3``); the Prometheus exposition
+sanitizes them to underscore form.
+
+Histograms keep a **bounded reservoir** (deterministic seeded sampling, cap
+:data:`RESERVOIR_CAP`): under the cap they hold every sample exactly, so
+percentiles and ``min``/``max``/``sum`` match an unbounded list bit-for-bit
+(existing callers iterate them like the plain lists they replace); past the
+cap memory stays bounded while ``count``/``total``/``min``/``max`` remain
+exact and percentiles become reservoir estimates.
+
+:class:`QuantProbe` is the serve-time mirror of the offline sensitivity
+table (``repro.core.sensitivity.layer_errors``): every N host syncs it
+dequantizes a small random sample of live pool blocks per layer and reports
+per-layer e_k/e_v — the relative error (``repro.core.quant.relative_error``)
+of re-quantizing that live KV data at a fixed *reference* precision
+(``probe_bits``). The dequantized blocks stand in for the layer's true KV
+distribution, so the probe orders layers by sensitivity the same way the
+offline table does at the matching pair. Pick ``probe_bits`` strictly below
+the stored schedule bits: RTN asymmetric quantization round-trips
+losslessly, so probing a layer at its own stored precision reads ~0 — which
+is itself the "stored precision is exact under re-quantization" signal, not
+a sensitivity measurement.
+"""
+from __future__ import annotations
+
+import json
+import random
+import zlib
+
+import numpy as np
+
+RESERVOIR_CAP = 4096
+
+
+# ==================================================================== metrics
+class Counter:
+    """Monotonic-by-convention integer metric (``inc``); ``set`` exists so
+    the ``EngineStats`` facade can route ``stats.field += n`` through it."""
+
+    kind = "counter"
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += int(n)
+
+    def set(self, v: int) -> None:
+        self.value = int(v)
+
+
+class Gauge:
+    """Last-write-wins float metric."""
+
+    kind = "gauge"
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+
+class Histogram:
+    """Bounded-reservoir sample distribution.
+
+    ``count``/``total``/``min``/``max`` are exact for every observation
+    ever made; the reservoir holds at most ``cap`` samples (all of them
+    while ``count <= cap``, a uniform random subset after — classic
+    reservoir sampling with a deterministic per-name seed, so two runs of
+    the same workload keep identical reservoirs). Iteration and ``len()``
+    expose the reservoir, which under the cap is exactly the full sample
+    list the engine's old ad-hoc lists held.
+    """
+
+    kind = "histogram"
+
+    def __init__(self, name: str, cap: int = RESERVOIR_CAP):
+        if cap < 1:
+            raise ValueError(f"histogram cap ({cap}) must be >= 1")
+        self.name = name
+        self.cap = cap
+        self.count = 0
+        self.total = 0.0
+        self.vmin = float("inf")
+        self.vmax = float("-inf")
+        self._samples: list[float] = []
+        # per-name deterministic seed: reruns reproduce the same reservoir
+        self._rng = random.Random(zlib.crc32(name.encode()))
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        self.count += 1
+        self.total += v
+        self.vmin = min(self.vmin, v)
+        self.vmax = max(self.vmax, v)
+        if len(self._samples) < self.cap:
+            self._samples.append(v)
+        else:
+            j = self._rng.randrange(self.count)
+            if j < self.cap:
+                self._samples[j] = v
+
+    # list-compatible surface (the engine's old raw lists)
+    append = observe
+
+    def extend(self, vs) -> None:
+        for v in vs:
+            self.observe(v)
+
+    def __len__(self) -> int:
+        return len(self._samples)
+
+    def __iter__(self):
+        return iter(self._samples)
+
+    def __bool__(self) -> bool:
+        return bool(self._samples)
+
+    def percentile(self, q: float) -> float:
+        if not self._samples:
+            return 0.0
+        return float(np.percentile(np.asarray(self._samples), q))
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+
+class MetricsRegistry:
+    """Name → metric map with get-or-create accessors and two exporters
+    (structured JSON snapshot, Prometheus text exposition)."""
+
+    def __init__(self):
+        self._metrics: dict = {}
+
+    def _get(self, name: str, cls, **kw):
+        m = self._metrics.get(name)
+        if m is None:
+            m = self._metrics[name] = cls(name, **kw)
+        elif not isinstance(m, cls):
+            raise TypeError(
+                f"metric {name!r} already registered as {m.kind}, "
+                f"requested {cls.kind}")
+        return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str, cap: int = RESERVOIR_CAP) -> Histogram:
+        return self._get(name, Histogram, cap=cap)
+
+    def names(self) -> list[str]:
+        return sorted(self._metrics)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._metrics
+
+    # ------------------------------------------------------------ exporters
+    def snapshot(self) -> dict:
+        """Structured-JSON view: every metric with its kind and values
+        (histograms as summary stats + p50/p95, never raw reservoirs)."""
+        out: dict = {}
+        for name in self.names():
+            m = self._metrics[name]
+            if m.kind == "histogram":
+                out[name] = {
+                    "kind": "histogram", "count": m.count, "total": m.total,
+                    "min": m.vmin if m.count else 0.0,
+                    "max": m.vmax if m.count else 0.0, "mean": m.mean,
+                    "p50": m.percentile(50), "p95": m.percentile(95),
+                }
+            else:
+                out[name] = {"kind": m.kind, "value": m.value}
+        return out
+
+    def to_json(self, indent: int | None = None) -> str:
+        return json.dumps(self.snapshot(), indent=indent, sort_keys=True)
+
+    @staticmethod
+    def _prom_name(name: str) -> str:
+        return "".join(c if c.isalnum() or c == "_" else "_" for c in name)
+
+    def to_prometheus(self) -> str:
+        """Prometheus text exposition (one TYPE line + value lines per
+        metric; histograms export _count/_sum plus p50/p95 quantile
+        gauges — summary-style, reservoir-estimated)."""
+        lines: list[str] = []
+        for name in self.names():
+            m = self._metrics[name]
+            p = self._prom_name(name)
+            if m.kind == "counter":
+                lines += [f"# TYPE {p} counter", f"{p} {m.value}"]
+            elif m.kind == "gauge":
+                lines += [f"# TYPE {p} gauge", f"{p} {m.value}"]
+            else:
+                lines += [
+                    f"# TYPE {p} summary",
+                    f'{p}{{quantile="0.5"}} {m.percentile(50)}',
+                    f'{p}{{quantile="0.95"}} {m.percentile(95)}',
+                    f"{p}_sum {m.total}", f"{p}_count {m.count}",
+                ]
+        return "\n".join(lines) + "\n"
+
+
+# ================================================================ quant probe
+class QuantProbe:
+    """Online per-layer e_k/e_v probe over live pool blocks (see module
+    docstring for the reference-precision semantics).
+
+    ``every`` — probe once per that many host syncs (serve-loop
+    iterations); ``sample_blocks`` — max fully-written live blocks sampled
+    per probe (the same block ids are read from every layer's pool, like a
+    page-table row); ``bits`` — the (k_bits, v_bits) reference pair errors
+    are measured at. Sampling is seeded and the probe only *reads* device
+    state, so a probed run is token-identical to an unprobed one.
+    """
+
+    def __init__(self, every: int = 8, sample_blocks: int = 4,
+                 bits: tuple = (2, 2), seed: int = 0):
+        if every < 1:
+            raise ValueError(f"probe every ({every}) must be >= 1")
+        if sample_blocks < 1:
+            raise ValueError(
+                f"probe sample_blocks ({sample_blocks}) must be >= 1")
+        self.every = every
+        self.sample_blocks = sample_blocks
+        self.k_bits, self.v_bits = bits
+        self.rng = np.random.default_rng(seed)
+        self.syncs = 0
+        self.skipped = 0         # probes with no fully-written live block
+        self.history: list[dict] = []
+
+    # ------------------------------------------------------------- hooks
+    def on_sync(self, engine) -> None:
+        """Called by the engine once per host sync; probes every Nth."""
+        self.syncs += 1
+        if self.syncs % self.every == 0:
+            self.probe(engine)
+
+    def _candidate_blocks(self, engine) -> list[int]:
+        """Fully-written live blocks: each slot-resident request's first
+        ``cached_len // R`` pages hold complete quantized groups (the tail
+        group lives in the full-precision residual window)."""
+        cands: set[int] = set()
+        for slot, req in enumerate(engine._slots):
+            if req is None or slot in engine._reserved:
+                continue
+            n_full = (len(req.prompt) + len(req.output) - 1) \
+                // engine.group_size
+            cands.update(engine._slot_pages[slot][:n_full])
+        return sorted(cands)
+
+    def probe(self, engine) -> dict | None:
+        """Sample blocks, dequantize, re-quantize at the reference pair,
+        record per-layer e_k/e_v (and mirror them into registry gauges)."""
+        from repro.core import quant
+
+        cands = self._candidate_blocks(engine)
+        if not cands:
+            self.skipped += 1
+            return None
+        if len(cands) > self.sample_blocks:
+            cands = sorted(self.rng.choice(
+                cands, self.sample_blocks, replace=False).tolist())
+        idx = np.asarray(cands, np.int32)
+        rec: dict = {"sync": self.syncs, "blocks": list(map(int, cands)),
+                     "layers": [], "e_k": [], "e_v": []}
+        reg = engine.stats.registry
+        for li, pool in enumerate(engine.state.pools):
+            if pool is None:
+                continue
+            c = pool.codec
+            e_k = self._side_error(quant, pool.k_codes, pool.k_scale,
+                                   pool.k_zero, c.k, idx, self.k_bits)
+            e_v = self._side_error(quant, pool.v_codes, pool.v_scale,
+                                   pool.v_zero, c.v, idx, self.v_bits)
+            rec["layers"].append(li)
+            rec["e_k"].append(e_k)
+            rec["e_v"].append(e_v)
+            reg.gauge(f"probe.e_k.layer{li}").set(e_k)
+            reg.gauge(f"probe.e_v.layer{li}").set(e_v)
+        reg.counter("probe.samples").inc()
+        self.history.append(rec)
+        return rec
+
+    @staticmethod
+    def _side_error(quant, codes, scale, zero, seg, idx, bits) -> float:
+        """One side's (K or V) reference-precision error over the sampled
+        blocks: dequantize [n, Hkv, R, D], fake-quantize at ``bits`` with
+        the segment's own mode/group (token axis -2, matching the offline
+        ``layer_errors`` layout), relative error between the two."""
+        import jax.numpy as jnp
+
+        sc = scale[idx] if seg.quantized else scale
+        zr = zero[idx] if seg.quantized else zero
+        x = jnp.asarray(seg.decode(codes[idx], sc, zr, jnp.float32))
+        x_hat = quant.fake_quant(x, bits, seg.mode, seg.group_size)
+        return float(quant.relative_error(x, x_hat))
+
+    # ---------------------------------------------------------- reporting
+    def summary(self) -> dict:
+        """Per-layer mean e_k/e_v over every probe taken (the table the
+        benchmark rank-compares against the offline sensitivity table)."""
+        if not self.history:
+            return {"samples": 0, "skipped": self.skipped,
+                    "probe_bits": [self.k_bits, self.v_bits],
+                    "layers": [], "e_k": [], "e_v": []}
+        return {
+            "samples": len(self.history), "skipped": self.skipped,
+            "probe_bits": [self.k_bits, self.v_bits],
+            "layers": self.history[-1]["layers"],
+            "e_k": np.mean([h["e_k"] for h in self.history], axis=0).tolist(),
+            "e_v": np.mean([h["e_v"] for h in self.history], axis=0).tolist(),
+        }

@@ -1,0 +1,306 @@
+"""Per-request span tracing for the serving engines + Perfetto export.
+
+A :class:`Tracer` records, for every submitted request, a **root span**
+(submit → terminal status) subdivided into a contiguous sequence of
+**phase spans** — ``queued`` / ``prefill`` / ``decode`` — plus instant
+**events** (``prefix_match``, ``preempt``, ``swap_in``,
+``recompute_replay``, ``spec_commit``, ``quarantine``, ``fault.*``,
+``audit_violation``). Phases are gap-free and properly nested *by
+construction*: a phase transition closes the previous phase and opens the
+next at the same timestamp, and :meth:`Tracer.finish` closes the last
+phase at the root span's end. A second track carries **engine-level
+dispatch spans** (``decode_dispatch`` / ``spec_dispatch`` /
+``prefill_dispatch`` / ``prefill_wave``) timed around the host-synced
+device dispatches the engine already measures, plus engine-scope instant
+events — tracing adds **no** device syncs, so traced greedy outputs are
+token-identical to untraced ones.
+
+The engine holds ``tracer = None`` unless built with ``trace=True``; every
+hook site is guarded by that None check, so a tracing-off run executes no
+telemetry code at all.
+
+Exporters / validators:
+
+* :func:`to_perfetto` — Chrome trace-event JSON (``traceEvents`` with
+  ``"X"`` complete spans, ``"i"`` instants, ``"M"`` thread-name metadata;
+  microsecond timestamps relative to the trace epoch). Load in
+  https://ui.perfetto.dev or ``chrome://tracing``.
+* :func:`validate_trace` — structural gate over a live tracer: every
+  terminal request has a closed, gap-free, taxonomy-conforming span tree
+  with all events inside the root span. Raises :class:`TraceError`.
+* :func:`validate_perfetto` — schema check over exported (or re-loaded)
+  trace-event JSON. The module doubles as a CLI:
+  ``python -m repro.serving.trace <trace.json>``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+PHASES = ("queued", "prefill", "decode")
+EVENTS = ("prefix_match", "preempt", "swap_in", "recompute_replay",
+          "spec_commit", "quarantine")
+ENGINE_SPANS = ("decode_dispatch", "spec_dispatch", "prefill_dispatch",
+                "prefill_wave")
+
+
+class TraceError(AssertionError):
+    """A trace or exported trace file violates the span invariants."""
+
+
+@dataclasses.dataclass
+class Span:
+    name: str
+    t0: float
+    t1: float | None = None
+    args: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class RequestTrace:
+    uid: int
+    t_begin: float
+    t_end: float | None = None
+    status: str | None = None            # terminal RequestStatus value
+    error: str | None = None
+    phases: list = dataclasses.field(default_factory=list)
+    events: list = dataclasses.field(default_factory=list)  # (t, name, args)
+
+    @property
+    def terminal(self) -> bool:
+        return self.status is not None
+
+
+class Tracer:
+    """Collects request traces + engine-track spans/events (see module
+    docstring). All timestamps are host ``time.time()`` seconds — the same
+    clock the engine's wall-time stats use."""
+
+    def __init__(self):
+        self.epoch = time.time()
+        self.requests: dict[int, RequestTrace] = {}
+        self.engine_spans: list[Span] = []
+        self.engine_events: list = []    # (t, name, args)
+
+    # ------------------------------------------------------ request track
+    def begin(self, uid: int) -> None:
+        """Open a request's root span at submit; the ``queued`` phase
+        starts immediately."""
+        now = time.time()
+        rt = RequestTrace(uid=uid, t_begin=now)
+        rt.phases.append(Span("queued", now))
+        self.requests[uid] = rt
+
+    def phase(self, uid: int, name: str) -> None:
+        """Transition to phase ``name``: closes the current phase and opens
+        the next at one shared timestamp (gap-free by construction).
+        Re-entering the current phase is a no-op."""
+        rt = self.requests[uid]
+        cur = rt.phases[-1]
+        if cur.name == name and cur.t1 is None:
+            return
+        now = time.time()
+        cur.t1 = now
+        rt.phases.append(Span(name, now))
+
+    def event(self, uid: int, name: str, **args) -> None:
+        self.requests[uid].events.append((time.time(), name, args))
+
+    def finish(self, uid: int, status: str, error: str | None = None) -> None:
+        """Close the request's open phase and root span at its terminal
+        status (called from the engine's single ``_finish`` choke point)."""
+        rt = self.requests[uid]
+        now = time.time()
+        rt.phases[-1].t1 = now
+        rt.t_end = now
+        rt.status = status
+        rt.error = error
+
+    # ------------------------------------------------------- engine track
+    def engine_span(self, name: str, t0: float, t1: float, **args) -> None:
+        self.engine_spans.append(Span(name, t0, t1, args))
+
+    def engine_event(self, name: str, **args) -> None:
+        self.engine_events.append((time.time(), name, args))
+
+    # ---------------------------------------------------------- reporting
+    def summary(self) -> dict:
+        term = [r for r in self.requests.values() if r.terminal]
+        return {
+            "requests": len(self.requests),
+            "terminal": len(term),
+            "statuses": sorted({r.status for r in term}),
+            "phase_spans": sum(len(r.phases) for r in self.requests.values()),
+            "events": sum(len(r.events) for r in self.requests.values())
+                      + len(self.engine_events),
+            "engine_spans": len(self.engine_spans),
+        }
+
+
+# ================================================================ validation
+def validate_trace(tracer: Tracer, require_terminal: bool = True) -> dict:
+    """Gate the span invariants over a live tracer; returns
+    :meth:`Tracer.summary` or raises :class:`TraceError` listing every
+    violation. ``require_terminal`` additionally fails any request that
+    never reached a terminal status (the completeness gate after a full
+    ``run()``)."""
+    issues: list[str] = []
+    for uid, rt in sorted(tracer.requests.items()):
+        tag = f"request {uid}"
+        if not rt.terminal:
+            if require_terminal:
+                issues.append(f"{tag}: never reached a terminal status")
+            continue
+        if rt.t_end is None:
+            issues.append(f"{tag}: terminal but root span never closed")
+            continue
+        if not rt.phases:
+            issues.append(f"{tag}: no phase spans")
+            continue
+        for s in rt.phases:
+            if s.name not in PHASES:
+                issues.append(f"{tag}: unknown phase {s.name!r}")
+            if s.t1 is None:
+                issues.append(f"{tag}: phase {s.name!r} never closed")
+            elif s.t1 < s.t0:
+                issues.append(f"{tag}: phase {s.name!r} ends before start")
+        if rt.phases[0].name != "queued":
+            issues.append(f"{tag}: first phase is {rt.phases[0].name!r}, "
+                          "not 'queued'")
+        if rt.phases[0].t0 != rt.t_begin:
+            issues.append(f"{tag}: first phase starts after submit (gap)")
+        if rt.phases[-1].t1 is not None and rt.phases[-1].t1 != rt.t_end:
+            issues.append(f"{tag}: last phase does not close the root span")
+        for a, b in zip(rt.phases, rt.phases[1:]):
+            if a.t1 is not None and a.t1 != b.t0:
+                issues.append(f"{tag}: gap between phases "
+                              f"{a.name!r} and {b.name!r}")
+        for t, name, _ in rt.events:
+            if not rt.t_begin <= t <= rt.t_end:
+                issues.append(f"{tag}: event {name!r} outside root span")
+    for s in tracer.engine_spans:
+        if s.t1 is None or s.t1 < s.t0:
+            issues.append(f"engine span {s.name!r}: bad interval")
+    if issues:
+        raise TraceError("trace invariants violated:\n  "
+                         + "\n  ".join(issues))
+    return tracer.summary()
+
+
+# ==================================================================== export
+def to_perfetto(tracer: Tracer) -> dict:
+    """Chrome trace-event JSON: engine track on tid 0, one tid per request
+    (root span + phases + instant events), µs timestamps relative to the
+    trace epoch."""
+    epoch = tracer.epoch
+    ts = [r.t_begin for r in tracer.requests.values()]
+    ts += [s.t0 for s in tracer.engine_spans]
+    ts += [t for t, _, _ in tracer.engine_events]
+    if ts:
+        epoch = min(epoch, min(ts))
+
+    def us(t: float) -> float:
+        return (t - epoch) * 1e6
+
+    ev: list[dict] = [
+        {"ph": "M", "pid": 0, "tid": 0, "name": "process_name",
+         "args": {"name": "ContinuousEngine"}},
+        {"ph": "M", "pid": 0, "tid": 0, "name": "thread_name",
+         "args": {"name": "engine"}},
+    ]
+    for s in tracer.engine_spans:
+        ev.append({"ph": "X", "pid": 0, "tid": 0, "name": s.name,
+                   "ts": us(s.t0), "dur": max(s.t1 - s.t0, 0.0) * 1e6,
+                   "args": s.args})
+    for t, name, args in tracer.engine_events:
+        ev.append({"ph": "i", "pid": 0, "tid": 0, "name": name,
+                   "ts": us(t), "s": "t", "args": args})
+    for uid, rt in sorted(tracer.requests.items()):
+        tid = uid + 1
+        ev.append({"ph": "M", "pid": 0, "tid": tid, "name": "thread_name",
+                   "args": {"name": f"req {uid}"}})
+        if rt.terminal and rt.t_end is not None:
+            ev.append({"ph": "X", "pid": 0, "tid": tid,
+                       "name": f"request:{rt.status}", "ts": us(rt.t_begin),
+                       "dur": max(rt.t_end - rt.t_begin, 0.0) * 1e6,
+                       "args": {"status": rt.status, "error": rt.error}})
+        for s in rt.phases:
+            if s.t1 is None:
+                continue
+            ev.append({"ph": "X", "pid": 0, "tid": tid, "name": s.name,
+                       "ts": us(s.t0), "dur": max(s.t1 - s.t0, 0.0) * 1e6,
+                       "args": s.args})
+        for t, name, args in rt.events:
+            ev.append({"ph": "i", "pid": 0, "tid": tid, "name": name,
+                       "ts": us(t), "s": "t", "args": args})
+    return {"traceEvents": ev, "displayTimeUnit": "ms"}
+
+
+def write_perfetto(tracer: Tracer, path: str) -> dict:
+    doc = to_perfetto(tracer)
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    return doc
+
+
+def validate_perfetto(doc: dict) -> dict:
+    """Schema-check exported (or re-loaded) trace-event JSON; returns
+    per-phase-type counts or raises :class:`TraceError`."""
+    issues: list[str] = []
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        raise TraceError("not a trace-event document "
+                         "(missing 'traceEvents')")
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        raise TraceError("'traceEvents' is not a list")
+    counts = {"X": 0, "i": 0, "M": 0}
+    for i, e in enumerate(events):
+        tag = f"event {i}"
+        if not isinstance(e, dict):
+            issues.append(f"{tag}: not an object")
+            continue
+        ph = e.get("ph")
+        if ph not in counts:
+            issues.append(f"{tag}: unknown ph {ph!r}")
+            continue
+        counts[ph] += 1
+        if not isinstance(e.get("name"), str):
+            issues.append(f"{tag}: missing/non-string name")
+        for key in ("pid", "tid"):
+            if not isinstance(e.get(key), int):
+                issues.append(f"{tag}: missing/non-int {key}")
+        if ph in ("X", "i"):
+            t = e.get("ts")
+            if not isinstance(t, (int, float)) or t < 0:
+                issues.append(f"{tag}: bad ts {t!r}")
+        if ph == "X":
+            d = e.get("dur")
+            if not isinstance(d, (int, float)) or d < 0:
+                issues.append(f"{tag}: bad dur {d!r}")
+        if "args" in e and not isinstance(e["args"], dict):
+            issues.append(f"{tag}: args is not an object")
+    if issues:
+        raise TraceError("perfetto schema violated:\n  "
+                         + "\n  ".join(issues))
+    return counts
+
+
+def main(argv=None) -> None:
+    """CLI schema validation: ``python -m repro.serving.trace <file.json>``
+    exits nonzero (with the violation list) on a malformed trace."""
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="validate a Perfetto/chrome trace-event JSON file")
+    ap.add_argument("path", help="trace file to validate")
+    args = ap.parse_args(argv)
+    with open(args.path) as f:
+        doc = json.load(f)
+    counts = validate_perfetto(doc)
+    print(f"{args.path}: OK — {counts['X']} spans, {counts['i']} instants, "
+          f"{counts['M']} metadata events")
+
+
+if __name__ == "__main__":
+    main()

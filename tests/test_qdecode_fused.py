@@ -250,7 +250,10 @@ def test_horizon_stats_populated(tiny_api, tiny_params, sched):
     _, eng = _engine_outputs(tiny_api, tiny_params, sched, prompts,
                              max_new=5, decode_horizon=2)
     st = eng.stats
-    assert len(st.step_wall_times) == st.decode_steps > 0
+    # one wall sample per DISPATCH (horizon=2 → half the step count), with
+    # the fused step counts carried alongside instead of smeared samples
+    assert len(st.step_wall_times) == st.decode_dispatches > 0
+    assert st.decode_steps == 2 * st.decode_dispatches
     assert st.decode_p95_ms >= st.decode_p50_ms > 0.0
     assert st.decode_tokens_per_s > 0.0
 

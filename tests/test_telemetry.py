@@ -1,0 +1,456 @@
+"""Telemetry tests (ISSUE 10): metric primitives and the bounded-reservoir
+histogram, the ``EngineStats``-over-``MetricsRegistry`` facade, request
+trace invariants across engine features (speculation × horizon × preemption
+× mesh) and every terminal status, Perfetto export round-trips + schema
+rejection, the online quant-quality probe (finite errors, read-only token
+identity, reference-precision idempotency), fault observability, and the
+``BENCH_*.json`` record helpers.
+
+The standing invariant, asserted throughout: telemetry is *observation
+only* — traced/probed greedy outputs are token-identical to untraced runs.
+"""
+import json
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.configs.base import ModelConfig
+from repro.core.precision import KVTunerSchedule, PrecisionPair
+from repro.core.quant import MODE_PER_TOKEN
+from repro.models.registry import build_model
+from repro.serving.engine import ContinuousEngine, EngineStats, Request
+from repro.serving.faults import FaultInjector
+from repro.serving.telemetry import (Counter, Gauge, Histogram,
+                                     MetricsRegistry, QuantProbe)
+from repro.serving.trace import (ENGINE_SPANS, TraceError, Tracer,
+                                 to_perfetto, validate_perfetto,
+                                 validate_trace)
+
+jax.config.update("jax_platform_name", "cpu")
+
+R = 8
+CHUNK = 16
+
+
+@pytest.fixture(scope="module")
+def tiny_api():
+    cfg = ModelConfig(name="telemetry-tiny", family="dense", num_layers=2,
+                      d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+                      vocab_size=61, q_chunk=16, kv_group_size=R)
+    return build_model(cfg)
+
+
+@pytest.fixture(scope="module")
+def tiny_params(tiny_api):
+    return tiny_api.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def sched():
+    return KVTunerSchedule.uniform(2, PrecisionPair(8, 4),
+                                   mode=MODE_PER_TOKEN)
+
+
+def _engine(api, params, sched, **kw):
+    kw.setdefault("prefill_chunk", CHUNK)
+    kw.setdefault("prefix_cache", True)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("max_batch", 2)
+    return ContinuousEngine(api, params, sched, **kw)
+
+
+def _reqs(n=6, plen=20, max_new=8, seed=3, **kw):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i, prompt=rng.integers(0, 61, plen),
+                    max_new_tokens=max_new, arrival_step=2 * i, **kw)
+            for i in range(n)]
+
+
+def _run(engine, reqs):
+    for r in reqs:
+        engine.submit(r)
+    done = sorted(engine.run(), key=lambda r: r.uid)
+    engine.alloc.assert_consistent()
+    engine.audit()
+    return done
+
+
+def _outputs(done):
+    return [list(r.output) for r in done]
+
+
+# ==================================================== metric primitives
+class TestMetricPrimitives:
+    def test_counter_and_gauge(self):
+        c = Counter("c")
+        c.inc()
+        c.inc(4)
+        assert c.value == 5 and c.kind == "counter"
+        g = Gauge("g")
+        g.set(2.5)
+        assert g.value == 2.5 and g.kind == "gauge"
+
+    def test_histogram_exact_under_cap(self):
+        h = Histogram("h")
+        vals = list(np.random.default_rng(0).uniform(0, 9, 100))
+        h.extend(vals)
+        assert list(h) == [float(v) for v in vals]
+        assert h.count == 100 and len(h) == 100
+        assert h.total == pytest.approx(sum(vals))
+        assert h.vmin == min(vals) and h.vmax == max(vals)
+        assert h.percentile(50) == pytest.approx(np.percentile(vals, 50))
+        assert h.mean == pytest.approx(np.mean(vals))
+
+    def test_histogram_reservoir_bounded_deterministic(self):
+        a, b = Histogram("same", cap=16), Histogram("same", cap=16)
+        vals = range(1000)
+        a.extend(vals)
+        b.extend(vals)
+        # exact aggregates survive the cap; the reservoir is bounded and
+        # reproducible (per-name seeded) so two runs agree bit-for-bit
+        assert len(a) == 16 and a.count == 1000
+        assert a.total == sum(vals) and a.vmin == 0 and a.vmax == 999
+        assert list(a) == list(b)
+
+    def test_histogram_list_compat(self):
+        h = Histogram("lc")
+        assert not h and h.percentile(95) == 0.0
+        h.append(1.0)
+        assert h and len(h) == 1
+
+    def test_histogram_cap_validation(self):
+        with pytest.raises(ValueError, match="cap"):
+            Histogram("bad", cap=0)
+
+    def test_registry_get_or_create_and_kind_mismatch(self):
+        reg = MetricsRegistry()
+        assert reg.counter("x") is reg.counter("x")
+        assert "x" in reg and reg.names() == ["x"]
+        with pytest.raises(TypeError, match="already registered"):
+            reg.gauge("x")
+        with pytest.raises(TypeError, match="already registered"):
+            reg.histogram("x")
+
+    def test_snapshot_json_roundtrip(self):
+        reg = MetricsRegistry()
+        reg.counter("a.count").inc(3)
+        reg.gauge("a.gauge").set(1.5)
+        reg.histogram("a.hist").extend([1.0, 2.0, 3.0])
+        snap = json.loads(reg.to_json())
+        assert snap["a.count"] == {"kind": "counter", "value": 3}
+        assert snap["a.gauge"] == {"kind": "gauge", "value": 1.5}
+        h = snap["a.hist"]
+        assert h["count"] == 3 and h["p50"] == 2.0
+        assert "samples" not in h            # never exports raw reservoirs
+
+    def test_prometheus_exposition(self):
+        reg = MetricsRegistry()
+        reg.counter("engine.completed").inc(2)
+        reg.histogram("engine.decode_dispatch_wall_s").extend([0.1, 0.3])
+        text = reg.to_prometheus()
+        assert "# TYPE engine_completed counter\nengine_completed 2" in text
+        assert "engine_decode_dispatch_wall_s_count 2" in text
+        assert 'quantile="0.5"' in text and text.endswith("\n")
+
+
+# ================================================== EngineStats facade
+class TestEngineStatsFacade:
+    def test_counters_route_to_registry(self):
+        s = EngineStats()
+        s.completed += 3
+        s.prefix_hits += 1
+        assert s.registry.counter("engine.completed").value == 3
+        assert s.completed == 3
+        snap = s.registry.snapshot()
+        assert snap["engine.prefix_hits"]["value"] == 1
+
+    def test_record_step_wall_is_per_dispatch(self):
+        """Satellite (a): a 4-step horizon dispatch is ONE 0.4s sample with
+        its step count recorded — not four smeared 0.1s samples."""
+        s = EngineStats()
+        s.record_step_wall(0.4, steps=4)
+        assert list(s.step_wall_times) == [0.4]
+        assert s.decode_dispatches == 1
+        steps = s.registry.histogram("engine.decode_dispatch_steps")
+        assert list(steps) == [4.0]
+        assert s.decode_p50_ms == pytest.approx(400.0)
+
+    def test_histogram_fields_reject_assignment(self):
+        s = EngineStats()
+        with pytest.raises(AttributeError, match="histogram"):
+            s.step_wall_times = []
+
+    def test_unknown_attribute_raises(self):
+        with pytest.raises(AttributeError):
+            EngineStats().not_a_metric
+
+    def test_decode_tokens_per_s_uses_exact_totals(self):
+        s = EngineStats()
+        s.decode_tokens += 30
+        s.record_step_wall(0.5)
+        s.record_step_wall(1.0)
+        assert s.decode_tokens_per_s == pytest.approx(20.0)
+
+
+# ============================================ trace invariants (engine)
+@pytest.mark.parametrize("feature_kw", [
+    {},                                      # plain continuous batching
+    {"decode_horizon": 2},                   # multi-step decode dispatch
+    {"speculate_k": 2},                      # draft-verify speculation
+    {"batched_admission": True},             # chunk-wave prefill
+], ids=["plain", "horizon2", "spec2", "batched-admission"])
+def test_trace_complete_and_token_identical(tiny_api, tiny_params, sched,
+                                            feature_kw):
+    ref = _run(_engine(tiny_api, tiny_params, sched, **feature_kw), _reqs())
+    eng = _engine(tiny_api, tiny_params, sched, trace=True, **feature_kw)
+    done = _run(eng, _reqs())
+    assert _outputs(done) == _outputs(ref)
+    summary = validate_trace(eng.tracer)
+    assert summary["terminal"] == len(done) == 6
+    assert summary["statuses"] == ["done"]
+    span_names = {s.name for s in eng.tracer.engine_spans}
+    assert span_names and span_names <= set(ENGINE_SPANS)
+    if feature_kw.get("speculate_k"):
+        assert "spec_dispatch" in span_names
+        commits = [e for rt in eng.tracer.requests.values()
+                   for e in rt.events if e[1] == "spec_commit"]
+        assert commits and any(ev[2]["accepted"] > 0 for ev in commits)
+        assert all(0 <= ev[2]["accepted"] <= ev[2]["drafted"]
+                   for ev in commits)
+
+
+def _deadline_run(api, params, sched):
+    reqs = _reqs()
+    reqs[2] = Request(uid=2, prompt=reqs[2].prompt, max_new_tokens=8,
+                      arrival_step=reqs[2].arrival_step, deadline_step=6)
+    return _engine(api, params, sched, trace=True), reqs, 2, "timed_out"
+
+
+def _cancel_run(api, params, sched):
+    inj = FaultInjector(cancel_at=[(4, 1)])
+    return (_engine(api, params, sched, trace=True, faults=inj),
+            _reqs(), 1, "cancelled")
+
+
+def _shed_run(api, params, sched):
+    inj = FaultInjector(call_at=[(3, lambda e: e.drain())])
+    return (_engine(api, params, sched, trace=True, faults=inj),
+            _reqs(), None, "shed")
+
+
+def _failed_run(api, params, sched):
+    inj = FaultInjector(p_alloc_fail=1.0)
+    return (_engine(api, params, sched, trace=True, faults=inj,
+                    stall_ticks=5), _reqs(n=3), 0, "failed")
+
+
+@pytest.mark.parametrize("builder", [_deadline_run, _cancel_run, _shed_run,
+                                     _failed_run],
+                         ids=["timed_out", "cancelled", "shed", "failed"])
+def test_trace_terminal_status_matrix(tiny_api, tiny_params, sched, builder):
+    """Every terminal ending — not just DONE — closes a valid span tree
+    whose recorded status matches the request's."""
+    eng, reqs, victim, status = builder(tiny_api, tiny_params, sched)
+    done = _run(eng, reqs)
+    summary = validate_trace(eng.tracer)
+    assert summary["terminal"] == len(done)
+    assert status in summary["statuses"]
+    for r in done:
+        assert eng.tracer.requests[r.uid].status == r.status
+    if victim is not None:
+        assert eng.tracer.requests[victim].status == status
+
+
+def test_trace_preemption_host_tier(tiny_api, tiny_params, sched):
+    """Preempt → park-on-host → swap-in shows up as request events with a
+    re-queued phase, and the trace stays gap-free through the round trip."""
+    rng = np.random.default_rng(11)
+    pages = 64 // R + 1
+    eng = _engine(tiny_api, tiny_params, sched, trace=True,
+                  num_blocks=1 + 2 * pages, host_blocks=24,
+                  scheduler="priority")
+    reqs = [Request(uid=i, prompt=rng.integers(0, 61, 24), max_new_tokens=8,
+                    arrival_step=2 * i, priority=i) for i in range(5)]
+    done = _run(eng, reqs)
+    validate_trace(eng.tracer)
+    assert eng.stats.preemptions > 0 and eng.stats.resumes > 0
+    preempted = [rt for rt in eng.tracer.requests.values()
+                 if any(e[1] == "preempt" for e in rt.events)]
+    assert len(preempted) == len(done) == 5 or preempted
+    rt = preempted[0]
+    names = [e[1] for e in rt.events]
+    assert "swap_in" in names or "recompute_replay" in names
+    # a preempted request re-enters 'queued' after decoding started
+    phases = [s.name for s in rt.phases]
+    assert phases.count("queued") >= 2 and phases[-1] == "decode"
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8,
+                    reason="needs 8 host devices (tests/conftest.py)")
+def test_trace_on_mesh(tiny_params, sched):
+    """Tracing composes with the sharded pool: identical outputs and a
+    valid trace on an 8-device mesh."""
+    from repro.launch.mesh import make_test_mesh
+
+    cfg = ModelConfig(name="telemetry-mesh", family="dense", num_layers=2,
+                      d_model=64, num_heads=16, num_kv_heads=8, d_ff=128,
+                      vocab_size=61, q_chunk=16, kv_group_size=R)
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    mesh = make_test_mesh(8)
+    reqs = _reqs(n=4, max_new=6)
+    ref = _run(_engine(api, params, sched, mesh=mesh), reqs)
+    eng = _engine(api, params, sched, mesh=mesh, trace=True)
+    done = _run(eng, _reqs(n=4, max_new=6))
+    assert _outputs(done) == _outputs(ref)
+    summary = validate_trace(eng.tracer)
+    assert summary["statuses"] == ["done"]
+    assert eng.stats.n_shards == 8
+
+
+# ===================================================== tracer unit tests
+def test_tracer_unterminated_request_fails_gate():
+    t = Tracer()
+    t.begin(0)
+    with pytest.raises(TraceError, match="terminal"):
+        validate_trace(t)
+    validate_trace(t, require_terminal=False)    # mid-run view is fine
+
+
+def test_tracer_detects_phase_gap():
+    t = Tracer()
+    t.begin(0)
+    t.phase(0, "prefill")
+    t.requests[0].phases[0].t1 -= 1e-3          # tamper: open a gap
+    t.finish(0, "done")
+    with pytest.raises(TraceError, match="gap"):
+        validate_trace(t)
+
+
+def test_tracer_phase_reentry_is_noop():
+    t = Tracer()
+    t.begin(0)
+    t.phase(0, "decode")
+    t.phase(0, "decode")
+    t.finish(0, "done")
+    assert [s.name for s in t.requests[0].phases] == ["queued", "decode"]
+    validate_trace(t)
+
+
+# ======================================================= perfetto export
+def test_perfetto_roundtrip_and_counts(tiny_api, tiny_params, sched):
+    eng = _engine(tiny_api, tiny_params, sched, trace=True)
+    done = _run(eng, _reqs(n=3))
+    doc = json.loads(json.dumps(to_perfetto(eng.tracer)))
+    counts = validate_perfetto(doc)
+    assert counts["X"] > 0
+    # one engine process/thread pair + one thread-name row per request
+    assert counts["M"] == 2 + len(done)
+    names = {e["name"] for e in doc["traceEvents"] if e["ph"] == "X"}
+    assert "request:done" in names and "decode_dispatch" in names
+
+
+@pytest.mark.parametrize("corrupt", [
+    lambda d: d.pop("traceEvents"),
+    lambda d: d["traceEvents"].append({"ph": "Z", "pid": 0, "tid": 0,
+                                       "name": "bad"}),
+    lambda d: d["traceEvents"].append({"ph": "X", "pid": 0, "tid": 0,
+                                       "name": "neg", "ts": -1, "dur": 1}),
+    lambda d: d["traceEvents"].append({"ph": "i", "pid": "zero", "tid": 0,
+                                       "name": "badpid", "ts": 0}),
+], ids=["no-events", "unknown-ph", "negative-ts", "non-int-pid"])
+def test_perfetto_rejects_corrupted(corrupt):
+    t = Tracer()
+    t.begin(0)
+    t.finish(0, "done")
+    doc = to_perfetto(t)
+    corrupt(doc)
+    with pytest.raises(TraceError):
+        validate_perfetto(doc)
+
+
+# ======================================================== quant probe
+def test_probe_validation():
+    with pytest.raises(ValueError, match="every"):
+        QuantProbe(every=0)
+    with pytest.raises(ValueError, match="sample_blocks"):
+        QuantProbe(sample_blocks=0)
+
+
+def test_probe_finite_errors_and_token_identity(tiny_api, tiny_params,
+                                                sched):
+    ref = _run(_engine(tiny_api, tiny_params, sched), _reqs())
+    eng = _engine(tiny_api, tiny_params, sched, probe_every=2,
+                  probe_blocks=4, probe_bits=(2, 2))
+    done = _run(eng, _reqs())
+    assert _outputs(done) == _outputs(ref)      # probe only READS the pool
+    s = eng.probe.summary()
+    assert s["samples"] > 0 and s["layers"] == [0, 1]
+    assert np.all(np.isfinite(s["e_k"])) and np.all(np.isfinite(s["e_v"]))
+    assert all(e > 0 for e in s["e_k"])         # 2-bit probe of 8-bit keys
+    assert "probe.e_k.layer0" in eng.metrics.names()
+    assert eng.metrics.counter("probe.samples").value == s["samples"]
+
+
+def test_probe_at_stored_bits_reads_zero(tiny_api, tiny_params, sched):
+    """RTN re-quantization at the stored precision is lossless, so probing
+    at the schedule's own (8, 4) reads ~0 — the documented reason
+    ``probe_bits`` must sit strictly below the stored pair."""
+    eng = _engine(tiny_api, tiny_params, sched, probe_every=2,
+                  probe_blocks=4, probe_bits=(8, 4))
+    _run(eng, _reqs())
+    s = eng.probe.summary()
+    assert s["samples"] > 0
+    assert max(s["e_k"] + s["e_v"]) < 1e-5
+
+
+# ================================================== fault observability
+def test_fault_events_reach_metrics_and_trace(tiny_api, tiny_params, sched):
+    """Satellite (c): injected faults are observable — every fired fault
+    increments its ``faults.*`` counter and lands on the engine trace
+    track as a ``fault.*`` instant."""
+    inj = FaultInjector(cancel_at=[(4, 1)], p_alloc_fail=0.4, seed=7)
+    eng = _engine(tiny_api, tiny_params, sched, trace=True, faults=inj)
+    _run(eng, _reqs())
+    reg = eng.metrics
+    assert reg.counter("faults.cancel").value == 1
+    assert reg.counter("faults.alloc").value == inj.alloc_faults > 0
+    events = [name for _, name, _ in eng.tracer.engine_events]
+    assert events.count("fault.cancel") == 1
+    assert events.count("fault.alloc") == inj.alloc_faults
+
+
+def test_untraced_engine_has_no_tracer(tiny_api, tiny_params, sched):
+    """trace=False keeps the hook sites dead (``tracer is None``) — the
+    exact-zero-overhead contract."""
+    eng = _engine(tiny_api, tiny_params, sched)
+    assert eng.tracer is None and eng.probe is None
+    _run(eng, _reqs(n=2))
+
+
+# ===================================================== bench record files
+def test_bench_json_write_and_validate(tmp_path):
+    from benchmarks.common import validate_bench_json, write_bench_json
+
+    path = write_bench_json(
+        "unit", {"tokens_per_s": 10.0}, {"claim a": True, "claim b": True},
+        config={"tiny": True}, seed=0, out_dir=str(tmp_path))
+    rec = validate_bench_json(path)
+    assert rec["bench"] == "unit" and rec["passed"] is True
+    assert rec["result"]["tokens_per_s"] == 10.0
+
+    rec["passed"] = False                       # passed must match claims
+    with open(path, "w") as f:
+        json.dump(rec, f)
+    with pytest.raises(ValueError, match="passed"):
+        validate_bench_json(path)
+
+    with open(path, "w") as f:
+        json.dump({"bench": "unit"}, f)         # missing required keys
+    with pytest.raises(ValueError):
+        validate_bench_json(path)
